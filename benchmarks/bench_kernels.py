@@ -1,0 +1,62 @@
+"""Kernel-layer bench: correctness delta + latency of the jnp oracle path
+(the CPU production path; the Pallas path is validated in interpret mode —
+its timing on CPU measures the interpreter, not the kernel)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bcd_sweep import qp_sweep_pallas
+from repro.kernels.gram import gram_pallas
+from repro.kernels.variance import column_stats_pallas
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)  # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    A = jnp.asarray(rng.normal(size=(4096, 2048)), jnp.float32)
+    t = _timeit(jax.jit(lambda a: ref.column_stats_ref(a)), A)
+    s1, ss1 = column_stats_pallas(A[:256], interpret=True)
+    s2, ss2 = ref.column_stats_ref(A[:256])
+    d = float(jnp.max(jnp.abs(ss1 - ss2)))
+    rows.append({"name": "kernel_variance_4096x2048",
+                 "us_per_call": t * 1e6,
+                 "derived": f"bytes={A.size * 4} interp_vs_ref_maxdiff={d:.2e}"})
+
+    B = jnp.asarray(rng.normal(size=(4096, 512)), jnp.float32)
+    t = _timeit(jax.jit(lambda a: ref.gram_ref(a)), B)
+    C1 = gram_pallas(B[:512], interpret=True)
+    C2 = ref.gram_ref(B[:512])
+    d = float(jnp.max(jnp.abs(C1 - C2)))
+    rows.append({"name": "kernel_gram_4096x512",
+                 "us_per_call": t * 1e6,
+                 "derived": f"flops={2 * 4096 * 512 * 512} interp_vs_ref_maxdiff={d:.2e}"})
+
+    n = 512
+    F = rng.normal(size=(n + 8, n)).astype(np.float32)
+    Y = jnp.asarray(F.T @ F / n)
+    mask = np.ones(n); mask[3] = 0
+    Y = Y * jnp.asarray(mask)[:, None] * jnp.asarray(mask)[None, :]
+    s = jnp.asarray(rng.normal(size=n).astype(np.float32) * mask)
+    t = _timeit(jax.jit(lambda y, ss: ref.qp_sweep_ref(y, ss, jnp.float32(0.3), ss, 3, 2)), Y, s)
+    u1, _, r1 = qp_sweep_pallas(Y, s, 0.3, s, 3, sweeps=2, interpret=True)
+    u2, _, r2 = ref.qp_sweep_ref(Y, s, jnp.float32(0.3), s, 3, 2)
+    rows.append({"name": "kernel_bcd_sweep_n512",
+                 "us_per_call": t * 1e6,
+                 "derived": f"vmem_bytes={n * n * 4} interp_vs_ref_maxdiff="
+                            f"{float(jnp.max(jnp.abs(u1 - u2))):.2e}"})
+    return rows

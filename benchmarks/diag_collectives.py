@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb diagnostic: lower one unrolled probe and print the top-N
+collectives by bytes, with op metadata (which model op produced them).
+
+    PYTHONPATH=src python benchmarks/diag_collectives.py --arch deepseek-moe-16b \
+        --shape train_4k --n 2 --top 15
+"""
+import argparse
+import re
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import BYTES, SHAPE_RE, _lower_cell, _probe_cfg
+from repro.launch.mesh import make_production_mesh
+
+COLL = re.compile(
+    r"= (?P<type>[^ ]+) (?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)\((?P<args>.*?)\)"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--n", type=int, default=2)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    cfg = _probe_cfg(get_config(args.arch), args.n)
+    mesh = make_production_mesh(multi_pod=False)
+    comp = _lower_cell(cfg, SHAPES[args.shape], mesh, donate=False).compile()
+    txt = comp.as_text()
+
+    rows = []
+    for line in txt.splitlines():
+        m = COLL.search(line)
+        if not m:
+            continue
+        b = 0
+        for dt, dims in SHAPE_RE.findall(m.group("type")):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * BYTES[dt]
+        meta = ""
+        mm = re.search(r'op_name="([^"]*)"', line)
+        if mm:
+            meta = mm.group(1)[-110:]
+        rows.append((b, m.group("op"), m.group("type")[:60], meta))
+
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/device (n={args.n} probe): {total/2**30:.2f} GiB "
+          f"({len(rows)} ops)")
+    for b, op, ty, meta in rows[: args.top]:
+        print(f"  {b/2**30:8.3f} GiB  {op:18s} {ty:60s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""§Perf before/after: compare roofline terms across two dry-run JSONs.
+
+    PYTHONPATH=src python benchmarks/perf_compare.py \
+        benchmarks/dryrun_baseline.json benchmarks/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import terms
+
+
+def index(path):
+    out = {}
+    for rec in json.load(open(path)):
+        t = terms(rec)
+        if t:
+            out[(rec["arch"], rec["shape"])] = t
+    return out
+
+
+def main():
+    base = index(sys.argv[1])
+    new = index(sys.argv[2])
+    print("| cell | term | before_s | after_s | delta |")
+    print("|---|---|---|---|---|")
+    for key in sorted(new):
+        if key not in base:
+            continue
+        b, n = base[key], new[key]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            if abs(b[term] - n[term]) / max(b[term], 1e-12) > 0.02:
+                print(f"| {key[0]} x {key[1]} | {term} | {b[term]:.3e} | "
+                      f"{n[term]:.3e} | {n[term]/max(b[term],1e-30):.2f}x |")
+        rb = b.get("roofline_frac", 0)
+        rn = n.get("roofline_frac", 0)
+        if abs(rb - rn) > 0.005:
+            print(f"| {key[0]} x {key[1]} | roofline_frac | {rb:.3f} | "
+                  f"{rn:.3f} | {'+' if rn>rb else ''}{rn-rb:.3f} |")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, ".")
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline tables (from the
+dry-run JSON) are appended when benchmarks/dryrun.json exists.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_complexity, bench_convergence, bench_elimination, bench_kernels,
+        bench_topics,
+    )
+
+    suites = [
+        ("Fig1 convergence", bench_convergence.run),
+        ("Fig1 history", bench_convergence.run_sweep_history),
+        ("Fig2 elimination", bench_elimination.run),
+        ("Sec4 reduction@card5", bench_elimination.run_reduction_at_target_card),
+        ("Tables1-2 topics", bench_topics.run),
+        ("O(n^3) complexity", bench_complexity.run),
+        ("kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    for label, fn in suites:
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        except Exception as e:
+            print(f"{label},nan,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+
+    # Roofline tables (if the dry-run has produced data).
+    dj = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun.json")
+    if os.path.exists(dj) and os.path.getsize(dj) > 2:
+        try:
+            from benchmarks import roofline
+
+            rows = roofline.report(dj)
+            for t in rows:
+                print(
+                    f"roofline_{t['arch']}_{t['shape']},0.0,"
+                    f"bound={t['dominant']} compute_s={t['compute_s']:.3e} "
+                    f"memory_s={t['memory_s']:.3e} coll_s={t['collective_s']:.3e} "
+                    f"useful={t.get('useful_frac', 0):.2f} "
+                    f"roofline_frac={t.get('roofline_frac', 0):.3f}"
+                )
+        except Exception as e:
+            print(f"roofline,nan,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

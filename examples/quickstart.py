@@ -1,0 +1,35 @@
+"""Quickstart: sparse PCA on a small planted-topic corpus in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.core import SPCAConfig, fit_components
+from repro.data import make_corpus
+
+# A corpus with two planted topics buried in 10k Zipf-distributed words.
+corpus = make_corpus(
+    4000, 10_000,
+    topics={"markets": ["stock", "bond", "yield", "rate"],
+            "weather": ["storm", "rain", "wind", "flood"]},
+    seed=0,
+)
+X = corpus.dense()
+
+# Top-2 sparse principal components at target cardinality 4.  The driver
+# runs the paper's full pipeline: variance screen -> safe elimination
+# (Thm 2.1) -> reduced covariance -> block coordinate ascent (Alg 1).
+pcs = fit_components(X, 2, target_card=4, cfg=SPCAConfig(max_sweeps=8))
+
+for i, pc in enumerate(pcs):
+    words = [corpus.vocab[j] for j in pc.support]
+    print(f"PC{i + 1}: cardinality={pc.cardinality}  "
+          f"problem size after elimination={pc.reduced_n} of {corpus.n_words}  "
+          f"explained variance={pc.variance:.2f}")
+    print(f"      words: {', '.join(words)}")

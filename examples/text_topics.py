@@ -1,0 +1,59 @@
+"""Paper Section 4 end-to-end: NYTimes-scale corpus (102,660 words),
+streaming statistics, safe elimination, BCD, top-5 topics — the Table 1
+experiment with the paper's own topic words planted.
+
+    PYTHONPATH=src python examples/text_topics.py [--docs 10000]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.core import SPCAConfig, search_lambda
+from repro.data import nytimes_like
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--docs", type=int, default=10_000)
+ap.add_argument("--components", type=int, default=5)
+args = ap.parse_args()
+
+print(f"generating NYTimes-dimension corpus ({args.docs} docs x 102,660 words)")
+t0 = time.time()
+corpus = nytimes_like(n_docs=args.docs)
+print(f"  nnz={corpus.nnz}  ({time.time() - t0:.1f}s)")
+
+# Streaming pass 1: per-word variances (the Thm 2.1 screen input).
+mean, var = corpus.column_stats_exact()
+v = np.sort(var)[::-1]
+print(f"variance decay: v[0]={v[0]:.3f} v[100]={v[100]:.4f} "
+      f"v[1000]={v[1000]:.5f} v[10000]={v[10000]:.6f}")
+
+
+def build(support):
+    import jax.numpy as jnp
+
+    A = corpus.columns_dense(np.asarray(support))
+    A = A - A.mean(0, keepdims=True)
+    return jnp.asarray((A.T @ A) / corpus.n_docs)
+
+
+mask = np.ones(corpus.n_words, bool)
+cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8)
+print(f"\ntop {args.components} sparse principal components "
+      f"(target cardinality 5):")
+for c in range(args.components):
+    t0 = time.time()
+    r = search_lambda(None, 5, cfg=cfg, active_mask=mask, stats=(var, build))
+    words = [corpus.vocab[i] for i in r.support]
+    print(f"  PC{c + 1} [{time.time() - t0:5.1f}s] card={r.cardinality} "
+          f"n_hat={r.reduced_n} ({corpus.n_words // max(r.reduced_n, 1)}x "
+          f"reduction): {', '.join(words)}")
+    mask[r.support] = False
+
+print("\n(The paper reports ~20 s/component on a 2009 MacBook; the safe "
+      "elimination keeps the solve at n_hat <= ~500 of 102,660 features.)")

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production substrate (sharded step, checkpointing, resume,
+straggler watchdog), then sparse-PCA the learned embedding table.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import PipelineConfig, TokenPipeline
+from repro.models import build_model, param_count
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig, init_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+# ~100M params: 12L x 512 with a 32k vocab.
+cfg = ModelConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=4, d_ff=2048, vocab_size=32_768,
+)
+model = build_model(cfg)
+state = init_state(model, jax.random.PRNGKey(0))
+print(f"model: {param_count(state.params) / 1e6:.1f}M params")
+
+from repro.optim.schedule import warmup_cosine
+
+pipe = TokenPipeline(PipelineConfig(
+    vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq))
+step = jax.jit(make_train_step(
+    model, AdamWConfig(lr=1e-3),
+    schedule=lambda s: warmup_cosine(s, warmup=20, total=args.steps)))
+
+trainer = Trainer(
+    train_step=step, pipeline=pipe,
+    cfg=TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt_dir, log_every=20),
+)
+t0 = time.time()
+state = trainer.run(state)
+for e in trainer.events:
+    if e["kind"] == "metrics":
+        print(f"  step {e['step']:4d}  loss {e['loss']:.3f}  "
+              f"{e['step_time']:.2f}s/step")
+print(f"trained to step {int(state.step)} in {time.time() - t0:.0f}s "
+      f"(uniform baseline ln V = {np.log(cfg.vocab_size):.2f})")
+
+# --- embedding sparse PCA: which words co-vary in embedding space? -------
+from repro.core import SPCAConfig, fit_components
+
+E = np.asarray(state.params["embed"], np.float32)  # (V, d)
+# features = words, observations = embedding dims (A = E^T)
+pcs = fit_components(E.T, 2, target_card=8,
+                     cfg=SPCAConfig(max_sweeps=6, lam_search_evals=6))
+for i, pc in enumerate(pcs):
+    print(f"embedding PC{i + 1}: cardinality={pc.cardinality} "
+          f"n_hat={pc.reduced_n} of {cfg.vocab_size} "
+          f"tokens={pc.support[:8].tolist()}")
+print("(token ids co-varying most in the learned embedding — on the "
+      "synthetic random-walk stream these are neighbouring ids)")

@@ -1,0 +1,5 @@
+"""Atomic, elastic, sharded checkpointing."""
+from . import checkpoint
+from .checkpoint import latest_step, prune, restore, save
+
+__all__ = ["checkpoint", "latest_step", "prune", "restore", "save"]

@@ -1,0 +1,24 @@
+"""Core library: Zhang & El Ghaoui (NIPS 2011) sparse PCA.
+
+Public API:
+  elimination.feature_variances / safe_support / eliminate   (Thm 2.1)
+  bcd.solve_bcd / leading_sparse_component                   (Algorithm 1)
+  first_order.solve_first_order                              (the [1] baseline)
+  spca.solve_at_lambda / search_lambda / fit_components      (driver)
+  validate.duality_gap                                       (certificate)
+  distributed.distributed_variances / distributed_gram       (multi-pod stats)
+"""
+from . import baselines, bcd, distributed, elimination, first_order, spca, validate
+from .bcd import BCDResult, leading_sparse_component, solve_bcd
+from .elimination import eliminate, feature_variances, safe_support
+from .first_order import solve_first_order
+from .spca import PCResult, SPCAConfig, fit_components, search_lambda, solve_at_lambda
+from .validate import cardinality, duality_gap
+
+__all__ = [
+    "baselines", "bcd", "distributed", "elimination", "first_order", "spca",
+    "validate", "BCDResult", "leading_sparse_component", "solve_bcd",
+    "eliminate", "feature_variances", "safe_support", "solve_first_order",
+    "PCResult", "SPCAConfig", "fit_components", "search_lambda",
+    "solve_at_lambda", "cardinality", "duality_gap",
+]

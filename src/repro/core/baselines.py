@@ -1,0 +1,60 @@
+"""Reference methods the paper positions itself against.
+
+- ``pca_power``: classical leading-PC power iteration, O(n^2) (or O(nm) in
+  data form) per iteration — the "PCA" side of the paper's
+  "sparse PCA can be easier than PCA" comparison.
+- ``thresholded_pca``: the ad-hoc simple-thresholding method [4] that DSPCA
+  is shown to dominate in [1, 2, 11].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def pca_power(Sigma, *, iters: int = 200, seed: int = 0):
+    """Leading eigenvector by power iteration on an explicit covariance."""
+    n = Sigma.shape[0]
+    v = jax.random.normal(jax.random.PRNGKey(seed), (n,), Sigma.dtype)
+    v = v / jnp.linalg.norm(v)
+
+    def body(_, v):
+        w = Sigma @ v
+        return w / jnp.linalg.norm(w)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return v, v @ Sigma @ v
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def pca_power_data(A, *, iters: int = 200, seed: int = 0):
+    """Power iteration in data form: Sigma v = A^T (A v) / m — never forms
+    the n x n covariance (the paper's point that even PCA needs care at
+    n ~ 10^5)."""
+    m, n = A.shape
+    mu = jnp.mean(A, axis=0)
+    v = jax.random.normal(jax.random.PRNGKey(seed), (n,), A.dtype)
+    v = v / jnp.linalg.norm(v)
+
+    def matvec(v):
+        Av = A @ v - jnp.dot(mu, v)
+        return (A.T @ Av - mu * jnp.sum(Av)) / m
+
+    def body(_, v):
+        w = matvec(v)
+        return w / jnp.linalg.norm(w)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return v, v @ matvec(v)
+
+
+def thresholded_pca(Sigma, k: int, *, iters: int = 200):
+    """Keep the k largest-|.| entries of the leading eigenvector, renormalise."""
+    v, _ = pca_power(Sigma, iters=iters)
+    idx = jnp.argsort(-jnp.abs(v))[:k]
+    x = jnp.zeros_like(v).at[idx].set(v[idx])
+    x = x / jnp.linalg.norm(x)
+    return x, x @ Sigma @ x

@@ -1,0 +1,328 @@
+"""Block coordinate ascent for DSPCA (Algorithm 1 of Zhang & El Ghaoui, 2011).
+
+Solves the augmented problem (6)
+
+    max_X  Tr(Sigma X) - lam*||X||_1 - (Tr X)^2 / 2 + beta*logdet X,   X > 0
+
+whose solution is an eps-suboptimal solution of the DSPCA SDP (1) when
+``beta = eps/n``; the DSPCA variable is recovered as ``Z = X / Tr X``.
+
+Each row/column update solves the box-constrained QP (11)
+
+    R^2 = min_u u^T Y u   s.t.  ||u - s||_inf <= lam
+
+by coordinate descent with the closed-form update (13), then a strictly
+convex 1-D problem in tau (bisection on the monotone derivative), then writes
+
+    y = Y u / tau,     x = sigma - lam - t + tau.
+
+Complexity: O(qp_sweeps * n^2) per row, O(K n^3) overall — v.s. the
+O(n^4 sqrt(log n)) first-order method (see `first_order.py`).
+
+Implementation notes (JAX): rows are never physically deleted — ``Y`` is the
+full matrix with row/column ``j`` masked to zero, and ``u`` is a full n-vector
+with ``u_j`` pinned to 0, so every shape is static and the whole solver jits.
+The coordinate loop carries ``w = Y @ u`` and refreshes it incrementally
+(O(n) per coordinate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BCDResult(NamedTuple):
+    X: jax.Array          # solution of the augmented problem (6)
+    Z: jax.Array          # X / Tr X — feasible for DSPCA (1)
+    obj: jax.Array        # augmented objective value at X
+    phi: jax.Array        # primal DSPCA value Tr(Sigma Z) - lam ||Z||_1
+    history: jax.Array    # (max_sweeps,) augmented objective after each sweep (nan-padded)
+    sweeps: jax.Array     # number of sweeps actually executed
+    beta: float = 0.0     # logdet barrier weight actually used (for kkt_gap)
+
+
+def augmented_objective(X, Sigma, lam, beta):
+    """Objective of problem (6)."""
+    sign, logdet = jnp.linalg.slogdet(X)
+    logdet = jnp.where(sign > 0, logdet, -jnp.inf)
+    return (
+        jnp.sum(Sigma * X)
+        - lam * jnp.sum(jnp.abs(X))
+        - 0.5 * jnp.trace(X) ** 2
+        + beta * logdet
+    )
+
+
+def primal_value(Z, Sigma, lam):
+    """DSPCA primal objective phi(Z) = Tr(Sigma Z) - lam ||Z||_1."""
+    return jnp.sum(Sigma * Z) - lam * jnp.sum(jnp.abs(Z))
+
+
+def _coordinate_step(i, carry, Y, s, lam, j):
+    """One coordinate update of the box QP — closed form (13)."""
+    u, w = carry
+    y1 = Y[i, i]
+    ui = u[i]
+    g = w[i] - y1 * ui            # \hat y^T \hat u : the off-diagonal inner product
+    lo = s[i] - lam
+    hi = s[i] + lam
+    # y1 > 0: unconstrained minimiser -g/y1 clipped to the box.
+    eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+    # y1 == 0: objective is linear (2*g*eta): go to the box edge.
+    eta_zero = jnp.where(g > 0, lo, hi)
+    eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+    eta = jnp.where(i == j, ui, eta)      # coordinate j is not a variable
+    w = w + Y[:, i] * (eta - ui)
+    u = u.at[i].set(eta)
+    return u, w
+
+
+def qp_coordinate_descent(Y, s, lam, u0, j, sweeps: int):
+    """Solve (11) ``min u^T Y u : ||u - s||_inf <= lam`` with ``u_j = 0``.
+
+    ``Y`` must have row/column ``j`` zeroed.  Returns (u, w=Y@u, R2=u^T Y u).
+    """
+    n = Y.shape[0]
+    w0 = Y @ u0
+
+    def body(_, carry):
+        return jax.lax.fori_loop(
+            0, n, functools.partial(_coordinate_step, Y=Y, s=s, lam=lam, j=j), carry
+        )
+
+    u, w = jax.lax.fori_loop(0, sweeps, body, (u0, w0))
+    return u, w, jnp.dot(u, w)
+
+
+def solve_tau(R2, c, beta, iters: int = 80):
+    """min_{tau>0} R2/tau - beta*log(tau) + (c + tau)^2 / 2.
+
+    The derivative g(tau) = tau + c - R2/tau^2 - beta/tau is strictly
+    increasing (g' = 1 + 2 R2/tau^3 + beta/tau^2 > 0), so bisection on the
+    sign of g converges linearly and is branch-free for XLA.
+    """
+    hi = jnp.maximum(1.0, -c) + jnp.sqrt(jnp.maximum(R2, 0.0)) + beta + 1.0
+    lo = jnp.minimum(beta / (beta + jnp.maximum(-c, 0.0) + 1.0), hi) * 1e-12
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        g = mid + c - R2 / (mid * mid) - beta / mid
+        lo = jnp.where(g < 0, mid, lo)
+        hi = jnp.where(g < 0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def row_update(
+    X, Sigma, lam, beta, j, qp_sweeps: int, tau_iters: int = 80,
+    qp_impl: str = "jnp",
+):
+    """Update row/column ``j`` of ``X`` (steps 4–6 of Algorithm 1)."""
+    n = X.shape[0]
+    ej = jax.nn.one_hot(j, n, dtype=X.dtype)
+    mask = 1.0 - ej
+    # Y = X_{\j\j} embedded in the full matrix (row/col j zeroed).
+    Y = X * mask[:, None] * mask[None, :]
+    s = Sigma[:, j] * mask                      # Sigma_j without the diagonal entry
+    sigma = Sigma[j, j]
+    t = jnp.trace(Y)
+    c = sigma - lam - t
+
+    u0 = s                                       # box centre — always feasible
+    if qp_impl == "pallas":
+        from repro.kernels.bcd_sweep import qp_sweep_pallas
+
+        u, w, R2 = qp_sweep_pallas(
+            Y, s, lam, u0, j, sweeps=qp_sweeps,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        u, w, R2 = qp_coordinate_descent(Y, s, lam, u0, j, qp_sweeps)
+    tau = solve_tau(R2, c, beta, tau_iters)
+
+    y = w / tau                                  # y = Y u / tau  (zero at j)
+    x = c + tau                                  # x = sigma - lam - t + tau
+    # Write back: row/col j <- y, diagonal <- x.
+    X = X * mask[:, None] * mask[None, :]
+    X = X + y[:, None] * ej[None, :] + y[None, :] * ej[:, None]
+    X = X + x * ej[:, None] * ej[None, :]
+    return X
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_sweeps", "qp_sweeps", "tau_iters", "qp_impl")
+)
+def _solve_bcd_jit(
+    Sigma, lam, beta, X0, max_sweeps, qp_sweeps, tol, tau_iters, qp_impl="jnp"
+):
+    n = Sigma.shape[0]
+
+    def sweep(X):
+        return jax.lax.fori_loop(
+            0,
+            n,
+            lambda j, X: row_update(
+                X, Sigma, lam, beta, j, qp_sweeps, tau_iters, qp_impl
+            ),
+            X,
+        )
+
+    def cond(state):
+        _, prev, obj, k, done = state
+        return (~done) & (k < max_sweeps)
+
+    def body(state):
+        X, prev, _, k, _ = state
+        X = sweep(X)
+        obj = augmented_objective(X, Sigma, lam, beta)
+        done = jnp.abs(obj - prev) <= tol * (1.0 + jnp.abs(obj))
+        return X, obj, obj, k + 1, done
+
+    minus_inf = jnp.array(-jnp.inf, Sigma.dtype)
+    X, obj, _, k, _ = jax.lax.while_loop(
+        cond, body, (X0, minus_inf, minus_inf, jnp.array(0), jnp.array(False))
+    )
+
+    trX = jnp.trace(X)
+    Z = X / trX
+    return BCDResult(
+        X=X,
+        Z=Z,
+        obj=obj,
+        phi=primal_value(Z, Sigma, lam),
+        history=jnp.zeros((0,)),
+        sweeps=k,
+    )
+
+
+def solve_bcd(
+    Sigma,
+    lam: float,
+    *,
+    beta: float | None = None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tol: float = 1e-7,
+    tau_iters: int = 80,
+    X0=None,
+    qp_impl: str = "jnp",
+) -> BCDResult:
+    """Solve DSPCA (1) by block coordinate ascent on the augmented problem (6).
+
+    Args:
+      Sigma: (n, n) PSD covariance (typically the *reduced* covariance after
+        safe feature elimination — Thm 2.1 lets us assume lam < min_i Sigma_ii).
+      lam: sparsity penalty, must satisfy lam >= 0.
+      beta: logdet barrier weight; ``eps/n``-style default scaled to the data.
+      max_sweeps: K in the paper (they report K~5 in practice).
+      qp_sweeps: inner coordinate-descent sweeps for (11).
+    """
+    Sigma = jnp.asarray(Sigma)
+    n = Sigma.shape[0]
+    if beta is None:
+        beta = 1e-4 * float(jnp.trace(Sigma)) / n
+    if X0 is None:
+        X0 = jnp.eye(n, dtype=Sigma.dtype)
+    lam = jnp.asarray(lam, Sigma.dtype)
+    beta_ = jnp.asarray(beta, Sigma.dtype)
+    res = _solve_bcd_jit(
+        Sigma, lam, beta_, X0, max_sweeps, qp_sweeps, jnp.asarray(tol, Sigma.dtype),
+        tau_iters, qp_impl,
+    )
+    return res._replace(beta=float(beta))
+
+
+def solve_bcd_with_history(
+    Sigma,
+    lam: float,
+    *,
+    beta: float | None = None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tau_iters: int = 80,
+) -> BCDResult:
+    """Like ``solve_bcd`` but records the augmented objective after every sweep
+    (used by the Fig-1 convergence benchmark; runs sweeps eagerly)."""
+    Sigma = jnp.asarray(Sigma)
+    n = Sigma.shape[0]
+    if beta is None:
+        beta = 1e-4 * float(jnp.trace(Sigma)) / n
+    lam_ = jnp.asarray(lam, Sigma.dtype)
+    beta_ = jnp.asarray(beta, Sigma.dtype)
+    X = jnp.eye(n, dtype=Sigma.dtype)
+
+    @jax.jit
+    def one_sweep(X):
+        return jax.lax.fori_loop(
+            0,
+            n,
+            lambda j, X: row_update(X, Sigma, lam_, beta_, j, qp_sweeps, tau_iters),
+            X,
+        )
+
+    hist = []
+    for _ in range(max_sweeps):
+        X = one_sweep(X)
+        hist.append(float(augmented_objective(X, Sigma, lam_, beta_)))
+    trX = jnp.trace(X)
+    Z = X / trX
+    return BCDResult(
+        X=X,
+        Z=Z,
+        obj=jnp.asarray(hist[-1]),
+        phi=primal_value(Z, Sigma, lam_),
+        history=jnp.asarray(hist),
+        sweeps=jnp.asarray(max_sweeps),
+        beta=float(beta),
+    )
+
+
+def solve_bcd_grid(
+    Sigma,
+    lams,
+    *,
+    beta: float | None = None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tol: float = 1e-7,
+) -> BCDResult:
+    """vmap the solver over a lambda grid — the outer-level parallelism the
+    paper's laptop could not exploit (DESIGN.md §5): on a TPU pod each
+    lambda's reduced problem runs on its own VMEM-resident solve.  Returns a
+    batched BCDResult (leading axis = lambda)."""
+    Sigma = jnp.asarray(Sigma)
+    n = Sigma.shape[0]
+    if beta is None:
+        beta = 1e-4 * float(jnp.trace(Sigma)) / n
+    lams = jnp.asarray(lams, Sigma.dtype)
+    X0 = jnp.eye(n, dtype=Sigma.dtype)
+
+    def one(lam):
+        return _solve_bcd_jit(
+            Sigma, lam, jnp.asarray(beta, Sigma.dtype), X0, max_sweeps,
+            qp_sweeps, jnp.asarray(tol, Sigma.dtype), 80,
+        )
+
+    res = jax.vmap(one)(lams)
+    return res._replace(beta=float(beta))
+
+
+def leading_sparse_component(Z, *, rel_tol: float = 1e-2):
+    """Extract the sparse PC from the DSPCA solution: the leading eigenvector
+    of Z, with entries below ``rel_tol * max|x|`` zeroed (the SDP relaxation
+    returns numerically-tiny off-support values, not exact zeros)."""
+    w, V = jnp.linalg.eigh(Z)
+    x = V[:, -1]
+    thresh = rel_tol * jnp.max(jnp.abs(x))
+    x = jnp.where(jnp.abs(x) > thresh, x, 0.0)
+    norm = jnp.linalg.norm(x)
+    x = x / jnp.where(norm > 0, norm, 1.0)
+    # Deterministic sign: largest-|entry| positive.
+    imax = jnp.argmax(jnp.abs(x))
+    return x * jnp.sign(x[imax])

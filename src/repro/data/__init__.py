@@ -1,0 +1,12 @@
+"""Data substrate: synthetic corpora, streaming BOW statistics, LM pipeline."""
+from . import bow, corpus, pipeline
+from .bow import StreamingGram, StreamingStats, screen_and_gram_streaming
+from .corpus import Corpus, make_corpus, nytimes_like, pubmed_like, zipf_rates
+from .pipeline import PipelineConfig, TokenPipeline, host_slice, prefetch
+
+__all__ = [
+    "bow", "corpus", "pipeline", "StreamingGram", "StreamingStats",
+    "screen_and_gram_streaming", "Corpus", "make_corpus", "nytimes_like",
+    "pubmed_like", "zipf_rates", "PipelineConfig", "TokenPipeline",
+    "host_slice", "prefetch",
+]

@@ -1,0 +1,112 @@
+"""Streaming bag-of-words statistics.
+
+The corpora the paper targets don't fit in memory ("These data matrices are
+so large that we cannot even load them into memory all at once"), so both
+pipeline legs are streaming, single-pass, batch-at-a-time:
+
+  StreamingStats  — per-word sum/sumsq for the Thm 2.1 variance screen
+  StreamingGram   — A_S^T A_S on the post-elimination support
+
+Both consume dense row blocks (what `Corpus.batches` yields and what a real
+loader would produce per host) and route the per-batch reduction through the
+Pallas kernels (`repro.kernels.ops`), falling back to the jnp oracle on CPU.
+Both accumulators are trivially mergeable across hosts/pods — a single psum
+at finalise time (see core.distributed).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elimination import Screen
+from repro.kernels import ops
+
+
+class StreamingStats:
+    """One-pass per-column mean/variance accumulator."""
+
+    def __init__(self, n_features: int, *, impl: str = "auto"):
+        self.n = n_features
+        self.impl = impl
+        self.sum = np.zeros(n_features, np.float64)
+        self.sumsq = np.zeros(n_features, np.float64)
+        self.count = 0
+
+    def update(self, batch) -> "StreamingStats":
+        s, ss = ops.column_stats(jnp.asarray(batch), impl=self.impl)
+        self.sum += np.asarray(s, np.float64)
+        self.sumsq += np.asarray(ss, np.float64)
+        self.count += batch.shape[0]
+        return self
+
+    def merge(self, other: "StreamingStats") -> "StreamingStats":
+        assert self.n == other.n
+        self.sum += other.sum
+        self.sumsq += other.sumsq
+        self.count += other.count
+        return self
+
+    def finalize(self, *, center: bool = True) -> Screen:
+        m = max(self.count, 1)
+        mean = self.sum / m if center else np.zeros(self.n)
+        var = np.maximum(self.sumsq / m - mean**2, 0.0)
+        return Screen(
+            variances=jnp.asarray(var),
+            means=jnp.asarray(mean),
+            count=jnp.asarray(m),
+        )
+
+
+class StreamingGram:
+    """One-pass reduced gram accumulator over the surviving columns."""
+
+    def __init__(self, support: np.ndarray, *, impl: str = "auto"):
+        self.support = np.asarray(support)
+        k = self.support.size
+        self.g = np.zeros((k, k), np.float64)
+        self.count = 0
+        self.impl = impl
+
+    def update(self, batch) -> "StreamingGram":
+        cols = jnp.asarray(batch)[:, self.support]
+        self.g += np.asarray(ops.gram(cols, impl=self.impl), np.float64)
+        self.count += batch.shape[0]
+        return self
+
+    def merge(self, other: "StreamingGram") -> "StreamingGram":
+        self.g += other.g
+        self.count += other.count
+        return self
+
+    def finalize(self, *, means: np.ndarray | None = None) -> np.ndarray:
+        m = max(self.count, 1)
+        g = self.g.copy()
+        if means is not None:
+            mu = np.asarray(means)[self.support]
+            g -= m * np.outer(mu, mu)
+        return g / m
+
+
+def screen_and_gram_streaming(batches, n_features: int, lam: float,
+                              *, center: bool = True, impl: str = "auto",
+                              max_reduced: int = 2048):
+    """Two-pass pipeline over a re-iterable batch source.
+
+    Pass 1: variance screen; pass 2: reduced gram.  Returns
+    (Sigma_hat, support, screen)."""
+    stats = StreamingStats(n_features, impl=impl)
+    for b in batches():
+        stats.update(b)
+    screen = stats.finalize(center=center)
+    v = np.asarray(screen.variances)
+    support = np.flatnonzero(v >= lam)
+    if support.size == 0:
+        support = np.array([int(np.argmax(v))])
+    if support.size > max_reduced:
+        order = np.argsort(v[support])[::-1]
+        support = np.sort(support[order[:max_reduced]])
+    gram = StreamingGram(support, impl=impl)
+    for b in batches():
+        gram.update(b)
+    Sigma_hat = gram.finalize(means=np.asarray(screen.means) if center else None)
+    return Sigma_hat, support, screen

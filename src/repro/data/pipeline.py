@@ -1,0 +1,90 @@
+"""LM token pipeline: deterministic, seekable, shard-aware.
+
+Fault-tolerance contract: batch ``t`` is a pure function of ``(seed, t)`` —
+restoring a checkpoint at step ``t`` resumes the *exact* data stream with no
+replay buffer or loader state.  On a real cluster each host materialises
+only its addressable rows (``host_slice``); here (single host) that's the
+whole batch.
+
+The synthetic stream is not uniform noise: tokens follow a per-sequence
+random walk over the vocabulary with occasional resets, giving the LM a
+learnable short-range structure (loss drops well below ln(V) within a few
+hundred steps — used by examples/train_lm.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    vocab_size: int
+    batch: int          # global batch (sequences)
+    seq_len: int
+    seed: int = 0
+    walk_step: int = 7  # random-walk stride in token space
+
+
+class TokenPipeline:
+    """Stateless synthetic LM data: ``batch_at(t)`` is pure in (seed, t)."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int, *, host_lo: int = 0, host_hi: int | None = None):
+        cfg = self.cfg
+        hi = cfg.batch if host_hi is None else host_hi
+        n = hi - host_lo
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, host_lo])
+        )
+        start = rng.integers(0, cfg.vocab_size, size=(n, 1))
+        steps = rng.integers(-cfg.walk_step, cfg.walk_step + 1, size=(n, cfg.seq_len))
+        reset = rng.random((n, cfg.seq_len)) < 0.02
+        jump = rng.integers(0, cfg.vocab_size, size=(n, cfg.seq_len))
+        walk = np.cumsum(steps, axis=1) + start
+        toks = np.where(reset, jump, walk) % cfg.vocab_size
+        return toks.astype(np.int32)
+
+    def __iter__(self):
+        t = 0
+        while True:
+            yield self.batch_at(t)
+            t += 1
+
+
+def prefetch(it, size: int = 2):
+    """Background-thread prefetch — overlaps host data generation with device
+    compute (the CPU-side analogue of the device prefetch a real input
+    pipeline would use)."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    _END = object()
+
+    def worker():
+        try:
+            for x in it:
+                q.put(x)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        x = q.get()
+        if x is _END:
+            return
+        yield x
+
+
+def host_slice(global_batch: int, *, process_index: int | None = None,
+               process_count: int | None = None) -> tuple[int, int]:
+    """Row range of the global batch this host should materialise."""
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    per = global_batch // pc
+    return pi * per, (pi + 1) * per

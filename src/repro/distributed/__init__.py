@@ -1,0 +1,8 @@
+"""Distribution substrate: logical-axis sharding rules + mesh context."""
+from . import sharding
+from .sharding import (
+    constrain, param_pspecs, param_shardings, resolve, use_mesh,
+)
+
+__all__ = ["sharding", "constrain", "param_pspecs", "param_shardings",
+           "resolve", "use_mesh"]

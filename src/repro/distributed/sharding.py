@@ -1,0 +1,181 @@
+"""Logical-axis sharding: one place that decides how every tensor shards.
+
+Physical mesh axes:  ('pod', 'data', 'model')  — see launch/mesh.py.
+Logical axes used by the model code:
+
+  batch   -> ('pod', 'data')   activations' batch dim (DP across pods too)
+  fsdp    -> 'data'            parameter rows (ZeRO-3-style weight sharding)
+  model   -> 'model'           TP: heads / FFN hidden / vocab / experts
+  expert  -> 'model'           EP shares the TP axis (MoE archs)
+  seq     -> None              sequence stays unsharded (no SP by default;
+                               the hillclimb explores alternatives)
+
+The model code never names physical axes: it calls ``logical(...)`` /
+``constrain(x, ...)`` with logical names, and the active `MeshContext`
+resolves them.  Off-mesh (plain CPU tests) everything degrades to no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_TO_PHYSICAL: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "model": "model",
+    "expert": "model",
+    "seq": None,
+    "seq_kv": None,      # KV-cache seq dim; long_500k remaps it to 'data'
+    "ctx": "model",      # context parallelism: q-seq over 'model' when
+                         # kv-heads don't divide the tensor axis
+    None: None,
+}
+
+_ctx = threading.local()
+
+
+def _current_mesh() -> Mesh | None:
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    """Activate a mesh for logical-axis resolution (and as the jit mesh)."""
+    prev = getattr(_ctx, "mesh", None)
+    _ctx.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _ctx.mesh = prev
+
+
+def axis_size(name: str) -> int:
+    """Size of a *logical* axis on the active mesh (1 off-mesh)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return 1
+    phys = LOGICAL_TO_PHYSICAL.get(name, None)
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            if a in mesh.axis_names:
+                n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys] if phys in mesh.axis_names else 1
+
+
+def resolve(*logical_names, shape=None) -> P:
+    """Logical names -> PartitionSpec against the active mesh's axes.
+
+    With ``shape`` given, axes that don't divide the dim are dropped
+    (divisibility guard — e.g. 2 kv heads never shard over a 16-way axis)."""
+    mesh = _current_mesh()
+    parts = []
+    for i, name in enumerate(logical_names):
+        phys = LOGICAL_TO_PHYSICAL.get(name, None)
+        if phys is None or mesh is None:
+            parts.append(None)
+            continue
+        if isinstance(phys, tuple):
+            phys = tuple(a for a in phys if a in mesh.axis_names)
+            if not phys:
+                parts.append(None)
+                continue
+        elif phys not in mesh.axis_names:
+            parts.append(None)
+            continue
+        if shape is not None:
+            n = 1
+            for a in (phys if isinstance(phys, tuple) else (phys,)):
+                n *= mesh.shape[a]
+            if n == 0 or shape[i] % n:
+                parts.append(None)
+                continue
+        parts.append(phys)
+    return P(*parts)
+
+
+def constrain(x, *logical_names):
+    """with_sharding_constraint by logical names; no-op off-mesh; axes that
+    don't divide the corresponding dim are silently dropped."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(*logical_names, shape=x.shape))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: leaf path regex -> logical axes (one per dim,
+# matched from the TRAILING dims so stacked layers get leading None).
+# First match wins.
+# ---------------------------------------------------------------------------
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",            ("model", "fsdp")),     # (V, d) big vocab tables
+    (r"lm_head$",          ("fsdp", "model")),     # (d, V)
+    (r"(wq|wk|wv)$",       ("fsdp", "model")),     # (d, heads*hd)
+    (r"(bq|bk|bv)$",       ("model",)),            # qkv bias (qwen2)
+    (r"wo$",               ("model", "fsdp")),     # (heads*hd, d)
+    (r"experts/.*wi.*$",   ("expert", "fsdp", None)),  # (E, d, f)
+    (r"experts/.*wo$",     ("expert", None, "fsdp")),  # (E, f, d)
+    (r"router$",           ("fsdp", None)),        # (d, E)
+    (r"(wi_gate|wi_up)$",  ("fsdp", "model")),     # (d, f)
+    (r"mlp.*wo$",          ("model", "fsdp")),
+    (r"in_proj$",          ("fsdp", "model")),     # mamba (d, inner-stuff)
+    (r"out_proj$",         ("model", "fsdp")),     # mamba (inner, d)
+    (r"conv$",             (None, "model")),       # (w, conv_dim)
+    (r"(A_log|ssm_D|dt_bias)$", ("model",)),       # per-head ssm params
+    (r"ssm_norm$",         ("model",)),            # (d_inner,)
+    (r"pos_embed$",        (None, "fsdp")),        # (S, d) whisper encoder
+    (r"(norm|ln\w*|scale)$", (None,)),             # rmsnorm scales
+]
+
+
+def logical_axes_for_path(path: str, ndim: int) -> tuple:
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            pad = (None,) * (ndim - len(axes))
+            return pad + tuple(axes)[-ndim:] if ndim < len(axes) else pad + axes
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_pspecs(params_shape) -> Any:
+    """Pytree of PartitionSpec matching a params pytree (of arrays or
+    ShapeDtypeStructs), derived from PARAM_RULES + the active mesh."""
+    def leaf_spec(path, leaf):
+        axes = logical_axes_for_path(_path_str(path), leaf.ndim)
+        return resolve(*axes, shape=leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    with use_mesh(mesh):
+        specs = param_pspecs(params_shape)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

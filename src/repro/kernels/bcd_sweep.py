@@ -1,0 +1,109 @@
+r"""Pallas TPU kernel: VMEM-resident box-QP coordinate descent (eq. 11+13).
+
+This is the TPU adaptation of the paper's core solver loop.  After safe
+feature elimination the reduced matrix Y (n_hat <= ~1024) occupies at most
+4 MB in f32 — it fits a v5e core's ~16 MB VMEM whole.  The kernel keeps Y
+resident and runs `sweeps` full coordinate-descent passes entirely on-chip:
+the inner recursion
+
+    g    = w[i] - Y[i,i] * u[i]                (the paper's  \hat y^T \hat u)
+    eta  = closed form (13)
+    w   += Y[:, i] * (eta - u[i])              (rank-1 refresh of w = Y u)
+
+touches only VMEM.  On a GPU (the 2011 hardware frame) this loop is
+memory-latency bound; here every Y column load is a VMEM->VREG move.
+
+The coordinate loop is inherently sequential (each eta depends on the w
+produced by the previous coordinate) so there is no grid parallelism —
+parallelism lives one level up (vmapped lambda-grid / deflation solves,
+see core.spca).  Single-block kernel, shapes padded to (8,128) lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qp_kernel(y_ref, s_ref, u0_ref, scal_ref, u_ref, w_ref, r2_ref, *, n_pad, sweeps):
+    Y = y_ref[...]
+    s = s_ref[0, :]
+    lam = scal_ref[0, 0]
+    j = scal_ref[0, 1].astype(jnp.int32)
+    n_valid = scal_ref[0, 2].astype(jnp.int32)
+    u = u0_ref[0, :]
+    w = Y @ u
+
+    def coord(i, carry):
+        u, w = carry
+        col = jax.lax.dynamic_slice(Y, (0, i), (n_pad, 1))[:, 0]
+        y1 = col[i]
+        ui = u[i]
+        g = w[i] - y1 * ui
+        lo = s[i] - lam
+        hi = s[i] + lam
+        eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+        eta_zero = jnp.where(g > 0, lo, hi)
+        eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+        # Skip the pinned coordinate j and the padding tail.
+        eta = jnp.where((i == j) | (i >= n_valid), ui, eta)
+        w = w + col * (eta - ui)
+        u = jax.lax.dynamic_update_slice(u, eta[None], (i,))
+        return u, w
+
+    def sweep(_, carry):
+        return jax.lax.fori_loop(0, n_pad, coord, carry)
+
+    u, w = jax.lax.fori_loop(0, sweeps, sweep, (u, w))
+    u_ref[0, :] = u
+    w_ref[0, :] = w
+    r2_ref[0, 0] = jnp.dot(u, w)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
+def qp_sweep_pallas(Y, s, lam, u0, j, *, sweeps: int = 4, interpret: bool = False):
+    """Solve (11) with coordinate descent; row/col ``j`` of Y must be zeroed
+    and ``u0[j] == 0``.  Returns (u, w=Y@u, R2).
+
+    Pads n to a lane multiple of 128; padded coordinates are frozen via the
+    n_valid guard and padded Y/s/u entries are zero so ``w`` stays exact.
+    """
+    n = Y.shape[0]
+    n_pad = max(128, ((n + 127) // 128) * 128)
+    p = n_pad - n
+    dtype = jnp.asarray(Y).dtype
+    Y = jnp.asarray(Y, dtype)
+    s = jnp.asarray(s, dtype)
+    u0 = jnp.asarray(u0, dtype)
+    if p:
+        Y = jnp.pad(Y, ((0, p), (0, p)))
+        s = jnp.pad(s, (0, p))
+        u0 = jnp.pad(u0, (0, p))
+    scal = jnp.stack(
+        [jnp.asarray(lam, dtype), jnp.asarray(j, dtype), jnp.asarray(n, dtype)]
+    )[None, :]
+    kern = functools.partial(_qp_kernel, n_pad=n_pad, sweeps=sweeps)
+    u, w, r2 = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_pad), dtype),
+            jax.ShapeDtypeStruct((1, n_pad), dtype),
+            jax.ShapeDtypeStruct((1, 1), dtype),
+        ],
+        interpret=interpret,
+    )(Y, s[None, :], u0[None, :], scal)
+    return u[0, :n], w[0, :n], r2[0, 0]

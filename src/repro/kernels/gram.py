@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: reduced-covariance gram matrix C = A^T A.
+
+Phase 3 of the pipeline: after elimination only n_hat columns survive, and
+Sigma_hat = A_S^T A_S / m is a tall-skinny gram — the MXU-bound leg of the
+roofline (2 * m * n_hat^2 flops over m * n_hat bytes; arithmetic intensity
+2*n_hat, compute-bound for n_hat >= ~128).
+
+Grid: (n/bi, n/bj, m/bk) with the contraction axis innermost; 128x128
+output tiles accumulate in VMEM in f32 (MXU-native).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(al_ref, ar_ref, c_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    al = al_ref[...]
+    ar = ar_ref[...]
+    c_ref[...] += jax.lax.dot_general(
+        al, ar,
+        dimension_numbers=(((0,), (0,)), ((), ())),   # contract rows: al^T @ ar
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram_pallas(
+    A: jax.Array,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """C = A^T A in f32.  Zero-padding is harmless for the gram."""
+    m, n = A.shape
+    block_i = min(block_i, max(128, n))
+    block_j = min(block_j, max(128, n))
+    block_k = min(block_k, max(8, m))
+    pn_i = (-n) % block_i
+    pn_j = (-n) % block_j
+    pm = (-m) % block_k
+    pn = max(pn_i, pn_j)
+    if pm or pn:
+        A = jnp.pad(A, ((0, pm), (0, pn)))
+    M, N = A.shape
+    grid = (N // block_i, N // block_j, M // block_k)
+    C = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_i), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_k, block_j), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=interpret,
+    )(A, A)
+    return C[:n, :n]

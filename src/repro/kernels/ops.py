@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op auto-selects ``interpret=True`` off-TPU (this container is CPU-only;
+interpret mode executes the kernel body in Python for correctness) and the
+compiled path on TPU.  The ``impl`` argument forces a path for testing:
+  'pallas'  — the kernel (interpret off-TPU)
+  'ref'     — the pure-jnp oracle
+  'auto'    — kernel on TPU, oracle elsewhere (oracle is faster than
+              interpret mode on CPU; semantics are identical and tested)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bcd_sweep import qp_sweep_pallas
+from .gram import gram_pallas
+from .variance import column_stats_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def column_stats(A, *, impl: str = "auto", block_m: int = 256, block_n: int = 512):
+    """(col_sum, col_sumsq) in f32 — feeds the Thm 2.1 variance screen."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.column_stats_ref(A)
+    return column_stats_pallas(
+        A, block_m=block_m, block_n=block_n, interpret=not _on_tpu()
+    )
+
+
+def column_variances(A, *, impl: str = "auto"):
+    """Convenience: (mean, var) from one streaming pass."""
+    m = A.shape[0]
+    s, ss = column_stats(A, impl=impl)
+    mean = s / m
+    var = jnp.maximum(ss / m - mean * mean, 0.0)
+    return mean, var
+
+
+def gram(A, *, impl: str = "auto", block_i: int = 128, block_j: int = 128,
+         block_k: int = 512):
+    """A^T A in f32 — the reduced covariance numerator."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.gram_ref(A)
+    return gram_pallas(
+        A, block_i=block_i, block_j=block_j, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+def qp_sweeps(Y, s, lam, u0, j, *, sweeps: int = 4, impl: str = "auto"):
+    """Box-QP coordinate descent (11)+(13) — the BCD inner loop."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.qp_sweep_ref(Y, s, lam, u0, j, sweeps)
+    return qp_sweep_pallas(Y, s, lam, u0, j, sweeps=sweeps, interpret=not _on_tpu())

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests sweep shapes/dtypes and assert_allclose kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def column_stats_ref(A):
+    """Per-column (sum, sum-of-squares) in f32 accumulation.
+
+    The variance screen (Thm 2.1) derives mean/var from these on the host:
+    mean = s/m, var = ss/m - mean^2.
+    """
+    A32 = A.astype(jnp.float32)
+    return jnp.sum(A32, axis=0), jnp.sum(A32 * A32, axis=0)
+
+
+def gram_ref(A):
+    """C = A^T A with f32 accumulation (reduced covariance numerator)."""
+    A32 = A.astype(jnp.float32)
+    return A32.T @ A32
+
+
+def qp_sweep_ref(Y, s, lam, u0, j, sweeps: int):
+    """Box-QP coordinate descent, identical semantics to the kernel:
+
+      min_u u^T Y u  s.t. ||u - s||_inf <= lam,  u_j = 0,
+
+    with Y's row/col j already zeroed.  Returns (u, w = Y@u, R2 = u^T Y u).
+    This is the same recursion as `repro.core.bcd.qp_coordinate_descent`
+    (re-implemented here so the oracle stays dependency-free)."""
+    n = Y.shape[0]
+    w0 = Y @ u0
+
+    def coord(i, carry):
+        u, w = carry
+        y1 = Y[i, i]
+        ui = u[i]
+        g = w[i] - y1 * ui
+        lo = s[i] - lam
+        hi = s[i] + lam
+        eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+        eta_zero = jnp.where(g > 0, lo, hi)
+        eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+        eta = jnp.where(i == j, ui, eta)
+        w = w + Y[:, i] * (eta - ui)
+        u = u.at[i].set(eta)
+        return u, w
+
+    def sweep(_, carry):
+        return jax.lax.fori_loop(0, n, coord, carry)
+
+    u, w = jax.lax.fori_loop(0, sweeps, sweep, (u0, w0))
+    return u, w, jnp.dot(u, w)

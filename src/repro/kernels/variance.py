@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: per-column sum / sum-of-squares (the Thm 2.1 screen).
+
+Phase 1 of the sparse-PCA pipeline touches *every* element of the (m, n)
+corpus shard once — it is the memory-bound leg of the roofline.  One pass
+computes both accumulators so HBM traffic is exactly m*n*dtype bytes.
+
+Grid: (n / block_n, m / block_m); the column-tile axis is parallel, the
+row-tile axis is an accumulation (TPU "arbitrary" semantics — sequential on
+a core), with the f32 accumulators living in the output VMEM block across
+row steps.  Block shapes are (8,128)-aligned for the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, sum_ref, sumsq_ref):
+    i = pl.program_id(1)  # row-tile index (innermost, sequential)
+
+    @pl.when(i == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sumsq_ref[...] = jnp.zeros_like(sumsq_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    sum_ref[...] += jnp.sum(a, axis=0, keepdims=True)
+    sumsq_ref[...] += jnp.sum(a * a, axis=0, keepdims=True)
+
+
+def column_stats_pallas(
+    A: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Returns (col_sum, col_sumsq) in f32.  Pads to block multiples with
+    zeros (harmless for both accumulators)."""
+    m, n = A.shape
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(128, n))
+    pm = (-m) % block_m
+    pn = (-n) % block_n
+    if pm or pn:
+        A = jnp.pad(A, ((0, pm), (0, pn)))
+    M, N = A.shape
+    grid = (N // block_n, M // block_m)
+    out_shape = [
+        jax.ShapeDtypeStruct((1, N), jnp.float32),
+        jax.ShapeDtypeStruct((1, N), jnp.float32),
+    ]
+    s, ss = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda j, i: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda j, i: (0, j)),
+            pl.BlockSpec((1, block_n), lambda j, i: (0, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(A)
+    return s[0, :n], ss[0, :n]

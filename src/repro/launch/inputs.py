@@ -1,0 +1,198 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation: everything the dry-run lowers against is an abstract
+struct.  Sharding specs are built from the logical rules with a
+**divisibility guard** — an axis only shards a dim it divides exactly
+(e.g. whisper's odd 51,865 vocab falls back to replicated on 'model';
+mamba2-130m's 24 ssm heads don't split 16 ways and stay replicated).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.distributed.sharding import (
+    LOGICAL_TO_PHYSICAL, logical_axes_for_path, _path_str, use_mesh,
+)
+from repro.models import build_model
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            if a in mesh.axis_names:
+                n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys] if phys in mesh.axis_names else 1
+
+
+def _resolve_guarded(mesh: Mesh, logical_axes, shape, overrides=None) -> P:
+    """Logical axes -> PartitionSpec, dropping axes that don't divide."""
+    parts = []
+    for name, dim in zip(logical_axes, shape):
+        phys = (overrides or {}).get(name, LOGICAL_TO_PHYSICAL.get(name))
+        if phys is None:
+            parts.append(None)
+            continue
+        if isinstance(phys, tuple):
+            phys = tuple(a for a in phys if a in mesh.axis_names)
+            if not phys:
+                parts.append(None)
+                continue
+        if _axis_size(mesh, phys) == 0 or dim % max(_axis_size(mesh, phys), 1):
+            parts.append(None)
+        else:
+            parts.append(phys)
+    return P(*parts)
+
+
+def tree_shardings(tree, mesh: Mesh, rules, overrides=None):
+    """Pytree of NamedSharding from trailing-dim path rules."""
+    def leaf(path, l):
+        p = _path_str(path)
+        axes = None
+        for pat, ax in rules:
+            if re.search(pat, p):
+                pad = (None,) * max(l.ndim - len(ax), 0)
+                axes = pad + tuple(ax)[-l.ndim:] if l.ndim < len(ax) else pad + tuple(ax)
+                break
+        if axes is None:
+            axes = (None,) * l.ndim
+        return NamedSharding(mesh, _resolve_guarded(mesh, axes, l.shape, overrides))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+# Parameter rules reuse the central table.
+def param_tree_shardings(params_struct, mesh: Mesh):
+    def leaf(path, l):
+        axes = logical_axes_for_path(_path_str(path), l.ndim)
+        return NamedSharding(mesh, _resolve_guarded(mesh, axes, l.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_struct)
+
+
+CACHE_RULES = [
+    (r"cross/(k|v)$", ("batch", None, "model", None)),
+    (r"mixer/(k|v)$", ("batch", "seq_kv", "model", None)),
+    (r"mixer/conv$",  ("batch", None, "model")),
+    (r"mixer/ssm$",   ("batch", "model", None, None)),
+    (r"pos$",         ()),
+]
+
+BATCH_RULES = [
+    (r"tokens$",       ("batch", None)),
+    (r"image_embeds$", ("batch", None, None)),
+    (r"enc_frames$",   ("batch", None, None)),
+]
+
+
+def train_batch_struct(cfg, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.num_patches:
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), jnp.int32),
+            "image_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            ),
+        }
+    if cfg.is_encoder_decoder:
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "enc_frames": jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+            ),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def make_train_batch(cfg, shape: ShapeSpec, seed: int = 0):
+    """Concrete host batch matching train_batch_struct (smoke/train use)."""
+    rng = np.random.default_rng(seed)
+    struct = train_batch_struct(cfg, shape)
+    out = {}
+    for k, v in struct.items():
+        if v.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=v.shape), jnp.int32
+            )
+        else:
+            out[k] = jnp.asarray(rng.normal(size=v.shape), v.dtype)
+    return out
+
+
+def cell_specs(arch_cfg, shape: ShapeSpec, mesh: Mesh):
+    """Everything the dry-run needs for one cell:
+    (model, fn_kind, arg_structs, in_shardings, donate) where fn_kind is
+    'train' | 'prefill' | 'decode'."""
+    model = build_model(arch_cfg)
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = param_tree_shardings(params_struct, mesh)
+    B = shape.global_batch
+    msize = dict(mesh.shape).get("model", 1)
+    heads_ok = msize <= 1 or (arch_cfg.n_kv_heads % msize == 0)
+    overrides = {}
+    seq_axes = []
+    if B == 1:
+        # batch-1 long decode: shard the KV sequence dim over 'data' instead.
+        overrides["batch"] = None
+        seq_axes.append("data")
+    if not heads_ok:
+        # kv-heads don't divide the tensor axis (qwen2: 2, llava: 8 on 16):
+        # the cache shards its sequence dim over 'model' instead (the K-dim
+        # rule is dropped by the divisibility guard automatically).
+        seq_axes.append("model")
+    if seq_axes:
+        overrides["seq_kv"] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+    overrides = overrides or None
+
+    if shape.kind == "train":
+        batch_struct = train_batch_struct(arch_cfg, shape)
+        b_shard = tree_shardings(batch_struct, mesh, BATCH_RULES, overrides)
+        kind = "train" if shape.name.startswith("train") else "prefill"
+        if kind == "train":
+            from repro.optim import adamw
+            from repro.train.train_step import TrainState
+
+            state_struct = jax.eval_shape(
+                lambda p: TrainState(
+                    params=p, opt=adamw.init(p),
+                    step=jnp.zeros((), jnp.int32),
+                ),
+                params_struct,
+            )
+            s_shard = param_tree_shardings(state_struct, mesh)
+            return model, kind, (state_struct, batch_struct), (s_shard, b_shard)
+        return model, kind, (params_struct, batch_struct), (p_shard, b_shard)
+
+    # decode
+    if arch_cfg.is_encoder_decoder:
+        enc_batch = {
+            "enc_frames": jax.ShapeDtypeStruct(
+                (B, arch_cfg.encoder_seq, arch_cfg.d_model), jnp.bfloat16
+            )
+        }
+        cache_struct = jax.eval_shape(
+            lambda p, b: model.init_cache(p, b, shape.seq_len),
+            params_struct, enc_batch,
+        )
+    else:
+        cache_struct = jax.eval_shape(
+            lambda p: model.init_cache(p, B, shape.seq_len), params_struct
+        )
+    c_shard = tree_shardings(cache_struct, mesh, CACHE_RULES, overrides)
+    tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_shard = NamedSharding(
+        mesh, _resolve_guarded(mesh, ("batch", None), (B, 1), overrides)
+    )
+    return model, "decode", (params_struct, cache_struct, tok_struct), (
+        p_shard, c_shard, t_shard)

@@ -1,0 +1,79 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+On a real fleet this binary runs once per host (jax.distributed.initialize
+picks up the pod topology); here it drives the single-process mesh.  Fault
+tolerance: resume-from-latest is automatic (see train/trainer.py), SIGTERM
+checkpoints and exits, straggler events print to the log.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import PipelineConfig, TokenPipeline
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_dev_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="1x1",
+                    help="data x model, e.g. 4x2 (needs that many devices)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_dev_mesh((d, m), ("data", "model")) if d * m > 1 else None
+
+    pipe = TokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, batch=args.batch, seq_len=args.seq))
+
+    def make_batch(toks):
+        b = {"tokens": jnp.asarray(toks)}
+        if cfg.num_patches:
+            b["image_embeds"] = jnp.zeros(
+                (toks.shape[0], cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.is_encoder_decoder:
+            b["enc_frames"] = jnp.zeros(
+                (toks.shape[0], cfg.encoder_seq, cfg.d_model), jnp.float32)
+        return b
+
+    with use_mesh(mesh):
+        step = jax.jit(make_train_step(
+            model, AdamWConfig(lr=args.lr), microbatches=args.microbatches))
+        state = init_state(model, jax.random.PRNGKey(0))
+        trainer = Trainer(
+            train_step=step, pipeline=pipe, make_batch=make_batch,
+            cfg=TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                              ckpt_dir=args.ckpt_dir, log_every=10),
+        )
+        state = trainer.run(state)
+
+    for e in trainer.events:
+        print(e)
+    print(f"final step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

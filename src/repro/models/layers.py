@@ -1,0 +1,376 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / cross), gated MLP.  Pure-function style: params are plain dict
+pytrees, every forward is ``fn(params, x, ...)``.
+
+All matmuls keep a (batch, seq, heads/hidden) layout with no transposes
+between sharded ops — the dry-run HLO is checked for exactly this (§Perf).
+Compute dtype is the config dtype (bf16 on TPU); norms/softmax/rope run in
+f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+# ----------------------------------------------------------------- norms ---
+def rms_norm(scale, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope(x, positions, *, theta: float = 1e4):
+    """Rotary embedding. x: (..., seq, heads, head_dim), positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]                       # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+def init_attention(key, cfg, *, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "ln": init_rms_norm(d, dt),
+        "wq": (jax.random.normal(k1, (d, H * hd), dt) * scale),
+        "wk": (jax.random.normal(k2, (d, K * hd), dt) * scale),
+        "wv": (jax.random.normal(k3, (d, K * hd), dt) * scale),
+        "wo": (jax.random.normal(k4, (H * hd, d), dt) * (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attn_scores_mask(q_pos, k_pos, *, window: int | None, causal: bool):
+    """(q, k) boolean mask: True = attend."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return ok
+
+
+def _heads_shardable(K: int) -> bool:
+    from repro.distributed.sharding import axis_size
+
+    m = axis_size("model")
+    return m <= 1 or K % m == 0
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal, window,
+                    kv_block: int = 1024, block_skip: bool = False):
+    """Blockwise (FlashAttention-style) softmax(QK^T)V with O(S*Bk) memory.
+
+    q: (B, Sq, K, rep, hd) grouped GQA layout; k, v: (B, Skv, K, hd).
+    lax.scan over KV blocks carrying the running (max, denom, accum) — the
+    standard online-softmax recursion.  FLOP count is identical to vanilla
+    attention (same matmuls, blocked), which is what lets the dry-run cost
+    probes lower the vanilla form instead (cost_analysis counts scan bodies
+    once; see launch/dryrun.py).
+
+    ``block_skip=True`` (sliding-window layers, contiguous q == positions):
+    instead of scanning ALL KV blocks and masking, each q row only ever
+    sees ceil(window/kv_block)+1 KV blocks, so the scan runs over *relative*
+    block offsets with gathered KV — the paper's safe-elimination insight
+    (never compute provably-zero work) applied to attention.  Cuts the
+    window-layer attention cost from O(S^2) to O(S*window).
+    """
+    B, Sq, K, rep, hd = q.shape
+    Skv = k.shape[1]
+    if block_skip and window is not None and Sq == Skv and Sq % kv_block == 0:
+        return _flash_window_skip(q, k, v, q_pos, k_pos, causal=causal,
+                                  window=window, kv_block=kv_block)
+    nb = Skv // kv_block
+    kb = k.reshape(B, nb, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(k_pos.shape[0], nb, kv_block).transpose(1, 0, 2)
+
+    scale = hd**-0.5
+    m0 = jnp.full((B, K, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, rep, Sq, hd), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kpos = blk
+        s = jnp.einsum(
+            "bqkrd,bskd->bkrqs", q, kblk, preferred_element_type=jnp.float32
+        ) * scale
+        ok = _attn_scores_mask(q_pos[0], kpos[0], window=window, causal=causal)
+        s = jnp.where(ok[None, None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan.
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bkrqs,bskd->bkrqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, K, rep, Sq, hd) -> (B, Sq, K, rep, hd)
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)
+
+
+def _flash_window_skip(q, k, v, q_pos, k_pos, *, causal, window, kv_block):
+    """Sliding-window flash attention that never touches KV blocks outside
+    the window: q block i attends only to kv blocks i-R+1..i, with
+    R = ceil(window/kv_block)+1.  The R-loop is python-unrolled (R is 2-3),
+    so the dry-run cost probes count it exactly.  O(S*window) work."""
+    B, Sq, K, rep, hd = q.shape
+    Bk = kv_block
+    nqb = Sq // Bk
+    R = min((window + Bk - 1) // Bk + 1, nqb)
+    qb = q.reshape(B, nqb, Bk, K, rep, hd)
+    kb = k.reshape(B, nqb, Bk, K, hd)
+    vb = v.reshape(B, nqb, Bk, K, hd)
+    qpos = q_pos[0].reshape(nqb, Bk)
+    kpos = k_pos[0].reshape(nqb, Bk)
+    scale = hd**-0.5
+
+    m = jnp.full((B, K, rep, nqb, Bk), -jnp.inf, jnp.float32)
+    l = jnp.zeros((B, K, rep, nqb, Bk), jnp.float32)
+    acc = jnp.zeros((B, K, rep, nqb, Bk, hd), jnp.float32)
+    for r in range(R):
+        idx = jnp.arange(nqb) - r
+        blk_ok = idx >= 0
+        idxc = jnp.maximum(idx, 0)
+        kr = jnp.take(kb, idxc, axis=1)          # (B, nqb, Bk, K, hd)
+        vr = jnp.take(vb, idxc, axis=1)
+        kp = jnp.take(kpos, idxc, axis=0)        # (nqb, Bk)
+        s = jnp.einsum(
+            "bnqkrd,bnskd->bkrnqs", qb, kr, preferred_element_type=jnp.float32
+        ) * scale
+        ok = jnp.ones((nqb, Bk, Bk), bool)
+        if causal:
+            ok &= qpos[:, :, None] >= kp[:, None, :]
+        ok &= (qpos[:, :, None] - kp[:, None, :]) < window
+        ok &= blk_ok[:, None, None]
+        s = jnp.where(ok[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bkrnqs,bnskd->bkrnqd", p.astype(vr.dtype), vr,
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * corr[..., None] + pv
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, K, rep, nqb, Bk, hd) -> (B, Sq, K, rep, hd)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(B, Sq, K, rep, hd)
+    return out.astype(v.dtype)
+
+
+def attention(
+    params,
+    x,
+    *,
+    cfg,
+    positions,
+    kv=None,                 # cross-attention source (B, S_kv, d); None = self
+    kv_positions=None,
+    causal: bool = True,
+    window: int | None = None,
+    cache=None,              # {"k","v": (B, S_max, K, hd), "pos": ()} decode cache
+    static_kv=None,          # precomputed {"k","v"} (cross-attn decode)
+):
+    """GQA attention. Returns (out, new_cache).
+
+    Internal sharding: kv-heads over 'model' when they divide it; otherwise
+    context parallelism (q-sequence over 'model', KV replicated) — the
+    production fallback for archs like qwen2 (2 kv heads) or llava (8 kv
+    heads) on a 16-way tensor axis.  Long sequences without a cache use
+    blockwise flash attention (O(S*block) memory instead of O(S^2))."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sp = getattr(cfg, "seq_parallel", False) and x.shape[1] > 1
+    heads_ok = _heads_shardable(K) and not sp
+    h_ax = "model" if heads_ok else None
+    q_ax = None if heads_ok else "ctx"
+    xn = rms_norm(params["ln"], x, eps=cfg.norm_eps)
+
+    q = xn @ params["wq"]
+    if "bq" in params:
+        q = q + params["bq"]
+    q = _split_heads(q, H, hd)
+    B, Sq = q.shape[0], q.shape[1]
+    rep = H // K
+
+    if static_kv is not None:
+        k = static_kv["k"].astype(x.dtype)
+        v = static_kv["v"].astype(x.dtype)
+        qg = q.reshape(B, Sq, K, rep, hd)
+        qg = constrain(qg, "batch", q_ax, h_ax, None, None)
+        scores = jnp.einsum(
+            "bqkrd,bskd->bkrqs", qg, k, preferred_element_type=jnp.float32
+        ) * hd**-0.5
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)  # (B, Sq, K, rep, hd)
+        out = constrain(out, "batch", q_ax, h_ax, None, None)
+        out = out.reshape(B, Sq, H * hd) @ params["wo"]
+        return constrain(out, "batch", "ctx" if sp else None, None), None
+
+    src = xn if kv is None else kv
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = _split_heads(k, K, hd)
+    v = _split_heads(v, K, hd)
+    k = constrain(k, "batch", None, h_ax, None)
+    v = constrain(v, "batch", None, h_ax, None)
+
+    if kv is None:  # self-attention: rope on q and k
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+        k_pos = positions
+    else:
+        k_pos = kv_positions
+
+    qg = q.reshape(B, Sq, K, rep, hd)
+    qg = constrain(qg, "batch", q_ax, h_ax, None, None)
+
+    new_cache = None
+    if cache is not None:
+        # Decode: write this step's k/v at index pos, attend over the prefix.
+        pos = cache["pos"]  # scalar int32
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        k, v = ck.astype(v.dtype), cv.astype(v.dtype)
+        k_idx = jnp.arange(ck.shape[1])[None, :]
+        valid = k_idx <= pos
+        if window is not None:
+            valid &= k_idx > pos - window
+        mask = valid[:, None, :]  # (1, q=1, S_max)
+    else:
+        Skv = k.shape[1]
+        kv_block = getattr(cfg, "attn_kv_block", 1024)
+        blocked_ok = Sq > 1 and Skv >= 2 * kv_block and Skv % kv_block == 0
+        # Window layers skip provably-masked KV blocks (python-unrolled, so
+        # it runs in cost-probe mode too); full attention uses the scanned
+        # flash form (probes lower vanilla instead — same flop count).
+        use_skip = (
+            blocked_ok and window is not None and kv is None and Sq == Skv
+        )
+        use_flash = blocked_ok and not getattr(cfg, "unroll_stacks", False)
+        if use_skip or use_flash:
+            out = flash_attention(
+                qg, k, v, positions, k_pos,
+                causal=causal and kv is None, window=window,
+                kv_block=kv_block, block_skip=use_skip,
+            )
+            out = constrain(out, "batch", q_ax, h_ax, None, None)
+            out = out.reshape(B, Sq, H * hd) @ params["wo"]
+            return constrain(out, "batch", None, None), None
+        mask = _attn_scores_mask(
+            positions[0], k_pos[0], window=window, causal=causal and kv is None
+        )[None, :, :]
+
+    scores = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg, k, preferred_element_type=jnp.float32
+    ) * hd**-0.5
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)  # (B, Sq, K, rep, hd)
+    out = constrain(out, "batch", q_ax, h_ax, None, None)
+    out = out.reshape(B, Sq, H * hd) @ params["wo"]
+    return constrain(out, "batch", "ctx" if sp else None, None), new_cache
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((batch, max_len, K, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------- mlp ---
+def init_mlp(key, cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln": init_rms_norm(d, dt),
+        "wi_gate": jax.random.normal(k1, (d, f), dt) * d**-0.5,
+        "wi_up": jax.random.normal(k2, (d, f), dt) * d**-0.5,
+        "wo": jax.random.normal(k3, (f, d), dt) * f**-0.5,
+    }
+
+
+def mlp(params, x, *, cfg):
+    sp = getattr(cfg, "seq_parallel", False)
+    xn = rms_norm(params["ln"], x, eps=cfg.norm_eps)
+    h = jax.nn.silu(xn @ params["wi_gate"]) * (xn @ params["wi_up"])
+    # SP mode: tokens stay sharded over 'model'; weights gather instead.
+    h = constrain(h, "batch", "ctx", None) if sp else constrain(h, "batch", None, "model")
+    out = h @ params["wo"]
+    return constrain(out, "batch", "ctx" if sp else None, None)
+
+
+# ------------------------------------------------------------- embedding ---
+def init_embed(key, cfg) -> jax.Array:
+    # std d^-0.5: embed() rescales by sqrt(d) so activations are O(1), and
+    # tied-unembedding logits stay O(1) too.
+    return (
+        jax.random.normal(key, (cfg.vocab_size, cfg.d_model), cfg.param_dtype)
+        * cfg.d_model**-0.5
+    )
+
+
+def embed(table, tokens, cfg):
+    sp = getattr(cfg, "seq_parallel", False) and tokens.shape[1] > 1
+    x = jnp.take(table, tokens, axis=0).astype(cfg.compute_dtype)
+    return constrain(x * cfg.d_model**0.5, "batch", "ctx" if sp else None, None)
+
+
+def unembed(table_or_head, x, cfg, *, tied: bool):
+    sp = getattr(cfg, "seq_parallel", False) and x.shape[1] > 1
+    if tied:
+        logits = x @ table_or_head.T.astype(cfg.compute_dtype)
+    else:
+        logits = x @ table_or_head.astype(cfg.compute_dtype)
+    if sp:
+        return constrain(logits, "batch", "ctx", None)
+    return constrain(logits, "batch", None, "model")

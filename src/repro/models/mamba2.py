@@ -1,0 +1,168 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) sequence mixer.
+
+Training path: the chunked SSD algorithm — within-chunk terms computed as
+masked attention-like matmuls (MXU-friendly), across-chunk recurrence as an
+associative scan over per-chunk states.  O(L * Q) work for chunk size Q.
+
+Decode path: the classic O(1)-per-token state recurrence
+    S <- exp(dt*A) * S + B^T (x*dt),   y = C S + D x
+carrying (conv_state, ssm_state) — this is what makes the SSM archs eligible
+for the 500k-token long-context decode cell (DESIGN.md §Arch-applicability).
+
+Single B/C group (n_groups=1), multi-head x (H heads of dim P = d_inner/H).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import init_rms_norm, rms_norm
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads
+    P = d_in // H
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N  # x, B, C go through the causal conv
+    return d_in, H, P, N, conv_dim
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": init_rms_norm(d, dt),
+        # order: [z (d_in), x (d_in), B (N), C (N), dt (H)]
+        "in_proj": jax.random.normal(ks[0], (d, 2 * d_in + 2 * N + H), dt) * d**-0.5,
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dt) * 0.1,
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log) = -1
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "ssm_norm": init_rms_norm(d_in, dt),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), dt) * d_in**-0.5,
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, H, P, N, _ = _dims(cfg)
+    z, xs, B_, C_, dtr = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    return z, xs, B_, C_, dtr
+
+
+def _causal_conv(seq, weight):
+    """Depthwise causal conv over (B, L, C) with (W, C) weights."""
+    W = weight.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * weight[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out)
+
+
+def mamba_mixer(params, x, *, cfg):
+    """Training / prefill forward: (B, L, d) -> (B, L, d) via chunked SSD."""
+    Bsz, L, d = x.shape
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    Q = min(cfg.ssm_chunk, L)
+    while L % Q:
+        Q //= 2
+    nC = L // Q
+
+    xn = rms_norm(params["ln"], x, eps=cfg.norm_eps)
+    proj = xn @ params["in_proj"]
+    proj = constrain(proj, "batch", None, "model")
+    z, xs, B_, C_, dtr = _split_proj(proj, cfg)
+    conv_out = _causal_conv(jnp.concatenate([xs, B_, C_], -1), params["conv"])
+    xs, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    log_a = dt * A                                                      # (B,L,H) <=0
+    xh = xs.reshape(Bsz, L, H, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]                        # (B,L,H,P)
+
+    # --- chunk ---
+    ca = log_a.reshape(Bsz, nC, Q, H)
+    cum = jnp.cumsum(ca, axis=2)                                        # (B,C,Q,H)
+    Bc = B_.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    Cc = C_.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    xc = xdt.reshape(Bsz, nC, Q, H, P)
+
+    # Intra-chunk: masked attention-like term.
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                      # (B,C,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])      # (B,C,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    wts = jnp.where(causal[None, None, :, :, None], scores[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", wts, xc)
+
+    # Per-chunk terminal states.
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                        # (B,C,Q,H)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_end, xc)   # (B,C,H,N,P)
+
+    # Inter-chunk associative scan:  S_c = a_c * S_{c-1} + S_chunk_c.
+    a_chunk = jnp.exp(cum[:, :, -1, :])                                 # (B,C,H)
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_sc, S_sc = jax.lax.associative_scan(combine, (a_chunk, S_chunk), axis=1)
+    # Exclusive: state entering chunk c.
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(S_sc[:, :1]), S_sc[:, :-1]], axis=1
+    )
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc, S_prev) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    y = y + params["ssm_D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, L, d_in).astype(x.dtype)
+    y = rms_norm(params["ssm_norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    y = constrain(y, "batch", None, "model")
+    out = y @ params["out_proj"]
+    return constrain(out, "batch", None, None)
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cache, *, cfg):
+    """One-token decode: (B, 1, d) -> (B, 1, d), O(1) state update."""
+    Bsz = x.shape[0]
+    d_in, H, P, N, conv_dim = _dims(cfg)
+    xn = rms_norm(params["ln"], x[:, 0, :], eps=cfg.norm_eps)
+    proj = xn @ params["in_proj"]
+    z, xs, B_, C_, dtr = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([xs, B_, C_], -1)                       # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], 1)  # (B, W, cd)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, params["conv"])
+    )
+    new_conv = window[:, 1:, :]
+    xs, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                                # (B,H)
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    S = cache["ssm"] * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", B_.astype(jnp.float32), xh * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), S)
+    y = y + params["ssm_D"][None, :, None] * xh
+    y = y.reshape(Bsz, d_in).astype(x.dtype)
+    y = rms_norm(params["ssm_norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": S}

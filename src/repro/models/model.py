@@ -1,0 +1,266 @@
+"""Public model API: build_model(cfg) -> LM | EncDec.
+
+Uniform surface used by the trainer, the server, and the dry-run:
+
+  params            = model.init(key)
+  logits, aux       = model.forward(params, batch)       # train/prefill path
+  loss, metrics     = model.loss(params, batch)
+  cache             = model.init_cache(params, batch, max_len, dtype)
+  logits, cache     = model.decode_step(params, cache, last_tokens)
+
+Batches are dicts: {"tokens"} (LM), +{"image_embeds"} (VLM, stub frontend),
+{"tokens", "enc_frames"} (whisper, stub conv frontend).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from .layers import embed, init_embed, init_rms_norm, rms_norm, unembed
+from .transformer import (
+    ZERO_AUX, StackSpec, _acc_aux, init_stack, init_stack_cache, run_stack,
+)
+
+
+def cast_params(params, cfg):
+    """f32 matrices -> compute dtype; 1-D params (norms, A_log, dt_bias, D)
+    stay f32 for numerics."""
+    return jax.tree.map(
+        lambda p: p.astype(cfg.compute_dtype)
+        if (p.dtype == jnp.float32 and p.ndim >= 2)
+        else p,
+        params,
+    )
+
+
+def softmax_xent(logits, labels):
+    """Mean next-token cross entropy in f32.
+
+    The label pick uses an iota-compare-select instead of take_along_axis:
+    it fuses into the vocab reduction and never gathers across the
+    vocab-sharded logits (a gather would all-gather V per token)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def param_count(params) -> int:
+    return int(sum(math.prod(p.shape) for p in jax.tree.leaves(params)))
+
+
+class LM:
+    """Decoder-only LM (dense / MoE / SSM / hybrid / VLM backbone)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg.validate()
+        self.stacks = [StackSpec(cfg.period, cfg.periods)]
+        if cfg.remainder:
+            self.stacks.append(StackSpec(cfg.remainder, 1))
+
+    # ------------------------------------------------------------- init ---
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2 + len(self.stacks))
+        params = {
+            "embed": init_embed(ks[0], cfg),
+            "stacks": {
+                f"s{i}": init_stack(ks[2 + i], st, cfg)
+                for i, st in enumerate(self.stacks)
+            },
+            "final_norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+                * cfg.d_model**-0.5
+            )
+        return params
+
+    # ---------------------------------------------------------- forward ---
+    def forward(self, params, batch):
+        cfg = self.cfg
+        p = cast_params(params, cfg)
+        tokens = batch["tokens"]
+        x = embed(p["embed"], tokens, cfg)
+        if cfg.num_patches:
+            img = batch["image_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        aux = ZERO_AUX()
+        for i, st in enumerate(self.stacks):
+            x, a, _ = run_stack(p["stacks"][f"s{i}"], x, st, cfg, positions=positions)
+            aux = _acc_aux(aux, a)
+        x = rms_norm(p["final_norm"], x, eps=cfg.norm_eps)
+        head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+        logits = unembed(head, x, cfg, tied=cfg.tie_embeddings)
+        return logits, aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        if cfg.num_patches:
+            P = cfg.num_patches
+            S_text = tokens.shape[1]
+            lg = logits[:, P - 1 : P + S_text - 1, :]
+            labels = tokens
+        else:
+            lg = logits[:, :-1, :]
+            labels = tokens[:, 1:]
+        ce = softmax_xent(lg, labels)
+        total = (
+            ce
+            + cfg.moe_aux_weight * aux["moe_lb_loss"]
+            + cfg.moe_zloss_weight * aux["moe_z_loss"]
+        )
+        return total, {"ce": ce, **aux}
+
+    # ------------------------------------------------------------ decode ---
+    def init_cache(self, params, batch_size: int, max_len: int,
+                   dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches = {
+            f"s{i}": init_stack_cache(st, cfg, batch_size, max_len, dtype)
+            for i, st in enumerate(self.stacks)
+        }
+        return {"stacks": caches, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, cache, batch):
+        """Write a prompt into the cache by running decode steps via scan
+        (simple reference prefill; production would batch this)."""
+        tokens = batch["tokens"]
+
+        def step(cache, tok):
+            logits, cache = self.decode_step(params, cache, tok[:, None])
+            return cache, logits
+
+        cache, logits = jax.lax.scan(step, cache, tokens.T)
+        return cache, logits[-1]
+
+    def decode_step(self, params, cache, last_tokens):
+        """last_tokens: (B, 1) int32 -> (logits (B, V), new cache)."""
+        cfg = self.cfg
+        p = cast_params(params, cfg)
+        x = embed(p["embed"], last_tokens, cfg)
+        positions = cache["pos"] + jnp.zeros((1, 1), jnp.int32)
+        aux = ZERO_AUX()
+        new_stacks = {}
+        for i, st in enumerate(self.stacks):
+            x, a, nc = run_stack(
+                p["stacks"][f"s{i}"], x, st, cfg, positions=positions,
+                caches=cache["stacks"][f"s{i}"], decode=True,
+            )
+            new_stacks[f"s{i}"] = nc
+        x = rms_norm(p["final_norm"], x, eps=cfg.norm_eps)
+        head = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+        logits = unembed(head, x, cfg, tied=cfg.tie_embeddings)
+        return logits[:, 0, :], {"stacks": new_stacks, "pos": cache["pos"] + 1}
+
+
+class EncDec:
+    """Encoder-decoder (whisper backbone; conv frontend is a stub — the
+    batch carries precomputed frame embeddings)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg.validate()
+        self.enc_stack = StackSpec(
+            cfg.encoder_period,
+            cfg.n_encoder_layers // len(cfg.encoder_period),
+        )
+        self.dec_stacks = [StackSpec(cfg.period, cfg.periods, has_cross=True)]
+        if cfg.remainder:
+            self.dec_stacks.append(StackSpec(cfg.remainder, 1, has_cross=True))
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4 + len(self.dec_stacks))
+        params = {
+            "embed": init_embed(ks[0], cfg),
+            "pos_embed": jax.random.normal(
+                ks[1], (cfg.encoder_seq, cfg.d_model), cfg.param_dtype
+            ) * 0.02,
+            "enc_stack": init_stack(ks[2], self.enc_stack, cfg),
+            "enc_norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+            "stacks": {
+                f"s{i}": init_stack(ks[4 + i], st, cfg)
+                for i, st in enumerate(self.dec_stacks)
+            },
+            "final_norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+            "lm_head": jax.random.normal(
+                ks[3], (cfg.d_model, cfg.vocab_size), cfg.param_dtype
+            ) * cfg.d_model**-0.5,
+        }
+        return params
+
+    def encode(self, p, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype) + p["pos_embed"].astype(cfg.compute_dtype)[None]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, _, _ = run_stack(p["enc_stack"], x, self.enc_stack, cfg, positions=positions)
+        return rms_norm(p["enc_norm"], x, eps=cfg.norm_eps)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        p = cast_params(params, cfg)
+        enc_out = self.encode(p, batch["enc_frames"])
+        tokens = batch["tokens"]
+        x = embed(p["embed"], tokens, cfg)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        aux = ZERO_AUX()
+        for i, st in enumerate(self.dec_stacks):
+            x, a, _ = run_stack(
+                p["stacks"][f"s{i}"], x, st, cfg, positions=positions, enc_out=enc_out
+            )
+            aux = _acc_aux(aux, a)
+        x = rms_norm(p["final_norm"], x, eps=cfg.norm_eps)
+        logits = unembed(p["lm_head"], x, cfg, tied=False)
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        ce = softmax_xent(logits[:, :-1, :], tokens[:, 1:])
+        return ce, {"ce": ce, **aux}
+
+    def init_cache(self, params, batch, max_len: int, dtype=jnp.bfloat16):
+        """Runs the encoder and precomputes static cross K/V."""
+        cfg = self.cfg
+        p = cast_params(params, cfg)
+        enc_out = self.encode(p, batch["enc_frames"])
+        B = enc_out.shape[0]
+        caches = {
+            f"s{i}": init_stack_cache(
+                st, cfg, B, max_len, dtype, enc_out=enc_out,
+                params=p["stacks"][f"s{i}"],
+            )
+            for i, st in enumerate(self.dec_stacks)
+        }
+        return {"stacks": caches, "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, cache, last_tokens):
+        cfg = self.cfg
+        p = cast_params(params, cfg)
+        x = embed(p["embed"], last_tokens, cfg)
+        positions = cache["pos"] + jnp.zeros((1, 1), jnp.int32)
+        new_stacks = {}
+        for i, st in enumerate(self.dec_stacks):
+            x, _, nc = run_stack(
+                p["stacks"][f"s{i}"], x, st, cfg, positions=positions,
+                caches=cache["stacks"][f"s{i}"], decode=True,
+            )
+            new_stacks[f"s{i}"] = nc
+        x = rms_norm(p["final_norm"], x, eps=cfg.norm_eps)
+        logits = unembed(p["lm_head"], x, cfg, tied=False)
+        return logits[:, 0, :], {"stacks": new_stacks, "pos": cache["pos"] + 1}
+
+
+def build_model(cfg):
+    return EncDec(cfg) if cfg.is_encoder_decoder else LM(cfg)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based one-hot dispatch.
+
+TPU-native "dense dispatch" (T5X/MaxText style): tokens are bucketed into
+(expert, capacity) slots via one-hot einsums, which XLA partitions into
+all-to-alls when experts shard over the 'model'/'expert' axis.  Supports
+shared experts (DeepSeek-MoE fine-grained style: the shared experts are a
+fused dense MLP that every token passes through).
+
+Dispatch/combine cost is quadratic in the routing group size T_g, so
+``moe_group_size`` is a first-class perf knob (see EXPERIMENTS.md §Perf):
+  dispatch flops / expert flops  ~=  T_g * capacity_factor / (3 * d_ff_e)
+Fine-grained experts (small d_ff_e) want small groups.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import init_mlp, init_rms_norm, mlp, rms_norm
+
+
+def init_moe(key, cfg) -> dict:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    dt = cfg.param_dtype
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "ln": init_rms_norm(d, dt),
+        "router": jax.random.normal(k1, (d, E), dt) * d**-0.5,
+        "experts": {
+            "wi_gate": jax.random.normal(k2, (E, d, f), dt) * d**-0.5,
+            "wi_up": jax.random.normal(k3, (E, d, f), dt) * d**-0.5,
+            "wo": jax.random.normal(k4, (E, f, d), dt) * f**-0.5,
+        },
+    }
+    if cfg.n_shared_experts:
+        # Shared experts fused into one dense MLP of width n_shared * f.
+        p["shared"] = init_mlp(k5, cfg, d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe(params, x, *, cfg):
+    """Returns (out, aux) where aux carries router losses for the train loss."""
+    B, S, d = x.shape
+    xn = rms_norm(params["ln"], x, eps=cfg.norm_eps)
+    T = B * S
+    g_size = min(cfg.moe_group_size, T)
+    while T % g_size:
+        g_size //= 2
+    G = T // g_size
+    xg = xn.reshape(G, g_size, d)
+    xg = constrain(xg, "batch", None, None)
+
+    logits = xg.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    logits = constrain(logits, "batch", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, t, E)
+    probs = constrain(probs, "batch", None, None)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)    # (G, t, k)
+    gate_vals = constrain(gate_vals, "batch", None, None)
+    expert_idx = constrain(expert_idx, "batch", None, None)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    E = cfg.n_experts
+    C = _capacity(g_size, cfg)
+    # Slot assignment: process the k choices in priority order; each expert
+    # fills its capacity in token order (Switch-style dropping).
+    combine = jnp.zeros((G, g_size, E, C), jnp.float32)
+    fill = jnp.zeros((G, E), jnp.int32)
+    for j in range(cfg.top_k):
+        e_onehot = jax.nn.one_hot(expert_idx[..., j], E, dtype=jnp.int32)  # (G,t,E)
+        pos_in_e = fill[:, None, :] + jnp.cumsum(e_onehot, axis=1) - e_onehot
+        keep = (pos_in_e < C) & (e_onehot > 0)
+        slot = jnp.clip(pos_in_e, 0, C - 1)
+        sl_onehot = jax.nn.one_hot(slot, C, dtype=jnp.float32) * keep[..., None]
+        combine = combine + sl_onehot * e_onehot[..., None] * gate_vals[..., j][..., None, None]
+        fill = fill + jnp.sum(e_onehot * keep, axis=1)
+
+    combine = constrain(combine, "batch", None, "expert", None)
+    dispatch = (combine > 0).astype(xg.dtype)                  # (G, t, E, C)
+    dispatch = constrain(dispatch, "batch", None, "expert", None)
+    dispatched = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    # Groups stay sharded over the batch axes AND experts over 'expert':
+    # this is the EP layout — the (g,t)->(e,c) redistribution lowers to an
+    # all-to-all instead of a full all-gather of every group.
+    dispatched = constrain(dispatched, "batch", "expert", None, None)
+
+    w = params["experts"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", dispatched, w["wi_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", dispatched, w["wi_up"])
+    h = constrain(h, "batch", "expert", None, None)
+    eout = jnp.einsum("gecf,efd->gecd", h, w["wo"])
+    eout = constrain(eout, "batch", "expert", None, None)
+
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), eout)
+    out = out.reshape(B, S, d)
+    out = constrain(out, "batch", None, None)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(params["shared"], x, cfg=cfg)
+
+    # Router aux losses (Switch load-balance + z-loss), in f32.
+    me = jnp.mean(probs, axis=(0, 1))                              # mean prob/expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=-2)
+        / g_size, axis=0,
+    )                                                              # top-1 token frac
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+    return out, aux

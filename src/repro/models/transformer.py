@@ -1,0 +1,200 @@
+"""Model composition: periods of blocks, scanned with stacked params.
+
+Every architecture in the zoo is a `LM` (decoder-only; dense/MoE/SSM/hybrid/
+VLM) or an `EncDec` (whisper).  Depth is expressed as `lax.scan` over
+period-stacked parameters so compile time and HLO size are O(period), not
+O(n_layers) — essential for 95-layer models lowered against 512 devices.
+
+Decode carries a cache pytree that mirrors the stack structure (leading
+n_periods dim on every leaf), scanned in lockstep with the params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from . import mamba2, moe as moe_lib
+from .layers import (
+    attention, embed, init_attention, init_attn_cache, init_embed, init_mlp,
+    init_rms_norm, mlp, rms_norm, unembed,
+)
+
+ZERO_AUX = lambda: {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                    "moe_z_loss": jnp.zeros((), jnp.float32)}
+
+
+# ------------------------------------------------------------------ blocks ---
+def init_block(key, spec, cfg, *, has_cross: bool = False) -> dict:
+    mixer, ffn = spec
+    keys = jax.random.split(key, 3)
+    p: dict[str, Any] = {}
+    if mixer == "mamba":
+        p["mixer_ssm"] = mamba2.init_mamba(keys[0], cfg)
+    else:
+        p["mixer_attn"] = init_attention(keys[0], cfg)
+    if has_cross:
+        p["cross"] = init_attention(keys[1], cfg)
+    if ffn == "mlp":
+        p["ffn_mlp"] = init_mlp(keys[2], cfg)
+    elif ffn == "moe":
+        p["ffn_moe"] = moe_lib.init_moe(keys[2], cfg)
+    return p
+
+
+def apply_block(
+    params, x, spec, cfg, *, positions, enc_out=None, cache=None, decode=False
+):
+    """Returns (x, aux, new_cache).  ``cache``/``new_cache`` are {} when not
+    decoding (pytree-stable for scan)."""
+    mixer, ffn = spec
+    aux = ZERO_AUX()
+    new_cache: dict[str, Any] = {}
+
+    if mixer == "mamba":
+        if decode:
+            out, nc = mamba2.mamba_decode(params["mixer_ssm"], x, cache["mixer"], cfg=cfg)
+            new_cache["mixer"] = nc
+        else:
+            out = mamba2.mamba_mixer(params["mixer_ssm"], x, cfg=cfg)
+    else:
+        window = cfg.window if mixer == "attn_local" else None
+        causal = mixer != "attn_enc"
+        out, nc = attention(
+            params["mixer_attn"], x, cfg=cfg, positions=positions,
+            causal=causal, window=window,
+            cache=cache.get("mixer") if decode else None,
+        )
+        if decode:
+            new_cache["mixer"] = nc
+    x = x + out
+
+    if "cross" in params:
+        if decode:
+            # Static cross cache: k/v precomputed from enc_out at cache init.
+            cout, _ = attention(
+                params["cross"], x, cfg=cfg, positions=positions,
+                kv=None, causal=False, cache=None,
+                static_kv=cache["cross"],
+            )
+            new_cache["cross"] = cache["cross"]
+        else:
+            S_kv = enc_out.shape[1]
+            cout, _ = attention(
+                params["cross"], x, cfg=cfg, positions=positions,
+                kv=enc_out,
+                kv_positions=jnp.arange(S_kv)[None, :],
+                causal=False,
+            )
+        x = x + cout
+
+    if ffn == "mlp":
+        x = x + mlp(params["ffn_mlp"], x, cfg=cfg)
+    elif ffn == "moe":
+        out, aux = moe_lib.moe(params["ffn_moe"], x, cfg=cfg)
+        x = x + out
+    return x, aux, new_cache
+
+
+# ------------------------------------------------------------------ stacks ---
+class StackSpec(NamedTuple):
+    period: tuple          # block specs within one period
+    n_periods: int
+    has_cross: bool = False
+
+
+def init_stack(key, stack: StackSpec, cfg):
+    def one_period(k):
+        ks = jax.random.split(k, len(stack.period))
+        return {
+            f"b{i}": init_block(ks[i], spec, cfg, has_cross=stack.has_cross)
+            for i, spec in enumerate(stack.period)
+        }
+
+    keys = jax.random.split(key, stack.n_periods)
+    return jax.vmap(one_period)(keys)
+
+
+def _acc_aux(a, b):
+    return jax.tree.map(lambda u, v: u + v, a, b)
+
+
+def run_stack(
+    params, x, stack: StackSpec, cfg, *, positions, enc_out=None,
+    caches=None, decode=False, remat: bool | None = None,
+):
+    """Scan the stack. Returns (x, aux, new_caches)."""
+    decode_f = decode
+    if remat is None:
+        remat = cfg.remat == "full" and not decode
+
+    def period_body(carry, xs):
+        x, aux = carry
+        p = xs[0] if decode_f else xs
+        c = xs[1] if decode_f else None
+        ncs = {}
+        for i, spec in enumerate(stack.period):
+            x, a, nc = apply_block(
+                p[f"b{i}"], x, spec, cfg, positions=positions, enc_out=enc_out,
+                cache=(c[f"b{i}"] if decode_f else None), decode=decode_f,
+            )
+            aux = _acc_aux(aux, a)
+            ncs[f"b{i}"] = nc
+        return (x, aux), ncs
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    xs = (params, caches) if decode_f else params
+    if getattr(cfg, "unroll_stacks", False):
+        # Python-unrolled variant (dry-run cost probes: makes cost_analysis
+        # see every layer, since XLA counts while bodies only once).
+        carry = (x, ZERO_AUX())
+        ys = []
+        for i in range(stack.n_periods):
+            xi = jax.tree.map(lambda l: l[i], xs)
+            carry, y = body(carry, xi)
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *ys) if ys and ys[0] else None
+        return x, aux, new_caches
+    (x, aux), new_caches = jax.lax.scan(body, (x, ZERO_AUX()), xs)
+    return x, aux, new_caches
+
+
+def init_stack_cache(stack: StackSpec, cfg, batch: int, max_len: int, dtype,
+                     enc_out=None, params=None):
+    """Decode cache for a stack (leading n_periods dim on every leaf)."""
+    def block_cache(spec, block_params):
+        mixer, _ = spec
+        c: dict[str, Any] = {}
+        if mixer == "mamba":
+            c["mixer"] = mamba2.init_mamba_cache(cfg, batch, dtype)
+        else:
+            c["mixer"] = init_attn_cache(cfg, batch, max_len, dtype)
+        if stack.has_cross:
+            # Precompute the encoder K/V once (static across decode steps).
+            from .layers import _split_heads
+
+            k = enc_out @ block_params["cross"]["wk"]
+            v = enc_out @ block_params["cross"]["wv"]
+            c["cross"] = {
+                "k": _split_heads(k, cfg.n_kv_heads, cfg.hd).astype(dtype),
+                "v": _split_heads(v, cfg.n_kv_heads, cfg.hd).astype(dtype),
+            }
+        return c
+
+    def one_period(block_params):
+        return {
+            f"b{i}": block_cache(spec, block_params[f"b{i}"] if block_params else None)
+            for i, spec in enumerate(stack.period)
+        }
+
+    if stack.has_cross:
+        return jax.vmap(one_period)(params)
+    # No params needed; broadcast a single period cache.
+    one = one_period(None)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (stack.n_periods,) + l.shape), one
+    )

@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW, LR schedules, gradient compression."""
+from . import adamw, compression, schedule
+from .adamw import AdamWConfig, OptState, global_norm
+from .schedule import warmup_cosine
+
+__all__ = ["adamw", "compression", "schedule", "AdamWConfig", "OptState",
+           "global_norm", "warmup_cosine"]

@@ -1,0 +1,69 @@
+"""AdamW over pytrees, fsdp-friendly: optimizer moments are plain pytrees
+with the same structure as params, so they inherit the exact param sharding
+(ZeRO-style: a 67B model's Adam state is ~3 GB/chip on the 256-chip mesh).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: any
+    nu: any
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    # Unzip the 3-tuples back into separate trees.
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x[0], tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_leaf)
+    mu = jax.tree.map(lambda t: t[1], out, is_leaf=is_leaf)
+    nu = jax.tree.map(lambda t: t[2], out, is_leaf=is_leaf)
+    return new_params, OptState(mu=mu, nu=nu, count=count), {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr)
+    }

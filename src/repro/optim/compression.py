@@ -1,0 +1,69 @@
+"""Gradient compression for the slow (cross-pod / DCN) reduction axis.
+
+int8 block quantisation with **error feedback**: each step quantises
+(grad + residual), exchanges the int8 payload, and carries the quantisation
+error to the next step — the standard trick that keeps convergence
+unaffected while cutting cross-pod gradient bytes ~4x v.s. f32.
+
+Wire format honesty: with per-shard scales a plain int8 psum is not
+expressible (no common scale), so the exchange is an **all-gather of the
+int8 payload (+ per-block f32 scales, 1/block overhead)** followed by a
+local dequantise-accumulate.  For the pod axis (2-4 participants) the
+all-gather moves the same bytes as a reduce and every byte on the wire is
+int8.  Intra-pod reductions stay full precision on fast ICI.
+
+Used inside a shard_map over the compression axis; see
+train/train_step.py::compressed_grad_sync and tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x, *, block: int = 256):
+    """Symmetric int8 per-block quantisation. Returns (q, scales, shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, x.shape
+
+
+def dequantize(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def compressed_pmean(x, residual, axis_name, *, block: int = 256):
+    """Error-feedback compressed mean-reduction of ``x`` over ``axis_name``.
+
+    Must run inside shard_map with ``axis_name`` manual.
+    Returns (mean_x, new_residual)."""
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    v = x.astype(jnp.float32) + residual
+    q, scale, shape = quantize(v, block=block)
+    new_residual = v - dequantize(q, scale, shape)
+    # int8 + scales on the wire.
+    qg = jax.lax.all_gather(q, axis_name)          # (n, blocks, block) int8
+    sg = jax.lax.all_gather(scale, axis_name)      # (n, blocks, 1) f32
+    summed = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    flat = summed.reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    mean = (flat[:size].reshape(shape) / n).astype(x.dtype)
+    return mean, new_residual
+
+
+def wire_bytes(x, *, block: int = 256) -> int:
+    """Bytes this tensor puts on the compression axis per exchange."""
+    n = x.size
+    blocks = -(-n // block)
+    return n * 1 + blocks * 4          # int8 payload + f32 scales

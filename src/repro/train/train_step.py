@@ -1,0 +1,107 @@
+"""Train / serve step factories.
+
+`make_train_step(model, opt_cfg, microbatches)` builds the jit-able
+   (state, batch) -> (state, metrics)
+with optional microbatch gradient accumulation via lax.scan — the scan also
+lets XLA overlap each microbatch's backward collectives with the next
+microbatch's compute (latency hiding on the DP axis).
+
+`make_serve_step(model)` builds the one-token greedy decode step with a
+donated cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, OptState
+from repro.optim.schedule import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: any
+    opt: OptState
+    step: jax.Array
+
+
+def init_state(model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _split_microbatches(batch, k: int):
+    def sp(x):
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig = AdamWConfig(), *,
+                    microbatches: int = 1, schedule=None):
+    sched = schedule or (lambda s: warmup_cosine(s))
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+        else:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def mb_step(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb
+                )
+                acc_g, acc_l, acc_m = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, g)
+                return (acc_g, acc_l + l, jax.tree.map(jnp.add, acc_m, m)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            zero_m = {"ce": jnp.zeros((), jnp.float32),
+                      "moe_lb_loss": jnp.zeros((), jnp.float32),
+                      "moe_z_loss": jnp.zeros((), jnp.float32)}
+            (grads, loss, metrics), _ = jax.lax.scan(
+                mb_step, (zero_g, jnp.zeros((), jnp.float32), zero_m), mbs
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+
+        new_params, new_opt, om = adamw.update(
+            grads, state.opt, state.params, opt_cfg,
+            lr_scale=sched(state.step),
+        )
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, last_tokens):
+        """Greedy one-token decode. last_tokens: (B, 1) int32."""
+        logits, cache = model.decode_step(params, cache, last_tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return cache, nxt
+
+    return serve_step
+
+
+def make_prefill_step(model):
+    """Forward pass only (inference prefill) — the prefill_32k dry-run cell."""
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    return prefill_step

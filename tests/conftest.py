@@ -1,0 +1,9 @@
+"""Test config: f64 for solver numerics (models pin their own dtypes).
+
+NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
+benches must see the real single device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see test_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,126 @@
+"""Block coordinate ascent (Algorithm 1): ascent, optimality, recovery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve_bcd
+from repro.core.bcd import (
+    augmented_objective, leading_sparse_component, primal_value,
+    solve_bcd_with_history, solve_tau,
+)
+from repro.core.first_order import solve_first_order
+from repro.core.validate import cardinality, is_psd, kkt_gap
+
+
+def _gaussian_cov(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    F = rng.normal(size=(m, n))
+    return (F.T @ F) / m
+
+
+def test_objective_monotone_ascent():
+    Sigma = _gaussian_cov(25, 40)
+    lam = 0.3 * float(np.max(np.diag(Sigma)))
+    res = solve_bcd_with_history(jnp.asarray(Sigma), lam, max_sweeps=8)
+    h = np.asarray(res.history)
+    assert np.all(np.diff(h) >= -1e-9), f"objective decreased: {h}"
+
+
+def test_kkt_certificate():
+    Sigma = _gaussian_cov(30, 50, seed=1)
+    lam = 0.4 * float(np.max(np.diag(Sigma)))
+    res = solve_bcd(jnp.asarray(Sigma), lam, beta=1e-6, max_sweeps=50, tol=1e-13)
+    gap, viol = kkt_gap(res.X, Sigma, lam, res.beta)
+    assert float(viol) < 1e-6, "stationarity violated"
+    assert 0 <= float(gap) < 1e-4, f"gap {float(gap)}"
+    assert is_psd(res.X)
+    assert abs(float(jnp.trace(res.Z)) - 1.0) < 1e-10
+
+
+def test_matches_first_order_bounds():
+    """BCD primal must sit under the first-order method's dual bound and
+    above its primal iterates (sandwich certificate)."""
+    Sigma = _gaussian_cov(20, 30, seed=2)
+    lam = 0.35 * float(np.max(np.diag(Sigma)))
+    res = solve_bcd(jnp.asarray(Sigma), lam, beta=1e-7, max_sweeps=60, tol=1e-13)
+    fo = solve_first_order(Sigma, lam, max_iters=2000, eps=1e-3)
+    assert float(res.phi) <= fo.dual_history.min() + 1e-4
+    assert float(res.phi) >= fo.primal_history.max() - 1e-4
+
+
+def test_spiked_model_support_recovery():
+    """Paper Fig 1 (right) setting: Sigma = u u^T + V V^T / m (entries of u
+    bounded away from zero so support recovery is information-theoretically
+    clean at this n/m)."""
+    rng = np.random.default_rng(3)
+    n, m, k = 50, 250, 5
+    u = np.zeros(n)
+    idx = rng.choice(n, k, replace=False)
+    u[idx] = rng.choice([-1.0, 1.0], size=k) / np.sqrt(k)
+    V = rng.normal(size=(n, m))
+    Sigma = 10.0 * np.outer(u, u) + (V @ V.T) / m
+    res = solve_bcd(jnp.asarray(Sigma), lam=1.0, max_sweeps=30, tol=1e-12)
+    x = np.asarray(leading_sparse_component(res.Z))
+    assert set(np.flatnonzero(x)) == set(idx)
+    assert abs(x @ u) > 0.9
+
+
+def test_pallas_qp_path_identical():
+    Sigma = _gaussian_cov(20, 30, seed=4)
+    lam = 0.4 * float(np.max(np.diag(Sigma)))
+    r1 = solve_bcd(jnp.asarray(Sigma), lam, max_sweeps=10)
+    r2 = solve_bcd(jnp.asarray(Sigma), lam, max_sweeps=10, qp_impl="pallas")
+    np.testing.assert_allclose(np.asarray(r1.X), np.asarray(r2.X),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_solve_tau_stationarity():
+    for R2, c, beta in [(1.0, -2.0, 1e-3), (0.0, 3.0, 1e-2), (50.0, 0.0, 1e-4)]:
+        tau = float(solve_tau(jnp.float64(R2), jnp.float64(c), jnp.float64(beta)))
+        g = tau + c - R2 / tau**2 - beta / tau
+        assert abs(g) < 1e-6, (R2, c, beta, tau, g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(5, 24),
+    seed=st.integers(0, 10_000),
+    lam_frac=st.floats(0.05, 0.9),
+)
+def test_property_solver_invariants(n, seed, lam_frac):
+    """For random covariances: Z is PSD trace-1, the KKT gap certifies
+    optimality whenever the certificate is well-conditioned (see
+    validate.kkt_gap docstring), and phi beats every rank-one candidate."""
+    Sigma = _gaussian_cov(n, n + 10, seed=seed)
+    lam = lam_frac * float(np.max(np.diag(Sigma)))
+    res = solve_bcd(jnp.asarray(Sigma), lam, beta=1e-6, max_sweeps=40, tol=1e-12)
+    assert is_psd(res.Z, tol=1e-7)
+    assert abs(float(jnp.trace(res.Z)) - 1.0) < 1e-8
+    gap, viol = kkt_gap(res.X, Sigma, lam, res.beta)
+    # Validity must ALWAYS hold; tightness depends on certificate
+    # conditioning (near-singular X degrades beta*X^-1 — see validate.py).
+    # Exact-optimality tightness is covered by test_kkt_certificate and the
+    # first-order cross-checks on fixed seeds.
+    assert float(gap) > -1e-8
+    if float(viol) < 1e-6:  # well-conditioned -> reasonably tight
+        assert float(gap) < 2e-2 * max(1.0, float(res.phi))
+    else:  # near-singular X: clipped-U bound stays valid, may be loose
+        assert float(gap) < 1.0 * max(1.0, float(res.phi))
+    # phi >= best e_i e_i^T candidate max_i (Sigma_ii - lam), up to the
+    # logdet-barrier bias (phi is the barrier solution's primal value, which
+    # sits O(beta-bias) below the true optimum).
+    best_unit = float(np.max(np.diag(Sigma))) - lam
+    assert float(res.phi) >= best_unit - 5e-3 * max(1.0, abs(best_unit))
+
+
+def test_small_lambda_matches_first_order_dual():
+    """Where the KKT certificate degrades (small lambda, near-singular X),
+    cross-check optimality against the first-order dual directly."""
+    Sigma = _gaussian_cov(5, 15, seed=0)
+    lam = 0.05 * float(np.max(np.diag(Sigma)))
+    res = solve_bcd(jnp.asarray(Sigma), lam, beta=1e-6, max_sweeps=60,
+                    tol=1e-14, qp_sweeps=16)
+    fo = solve_first_order(Sigma, lam, max_iters=3000, eps=1e-4)
+    assert float(res.phi) >= fo.primal_history.max() - 1e-4
+    assert float(res.phi) <= fo.dual_history.min() + 1e-4

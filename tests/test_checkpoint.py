@@ -1,0 +1,93 @@
+"""Checkpoint format: roundtrip, atomicity, pruning, trainer resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+from repro.configs.base import ModelConfig
+from repro.data import PipelineConfig, TokenPipeline
+from repro.models import build_model
+from repro.train import Trainer, TrainerConfig, init_state, make_train_step
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.int32), "c": jnp.zeros(())},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    assert ck.latest_step(str(tmp_path)) == 5
+    r = ck.restore(str(tmp_path), 5, jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_tmp_never_visible(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # a stale .tmp dir must not be picked up as a checkpoint
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_incomplete_manifest_ignored(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    d = tmp_path / "step_000000009"
+    os.makedirs(d)
+    with open(d / "manifest.json", "w") as f:
+        json.dump({"step": 9, "complete": False, "leaves": {}}, f)
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_prune_keeps_newest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t)
+    ck.prune(str(tmp_path), keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    assert not os.path.exists(tmp_path / "step_000000001")
+    assert os.path.exists(tmp_path / "step_000000004")
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        ck.restore(str(tmp_path), 1, {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+def test_trainer_resume_exact(tmp_path):
+    """Uninterrupted 8-step run == (5 steps, crash, resume, 3 steps)."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                      dtypes=("float32", "float32"))
+    m = build_model(cfg)
+    step = jax.jit(make_train_step(m))
+    pipe = TokenPipeline(PipelineConfig(vocab_size=128, batch=4, seq_len=16))
+
+    # continuous run
+    s_cont = init_state(m, jax.random.PRNGKey(0))
+    for t in range(8):
+        s_cont, _ = step(s_cont, {"tokens": jnp.asarray(pipe.batch_at(t))})
+
+    # interrupted run
+    d1 = str(tmp_path / "interrupted")
+    tr1 = Trainer(step, pipe, TrainerConfig(total_steps=5, ckpt_every=5,
+                                            ckpt_dir=d1, log_every=100))
+    tr1.run(init_state(m, jax.random.PRNGKey(0)))
+    tr2 = Trainer(step, pipe, TrainerConfig(total_steps=8, ckpt_every=100,
+                                            ckpt_dir=d1, log_every=100))
+    s_res = tr2.run(init_state(m, jax.random.PRNGKey(1)))  # init is discarded
+
+    assert any(e["kind"] == "resume" for e in tr2.events)
+    for a, b in zip(jax.tree.leaves(s_cont.params), jax.tree.leaves(s_res.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)

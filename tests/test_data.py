@@ -1,0 +1,87 @@
+"""Corpus generation + streaming statistics + LM pipeline."""
+import numpy as np
+import pytest
+
+from repro.data import (
+    PipelineConfig, TokenPipeline, make_corpus, prefetch, zipf_rates,
+)
+from repro.data.bow import StreamingGram, StreamingStats, screen_and_gram_streaming
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(
+        2000, 5000, topics={"t": ["a", "b", "c", "d"]}, seed=0
+    )
+
+
+def test_corpus_has_zipf_variance_decay(corpus):
+    _, var = corpus.column_stats_exact()
+    v = np.sort(var)[::-1]
+    # top-100 variance must dominate the tail (paper Fig. 2 property)
+    assert v[100] < 0.1 * v[0]
+    assert v[1000] < 0.01 * v[0]
+
+
+def test_topic_words_have_boosted_variance(corpus):
+    """Topic words (spliced near rank 500) must be pushed well above their
+    unboosted neighbours so they survive a reasonable lambda screen."""
+    _, var = corpus.column_stats_exact()
+    ids = corpus.topics["t"]
+    rank = np.argsort(var)[::-1]
+    positions = [int(np.where(rank == i)[0][0]) for i in ids]
+    assert all(p < 600 for p in positions), positions
+    # and strictly above same-rank unboosted words (the Poisson-mixture
+    # boost is ~1.4x at these rates; correlation does the rest for SPCA)
+    unboosted = var[rank[600]]
+    assert all(var[i] > 1.2 * unboosted for i in ids)
+
+
+def test_streaming_stats_match_exact(corpus):
+    mean_e, var_e = corpus.column_stats_exact()
+    st = StreamingStats(corpus.n_words)
+    for b in corpus.batches(256):
+        st.update(b)
+    sc = st.finalize()
+    np.testing.assert_allclose(np.asarray(sc.variances), var_e, rtol=1e-5, atol=1e-8)
+    assert int(sc.count) == corpus.n_docs
+
+
+def test_streaming_gram_matches_exact(corpus):
+    _, var = corpus.column_stats_exact()
+    lam = np.sort(var)[::-1][20]
+    Sig, sup, screen = screen_and_gram_streaming(
+        lambda: corpus.batches(256), corpus.n_words, lam
+    )
+    A = corpus.columns_dense(sup)
+    A = A - A.mean(0, keepdims=True)
+    np.testing.assert_allclose(
+        Sig, (A.T @ A) / corpus.n_docs, rtol=1e-4, atol=1e-6
+    )
+
+
+def test_batches_cover_all_docs(corpus):
+    total = sum(b.sum() for b in corpus.batches(300))
+    assert abs(total - corpus.counts.sum()) < 1e-3 * corpus.counts.sum()
+
+
+def test_pipeline_deterministic_and_seekable():
+    tp = TokenPipeline(PipelineConfig(vocab_size=1000, batch=4, seq_len=16, seed=3))
+    assert (tp.batch_at(7) == tp.batch_at(7)).all()
+    assert not (tp.batch_at(7) == tp.batch_at(8)).all()
+    assert tp.batch_at(0).shape == (4, 16)
+    assert tp.batch_at(0).max() < 1000
+
+
+def test_pipeline_host_slice_partition():
+    tp = TokenPipeline(PipelineConfig(vocab_size=100, batch=8, seq_len=4))
+    full = tp.batch_at(3)
+    assert full.shape == (8, 4)
+    # host slices are independent draws keyed by (seed, step, lo) — shapes only
+    part = tp.batch_at(3, host_lo=4, host_hi=8)
+    assert part.shape == (4, 4)
+
+
+def test_prefetch_preserves_order():
+    out = list(prefetch(iter(range(10)), size=3))
+    assert out == list(range(10))

@@ -1,0 +1,70 @@
+"""Dry-run harness units that don't need 512 devices: HLO collective
+parser, probe config construction, cell enumeration, input specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, cells, get_config
+from repro.launch.dryrun import _probe_cfg, collective_bytes
+from repro.launch.inputs import train_batch_struct
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,512,1024]{2,1,0} all-gather(%x), replica_groups={}, dimensions={1}
+  %ar = f32[256,128]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = s32[8,8]{1,0} all-to-all(%w), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+  %not_a_coll = f32[10,10]{1,0} add(%a, %b)
+  %ags = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%q), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 512 * 1024 * 2 + 2 * (2 * 2 * 2)
+    assert out["all-reduce"] == 256 * 128 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+    assert out["n_ops"] == 6
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_probe_cfg_consistent(arch):
+    cfg = get_config(arch)
+    for n in (2, 4):
+        pc = _probe_cfg(cfg, n)
+        pc.validate()
+        assert pc.unroll_stacks
+        assert pc.periods == n
+        assert len(pc.layer_list()) == len(cfg.period) * n
+
+
+def test_cells_enumeration():
+    runnable = cells()
+    everything = cells(include_skipped=True)
+    assert len(everything) == len(ARCH_NAMES) * len(SHAPES) == 40
+    skipped = [c for c in everything if c[2]]
+    assert len(skipped) == 7
+    for arch, shape, _ in skipped:
+        assert shape == "long_500k"
+        assert not get_config(arch).sub_quadratic
+    assert len(runnable) == 33
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_batch_struct_shapes(arch):
+    cfg = get_config(arch)
+    s = SHAPES["train_4k"]
+    b = train_batch_struct(cfg, s)
+    total = b["tokens"].shape[1] + (cfg.num_patches or 0)
+    assert total == s.seq_len
+    assert b["tokens"].shape[0] == s.global_batch
+    if cfg.is_encoder_decoder:
+        assert b["enc_frames"].shape == (s.global_batch, cfg.encoder_seq, cfg.d_model)

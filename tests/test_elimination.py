@@ -1,0 +1,80 @@
+"""Safe feature elimination (Thm 2.1): safety, streaming merge, sizing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elimination, solve_bcd
+from repro.core.bcd import leading_sparse_component
+from repro.core.elimination import (
+    Screen, combine_screens, eliminate, feature_variances, lam_for_target_size,
+    safe_support,
+)
+
+
+def _corpus(m=200, n=30, seed=0):
+    rng = np.random.default_rng(seed)
+    scales = 1.0 / np.arange(1, n + 1) ** 1.2
+    return rng.normal(size=(m, n)) * scales[None, :] * 3.0
+
+
+def test_variances_match_numpy():
+    A = _corpus()
+    s = feature_variances(jnp.asarray(A))
+    np.testing.assert_allclose(s.variances, A.var(axis=0), rtol=1e-10)
+    np.testing.assert_allclose(s.means, A.mean(axis=0), rtol=1e-10)
+
+
+def test_safety_theorem():
+    """Features eliminated by (3) are absent from the solution computed
+    WITHOUT elimination — the theorem's claim, checked end-to-end."""
+    A = _corpus(m=300, n=20, seed=1)
+    Ac = A - A.mean(0, keepdims=True)
+    Sigma = (Ac.T @ Ac) / A.shape[0]
+    lam = float(np.sort(np.diag(Sigma))[-6])  # keeps ~6 features
+    res = solve_bcd(jnp.asarray(Sigma), lam, max_sweeps=30, tol=1e-12)
+    x = np.asarray(leading_sparse_component(res.Z))
+    eliminated = np.flatnonzero(np.diag(Sigma) < lam)
+    assert np.all(x[eliminated] == 0.0), (
+        "an eliminated feature appears in the full-problem solution"
+    )
+
+
+def test_reduced_solution_matches_full():
+    """Solving the reduced problem gives the same component as the full one."""
+    A = _corpus(m=300, n=25, seed=2)
+    Ac = A - A.mean(0, keepdims=True)
+    Sigma = (Ac.T @ Ac) / A.shape[0]
+    lam = float(np.sort(np.diag(Sigma))[-5])
+    full = solve_bcd(jnp.asarray(Sigma), lam, max_sweeps=30, tol=1e-12)
+    x_full = np.asarray(leading_sparse_component(full.Z))
+
+    A_red, support, screen = eliminate(jnp.asarray(A), lam)
+    Sig_red = elimination.reduced_covariance(A_red)
+    red = solve_bcd(Sig_red, lam, max_sweeps=30, tol=1e-12)
+    x_red = np.asarray(leading_sparse_component(red.Z))
+    x_emb = np.zeros_like(x_full)
+    x_emb[np.asarray(support)] = x_red
+    assert abs(abs(x_emb @ x_full) - 1.0) < 1e-5
+
+
+def test_streaming_combine_matches_global():
+    A = _corpus(m=256, n=40, seed=3)
+    parts = []
+    for i in range(4):
+        blk = jnp.asarray(A[i * 64 : (i + 1) * 64])
+        parts.append(feature_variances(blk))
+    merged = combine_screens(parts)
+    np.testing.assert_allclose(merged.variances, A.var(axis=0), rtol=1e-8)
+    np.testing.assert_allclose(merged.means, A.mean(axis=0), rtol=1e-8)
+
+
+def test_lam_for_target_size():
+    v = np.array([5.0, 4.0, 3.0, 2.0, 1.0])
+    lam = lam_for_target_size(v, 2)
+    assert (v >= lam).sum() == 2
+    assert safe_support(v, lam).tolist() == [0, 1]
+
+
+def test_support_conservative():
+    v = np.array([1.0, 0.5, 0.49999, 2.0])
+    assert safe_support(v, 0.5).tolist() == [0, 1, 3]

@@ -1,0 +1,89 @@
+"""Per-kernel correctness: shape/dtype sweeps, kernel (interpret) vs ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bcd_sweep import qp_sweep_pallas
+from repro.kernels.gram import gram_pallas
+from repro.kernels.variance import column_stats_pallas
+
+SHAPES = [(64, 64), (100, 50), (256, 512), (300, 700), (8, 128), (513, 129)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_variance_kernel(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    A = jnp.asarray(rng.normal(size=shape), dtype)
+    s1, ss1 = column_stats_pallas(A, interpret=True)
+    s2, ss2 = ref.column_stats_ref(A)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(s1, s2, rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(ss1, ss2, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_kernel(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31 + 1)
+    A = jnp.asarray(rng.normal(size=shape), dtype)
+    C1 = gram_pallas(A, interpret=True)
+    C2 = ref.gram_ref(A)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(C1, C2, rtol=tol, atol=tol * 20)
+
+
+@pytest.mark.parametrize("n", [8, 60, 128, 200, 333])
+@pytest.mark.parametrize("sweeps", [1, 3])
+def test_qp_sweep_kernel(n, sweeps):
+    rng = np.random.default_rng(n)
+    F = rng.normal(size=(n + 10, n))
+    X = F.T @ F / (n + 10)
+    j = n // 3
+    mask = np.ones(n)
+    mask[j] = 0
+    Y = jnp.asarray(X * mask[:, None] * mask[None, :], jnp.float32)
+    s = jnp.asarray(rng.normal(size=n) * mask, jnp.float32)
+    lam = jnp.float32(0.3)
+    u1, w1, r1 = qp_sweep_pallas(Y, s, lam, s, j, sweeps=sweeps, interpret=True)
+    u2, w2, r2 = ref.qp_sweep_ref(Y, s, lam, s, j, sweeps)
+    np.testing.assert_allclose(u1, u2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r1, r2, rtol=1e-4, atol=1e-5)
+
+
+def test_qp_sweep_feasibility_and_descent():
+    """Property: the kernel's iterate stays in the box and never increases
+    the QP objective."""
+    rng = np.random.default_rng(7)
+    n = 50
+    F = rng.normal(size=(n + 5, n))
+    Y = jnp.asarray(F.T @ F / n, jnp.float32)
+    mask = np.ones(n); mask[4] = 0
+    Y = Y * mask[:, None] * mask[None, :]
+    s = jnp.asarray(rng.normal(size=n) * mask, jnp.float32)
+    lam = 0.5
+    obj_prev = float(s @ Y @ s)
+    for sweeps in (1, 2, 4, 8):
+        u, w, r2 = qp_sweep_pallas(Y, s, jnp.float32(lam), s, 4,
+                                   sweeps=sweeps, interpret=True)
+        assert float(jnp.max(jnp.abs(u - s))) <= lam + 1e-5
+        assert float(r2) <= obj_prev + 1e-4
+        obj_prev = float(r2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(5, 100), n=st.integers(2, 80), seed=st.integers(0, 999))
+def test_property_gram_psd_and_variance_nonneg(m, n, seed):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    C = gram_pallas(A, interpret=True)
+    w = np.linalg.eigvalsh(np.asarray(C, np.float64))
+    assert w[0] > -1e-2 * max(1.0, w[-1])
+    s, ss = column_stats_pallas(A, interpret=True)
+    var = np.asarray(ss) / m - (np.asarray(s) / m) ** 2
+    assert (var > -1e-4).all()

@@ -1,0 +1,144 @@
+"""Model-zoo behaviour: decode==forward, flash==vanilla, loss sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model, param_count
+from repro.models.layers import flash_attention
+
+F32 = ("float32", "float32")
+V = 128
+
+
+def _toks(B=2, S=16, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, V)
+
+
+def _check_decode(cfg, batch, tol=2e-3):
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    logits_full, _ = jax.jit(m.forward)(params, batch)
+    toks = batch["tokens"]
+    B, S = toks.shape
+    if cfg.is_encoder_decoder:
+        cache = m.init_cache(params, batch, S + 2, dtype=jnp.float32)
+    else:
+        cache = m.init_cache(params, B, S + 2, dtype=jnp.float32)
+    step = jax.jit(m.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t : t + 1])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - logits_full)))
+    scale = max(float(jnp.max(jnp.abs(logits_full))), 1.0)
+    assert err < tol * scale, f"{cfg.name}: decode mismatch {err} (scale {scale})"
+
+
+def test_decode_matches_forward_dense():
+    cfg = ModelConfig(name="d", family="dense", n_layers=3, d_model=48,
+                      n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=V,
+                      dtypes=F32, qkv_bias=True)
+    _check_decode(cfg, {"tokens": _toks()})
+
+
+def test_decode_matches_forward_local_window():
+    cfg = ModelConfig(name="l", family="dense", n_layers=2, d_model=48,
+                      n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=V,
+                      window=4, dtypes=F32, period=(("attn_local", "mlp"),))
+    _check_decode(cfg, {"tokens": _toks()})
+
+
+def test_decode_matches_forward_mamba():
+    cfg = ModelConfig(name="m", family="ssm", n_layers=3, d_model=48,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=V,
+                      dtypes=F32, period=(("mamba", None),), ssm_state=16,
+                      ssm_heads=6, ssm_chunk=4)
+    _check_decode(cfg, {"tokens": _toks()})
+
+
+def test_decode_matches_forward_hybrid_moe():
+    cfg = ModelConfig(
+        name="j", family="hybrid", n_layers=4, d_model=48, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab_size=V, dtypes=F32,
+        period=(("mamba", "mlp"), ("mamba", "moe"), ("attn", "mlp"),
+                ("mamba", "moe")),
+        n_periods=1, n_experts=4, top_k=2, moe_d_ff=32, ssm_state=8,
+        ssm_heads=4, ssm_chunk=4, moe_group_size=16,
+        capacity_factor=4.0,  # no token dropping -> decode must match exactly
+    )
+    _check_decode(cfg, {"tokens": _toks()})
+
+
+def test_decode_matches_forward_encdec():
+    cfg = ModelConfig(name="w", family="audio", n_layers=2, d_model=48,
+                      n_heads=4, n_kv_heads=4, d_ff=96, vocab_size=V,
+                      dtypes=F32, is_encoder_decoder=True,
+                      n_encoder_layers=2, encoder_seq=8)
+    frames = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 48))
+    _check_decode(cfg, {"tokens": _toks(), "enc_frames": frames})
+
+
+def test_ssd_chunk_size_invariance():
+    """The chunked SSD must be exactly invariant to the chunk size."""
+    toks = _toks(2, 24)
+    outs = []
+    for chunk in (4, 8, 24):
+        cfg = ModelConfig(name=f"m{chunk}", family="ssm", n_layers=2,
+                          d_model=32, n_heads=4, n_kv_heads=4, d_ff=0,
+                          vocab_size=V, dtypes=F32, period=(("mamba", None),),
+                          ssm_state=8, ssm_heads=4, ssm_chunk=chunk)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        lg, _ = m.forward(params, {"tokens": toks})
+        outs.append(np.asarray(lg))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_equals_vanilla_gqa():
+    rng = np.random.default_rng(0)
+    B, S, K, rep, hd = 2, 512, 2, 3, 16
+    q = jnp.asarray(rng.normal(size=(B, S, K, rep, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    pos = jnp.arange(S)[None, :]
+    for window in (None, 64):
+        out_f = flash_attention(q, k, v, pos, pos, causal=True,
+                                window=window, kv_block=128)
+        sc = jnp.einsum("bqkrd,bskd->bkrqs", q, k) * hd**-0.5
+        ok = pos[0][:, None] >= pos[0][None, :]
+        if window:
+            ok &= (pos[0][:, None] - pos[0][None, :]) < window
+        sc = jnp.where(ok[None, None, None], sc, -1e30)
+        out_v = jnp.einsum("bkrqs,bskd->bqkrd", jax.nn.softmax(sc, -1), v)
+        np.testing.assert_allclose(out_f, out_v, rtol=2e-5, atol=2e-5)
+
+
+def test_vlm_loss_aligns_text_labels():
+    cfg = ModelConfig(name="v", family="vlm", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V,
+                      dtypes=F32, num_patches=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": _toks(2, 8),
+        "image_embeds": jax.random.normal(jax.random.PRNGKey(2), (2, 4, 32)),
+    }
+    loss, metrics = m.loss(params, batch)
+    assert np.isfinite(float(loss))
+    logits, _ = m.forward(params, batch)
+    assert logits.shape == (2, 12, V)
+
+
+def test_param_count_positive_and_grad_finite():
+    cfg = ModelConfig(name="g", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V, dtypes=F32)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert param_count(params) > 0
+    g = jax.grad(lambda p: m.loss(p, {"tokens": _toks()})[0])(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))

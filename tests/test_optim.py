@@ -1,0 +1,66 @@
+"""Optimizer substrate: AdamW, schedule, clipping, compression math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw, warmup_cosine
+from repro.optim.compression import dequantize, quantize, wire_bytes
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)))
+    params = {"w": jnp.zeros((8, 8))}
+    opt = adamw.init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw.update(g, opt, params, cfg)
+
+    for _ in range(300):
+        params, opt, m = step(params, opt)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw.init(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw.update(g, opt, params, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported norm is pre-clip
+
+
+def test_optimizer_state_structure_matches_params():
+    params = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.zeros((2,))}}
+    opt = adamw.init(params)
+    assert jax.tree.structure(opt.mu) == jax.tree.structure(params)
+    assert jax.tree.structure(opt.nu) == jax.tree.structure(params)
+
+
+def test_schedule_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert abs(float(warmup_cosine(10, warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(warmup_cosine(100, warmup=10, total=100))
+    assert abs(end - 0.1) < 1e-6  # floor
+    mid = float(warmup_cosine(55, warmup=10, total=100))
+    assert 0.1 < mid < 1.0
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1024,)) * 5.0)
+    q, s, shape = quantize(x, block=128)
+    xr = dequantize(q, s, shape)
+    blockmax = np.abs(np.asarray(x).reshape(-1, 128)).max(1)
+    # per-block error <= scale/2 = max/254
+    err = np.abs(np.asarray(xr - x)).reshape(-1, 128).max(1)
+    assert (err <= blockmax / 254 + 1e-7).all()
+
+
+def test_wire_bytes_compression_ratio():
+    x = jnp.zeros((1 << 20,), jnp.float32)
+    ratio = (x.size * 4) / wire_bytes(x)
+    assert ratio > 3.8  # ~4x vs f32

@@ -1,0 +1,61 @@
+"""End-to-end driver: lambda search, deflation, topic recovery."""
+import numpy as np
+import pytest
+
+from repro.core import SPCAConfig, fit_components, search_lambda, solve_at_lambda
+
+
+def _planted(m=3000, n=400, seed=0, k=4, boost=6.0):
+    rng = np.random.default_rng(seed)
+    base = 0.5 / np.arange(1, n + 1) ** 1.1
+    X = rng.poisson(base[None, :] * 8, size=(m, n)).astype(np.float64)
+    topics = [list(range(i * k, (i + 1) * k)) for i in range(3)]
+    seg = m // 3
+    for t, words in enumerate(topics):
+        X[t * seg : (t + 1) * seg, words] += rng.poisson(boost, size=(seg, k))
+    return X, topics
+
+
+def test_lambda_search_hits_cardinality():
+    X, _ = _planted()
+    cfg = SPCAConfig(max_sweeps=10, lam_search_evals=10)
+    r = search_lambda(X, target_card=4, cfg=cfg)
+    assert 4 <= r.cardinality <= 6
+    assert r.reduced_n <= 100, "elimination failed to shrink the problem"
+
+
+def test_topics_recovered_disjoint():
+    X, topics = _planted()
+    cfg = SPCAConfig(max_sweeps=10, lam_search_evals=8)
+    pcs = fit_components(X, 3, target_card=4, cfg=cfg)
+    supports = [set(pc.support.tolist()) for pc in pcs]
+    # disjoint (word-removal deflation)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert not (supports[i] & supports[j])
+    # each planted topic matched by some component
+    for t in topics:
+        assert any(s == set(t) for s in supports), (supports, topics)
+
+
+def test_project_deflation_orthogonalish():
+    X, _ = _planted(m=1500, n=200, seed=1)
+    cfg = SPCAConfig(max_sweeps=8, lam_search_evals=6)
+    pcs = fit_components(X, 2, target_card=4, cfg=cfg, deflation="project")
+    x0, x1 = pcs[0].x, pcs[1].x
+    c = abs(x0 @ x1) / (np.linalg.norm(x0) * np.linalg.norm(x1))
+    assert c < 0.3
+
+
+def test_solve_at_lambda_explained_variance_reasonable():
+    X, topics = _planted()
+    Xc = X - X.mean(0, keepdims=True)
+    Sigma = (Xc.T @ Xc) / X.shape[0]
+    r = search_lambda(X, target_card=4, cfg=SPCAConfig(max_sweeps=10))
+    # the sparse PC should capture most of the variance of the best
+    # same-cardinality planted topic direction
+    best = 0.0
+    for t in topics:
+        v = np.zeros(X.shape[1]); v[t] = 1.0 / np.sqrt(len(t))
+        best = max(best, v @ Sigma @ v)
+    assert r.variance >= 0.8 * best
