@@ -1,0 +1,17 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, reps: int = 5) -> float:
+    """Mean seconds per call, blocking on device completion every rep so
+    async dispatch can't hide per-call latency."""
+    jax.block_until_ready(fn(*args))  # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps

@@ -3,25 +3,15 @@
 its timing on CPU measures the interpreter, not the kernel)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import timeit as _timeit
 from repro.kernels import ref
 from repro.kernels.bcd_sweep import qp_sweep_pallas
 from repro.kernels.gram import gram_pallas
 from repro.kernels.variance import column_stats_pallas
-
-
-def _timeit(fn, *args, reps=5):
-    fn(*args)  # warm-up/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
 
 
 def run():

@@ -1,0 +1,94 @@
+"""Serving-layer bench: projector hot path, sparse-doc path, batcher loop.
+
+Mirrors bench_kernels.py: latency of the production (jnp-oracle) path on
+CPU plus a correctness delta for the Pallas gather kernel in interpret mode
+(whose CPU timing would measure the interpreter, not the kernel).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import timeit as _timeit
+from repro.core.spca import PCResult
+from repro.kernels import ops, ref
+from repro.serve import BatcherConfig, MicroBatcher, TopicProjector, pack_components
+
+
+def _fake_components(n: int, k: int, card: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    results = []
+    for c in range(k):
+        sup = np.sort(rng.choice(n, size=card, replace=False))
+        x = np.zeros(n)
+        x[sup] = rng.normal(size=card)
+        x /= np.linalg.norm(x)
+        results.append(PCResult(
+            x=x, support=sup, lam=1.0, variance=1.0, cardinality=card,
+            reduced_n=card, gap=0.0,
+        ))
+    return results
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    B, n, k, card = 256, 20_000, 5, 5
+
+    pack = pack_components(_fake_components(n, k, card), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    X = jnp.asarray(rng.poisson(0.05, size=(B, n)).astype(np.float32))
+
+    t = _timeit(proj.project, X)
+    # Interpret-mode kernel vs oracle on a small slice (correctness delta);
+    # impl='pallas' off-TPU runs the gather kernel through the interpreter.
+    Xs = X[:64]
+    out_k = ops.sparse_project(Xs, jnp.asarray(pack.support_idx),
+                               jnp.asarray(pack.values), impl="pallas")
+    out_r = ref.sparse_project_ref(Xs, jnp.asarray(pack.support_idx),
+                                   jnp.asarray(pack.values))
+    d = float(jnp.max(jnp.abs(out_k - out_r)))
+    rows.append({
+        "name": f"serve_project_B{B}_n{n}_k{k}",
+        "us_per_call": t * 1e6,
+        "derived": f"docs_per_s={B / t:.0f} nnz={pack.nnz} "
+                   f"interp_vs_ref_maxdiff={d:.2e}",
+    })
+
+    docs = [(rng.choice(n, size=40, replace=False),
+             rng.poisson(2.0, size=40) + 1.0) for _ in range(B)]
+    t = _timeit(proj.project_docs, docs)
+    rows.append({
+        "name": f"serve_project_docs_sparse_B{B}",
+        "us_per_call": t * 1e6,
+        "derived": f"docs_per_s={B / t:.0f} touched=nnz_only",
+    })
+
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=64, max_wait_ms=1.0))
+    with mb:
+        t0 = time.perf_counter()
+        futs = [mb.submit(wi, ct) for wi, ct in docs]
+        for f in futs:
+            f.result(timeout=60)
+        wall = time.perf_counter() - t0
+    s = mb.stats.snapshot()
+    rows.append({
+        "name": "serve_batcher_roundtrip_512",
+        "us_per_call": wall / len(docs) * 1e6,
+        "derived": f"docs_per_s={len(docs) / wall:.0f} "
+                   f"p50_ms={s['p50_ms']:.2f} p99_ms={s['p99_ms']:.2f} "
+                   f"batches={mb.batches_served}",
+    })
+
+    t = _timeit(lambda: ops.sparse_project(
+        X, jnp.asarray(pack.support_idx), jnp.asarray(pack.values),
+        impl="ref"))
+    rows.append({
+        "name": f"serve_gather_vs_dense_n{n}",
+        "us_per_call": t * 1e6,
+        "derived": f"gather_cols={k * pack.cap} dense_cols={n} "
+                   f"traffic_ratio={k * pack.cap / n:.1e}",
+    })
+    return rows

@@ -9,8 +9,9 @@ import os
 import sys
 import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                      # `python benchmarks/run.py`
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import jax
 
@@ -20,7 +21,7 @@ jax.config.update("jax_enable_x64", True)
 def main() -> None:
     from benchmarks import (
         bench_complexity, bench_convergence, bench_elimination, bench_kernels,
-        bench_topics,
+        bench_serve, bench_topics,
     )
 
     suites = [
@@ -31,6 +32,7 @@ def main() -> None:
         ("Tables1-2 topics", bench_topics.run),
         ("O(n^3) complexity", bench_complexity.run),
         ("kernels", bench_kernels.run),
+        ("serving", bench_serve.run),
     ]
     print("name,us_per_call,derived")
     for label, fn in suites:

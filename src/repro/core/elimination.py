@@ -22,7 +22,10 @@ import numpy as np
 
 
 class Screen(NamedTuple):
-    """Result of the variance screen."""
+    """Result of the variance screen.
+
+    Fields are ``jax.Array``s (device-resident); note the derived support
+    from ``safe_support``/``eliminate`` is a host-side ``np.ndarray``."""
 
     variances: jax.Array  # (n,) per-feature variance Sigma_ii
     means: jax.Array      # (n,) per-feature mean (0 when center=False)
@@ -66,12 +69,16 @@ def combine_screens(partials: list[Screen]) -> Screen:
     )
 
 
-def safe_support(variances: jax.Array, lam: float) -> jax.Array:
+def safe_support(variances, lam: float) -> np.ndarray:
     """Indices of features that *survive* the safe elimination test (eq. 3).
 
     Features with ``Sigma_ii < lam`` cannot be in any optimal support of the
     cardinality-penalised problem; everything else is kept.  Conservative by
     construction (Thm 2.1 remark 2).
+
+    Accepts a jax or numpy variance vector and returns a host-side
+    ``np.ndarray`` (from ``np.flatnonzero``) — the support drives host-side
+    gather/bookkeeping, not device compute.
     """
     keep = np.flatnonzero(np.asarray(variances) >= lam)
     return keep

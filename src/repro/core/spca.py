@@ -78,11 +78,13 @@ def solve_at_lambda(
     lam: float,
     *,
     is_covariance: bool = False,
-    cfg: SPCAConfig = SPCAConfig(),
+    cfg: SPCAConfig | None = None,
     active_mask: np.ndarray | None = None,
     stats=None,
 ) -> PCResult:
     """Full pipeline for one lambda.  ``active_mask`` masks deflated features."""
+    if cfg is None:
+        cfg = SPCAConfig()
     if stats is None:
         stats = _as_stats(data, is_covariance, cfg.center)
     variances, build = stats
@@ -130,7 +132,7 @@ def search_lambda(
     target_card: int,
     *,
     is_covariance: bool = False,
-    cfg: SPCAConfig = SPCAConfig(),
+    cfg: SPCAConfig | None = None,
     active_mask: np.ndarray | None = None,
     stats=None,
 ) -> PCResult:
@@ -140,6 +142,8 @@ def search_lambda(
     we bisect and keep the best candidate: prefer cardinality in
     [target, target+slack], else closest-from-above, else closest.
     """
+    if cfg is None:
+        cfg = SPCAConfig()
     if stats is None:
         stats = _as_stats(data, is_covariance, cfg.center)
     variances, _ = stats
@@ -188,12 +192,14 @@ def fit_components(
     target_card: int = 5,
     *,
     is_covariance: bool = False,
-    cfg: SPCAConfig = SPCAConfig(),
+    cfg: SPCAConfig | None = None,
     deflation: str = "remove",
 ) -> list[PCResult]:
     """Top-k sparse PCs.  deflation='remove' drops selected features from the
     dictionary between components (paper-style disjoint topics);
     'project' applies Hotelling deflation to the covariance."""
+    if cfg is None:
+        cfg = SPCAConfig()
     results: list[PCResult] = []
     if deflation == "remove":
         stats = _as_stats(data, is_covariance, cfg.center)

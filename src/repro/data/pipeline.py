@@ -58,10 +58,24 @@ class TokenPipeline:
             t += 1
 
 
+class _PrefetchError:
+    """Wrapper carrying a worker-thread exception across the queue (a bare
+    exception instance could collide with a stream that yields exceptions)."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 def prefetch(it, size: int = 2):
     """Background-thread prefetch — overlaps host data generation with device
     compute (the CPU-side analogue of the device prefetch a real input
-    pipeline would use)."""
+    pipeline would use).
+
+    A producer-side exception is captured and re-raised here in the
+    consumer (with the worker traceback chained), instead of silently
+    truncating the stream."""
     q: queue.Queue = queue.Queue(maxsize=size)
     _END = object()
 
@@ -69,7 +83,9 @@ def prefetch(it, size: int = 2):
         try:
             for x in it:
                 q.put(x)
-        finally:
+        except BaseException as e:  # noqa: BLE001 — re-raised in consumer
+            q.put(_PrefetchError(e))
+        else:
             q.put(_END)
 
     t = threading.Thread(target=worker, daemon=True)
@@ -78,6 +94,8 @@ def prefetch(it, size: int = 2):
         x = q.get()
         if x is _END:
             return
+        if isinstance(x, _PrefetchError):
+            raise x.exc
         yield x
 
 

@@ -3,11 +3,17 @@
   variance.py  — per-column sum/sumsq screen pass     (memory-bound)
   gram.py      — reduced covariance A^T A             (MXU-bound)
   bcd_sweep.py — VMEM-resident box-QP coordinate descent (the BCD inner loop)
+  project.py   — gather-matvec document->topic projection (serving hot path)
 
 ops.py holds the jit'd wrappers (interpret=True off-TPU), ref.py the
 pure-jnp oracles every kernel is tested against.
 """
 from . import ops, ref
-from .ops import column_stats, column_variances, gram, qp_sweeps
+from .ops import (
+    column_stats, column_variances, gram, qp_sweeps, sparse_project,
+)
 
-__all__ = ["ops", "ref", "column_stats", "column_variances", "gram", "qp_sweeps"]
+__all__ = [
+    "ops", "ref", "column_stats", "column_variances", "gram", "qp_sweeps",
+    "sparse_project",
+]

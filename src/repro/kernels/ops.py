@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .bcd_sweep import qp_sweep_pallas
 from .gram import gram_pallas
+from .project import sparse_project_pallas
 from .variance import column_stats_pallas
 
 
@@ -57,3 +58,24 @@ def qp_sweeps(Y, s, lam, u0, j, *, sweeps: int = 4, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.qp_sweep_ref(Y, s, lam, u0, j, sweeps)
     return qp_sweep_pallas(Y, s, lam, u0, j, sweeps=sweeps, interpret=not _on_tpu())
+
+
+def sparse_project(X, support_idx, values, *, impl: str = "auto",
+                   block_b: int = 512):
+    """(B, k) document->topic scores through the gather representation —
+    the serving hot path (see ``repro.serve.projector``)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.sparse_project_ref(X, support_idx, values)
+    k, cap = support_idx.shape
+    B, n = X.shape
+    # Batch-transpose + zero pad row: column gather becomes row gather.
+    XT = jnp.concatenate(
+        [X.T.astype(jnp.float32), jnp.zeros((1, B), jnp.float32)], axis=0
+    )
+    idx = jnp.where(values.reshape(-1) != 0, support_idx.reshape(-1), n)
+    cid = jnp.repeat(jnp.arange(k, dtype=jnp.int32), cap)
+    out = sparse_project_pallas(
+        XT, idx.astype(jnp.int32), cid, values.reshape(-1), k, cap,
+        block_b=block_b, interpret=not _on_tpu(),
+    )
+    return out.T

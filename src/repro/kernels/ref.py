@@ -25,6 +25,23 @@ def gram_ref(A):
     return A32.T @ A32
 
 
+def sparse_project_ref(X, support_idx, values):
+    """Document->topic scores via the gather representation.
+
+    ``X`` (B, n) dense counts; ``support_idx`` (k, cap) int32 padded gather
+    indices; ``values`` (k, cap) loadings with 0.0 in padded slots.  Returns
+    (B, k) scores: score[b, c] = sum_j values[c, j] * X[b, support_idx[c, j]].
+
+    Touches only the gathered columns (B * k*cap reads), the same
+    nnz-proportional access pattern the Pallas kernel implements — padded
+    slots are harmless because their value is exactly 0.
+    """
+    k, cap = support_idx.shape
+    g = jnp.take(X, support_idx.reshape(-1), axis=1).astype(jnp.float32)
+    g = g.reshape(X.shape[0], k, cap)
+    return jnp.einsum("bkc,kc->bk", g, values.astype(jnp.float32))
+
+
 def qp_sweep_ref(Y, s, lam, u0, j, sweeps: int):
     """Box-QP coordinate descent, identical semantics to the kernel:
 

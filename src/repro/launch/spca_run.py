@@ -7,6 +7,15 @@ screen -> safe elimination -> reduced gram -> BCD -> topic tables.
 With --mesh NxM (and XLA_FLAGS device count) the variance/gram passes run
 as shard_map collectives over the data axes (core/distributed.py) — the
 same program a 512-chip run would execute per pod.
+
+Serving
+-------
+This launcher stops at fitted components.  The online half — packing the
+sparse PCs into a gather representation, registering them in a versioned
+hot-swappable registry, projecting live document streams through the
+Pallas gather-matvec, and watching the Thm 2.1 elimination certificate for
+traffic drift — lives in ``repro.serve`` and is exercised end-to-end by
+``python -m repro.launch.serve_topics --smoke``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,24 @@
+"""Online topic-serving subsystem: project live documents onto fitted
+sparse PCs at production scale.
+
+  projector.py — gather-packed components + jitted batched projection
+                 (Pallas gather-matvec on TPU, jnp oracle elsewhere)
+  registry.py  — versioned model store, atomic hot-swap, checkpointed
+  batcher.py   — microbatching queue: ragged requests -> one fixed shape
+  drift.py     — streaming variance watch on the Thm 2.1 certificate
+
+End-to-end wiring lives in ``repro.launch.serve_topics``.
+"""
+from . import batcher, drift, projector, registry
+from .batcher import BatcherConfig, LatencyStats, MicroBatcher
+from .drift import DriftMonitor, DriftReport
+from .projector import ProjectorPack, TopicProjector, pack_components
+from .registry import ModelRegistry, ModelVersion
+
+__all__ = [
+    "batcher", "drift", "projector", "registry",
+    "BatcherConfig", "LatencyStats", "MicroBatcher",
+    "DriftMonitor", "DriftReport",
+    "ProjectorPack", "TopicProjector", "pack_components",
+    "ModelRegistry", "ModelVersion",
+]

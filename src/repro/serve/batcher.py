@@ -1,0 +1,214 @@
+"""Microbatching front-end: ragged request stream -> fixed-shape batches.
+
+Serving traffic arrives one variable-length document at a time, but the
+jitted projector wants one shape forever (a new (B, n) means an XLA
+recompile mid-traffic — the latency cliff this module exists to prevent).
+The batcher therefore coalesces up to ``max_batch`` requests (waiting at
+most ``max_wait_ms`` after the first), scatters them into a zero-padded
+``(max_batch, n)`` count matrix, and pushes batches through
+``data.pipeline.prefetch`` so host-side batch assembly overlaps device
+compute — the same producer/consumer idiom the LM input pipeline uses.
+
+Every request resolves a ``concurrent.futures.Future`` with its (k,) score
+vector; per-request wall latency feeds the p50/p99 report.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.data.pipeline import prefetch
+
+
+@dataclass(frozen=True)
+class BatcherConfig:
+    max_batch: int = 64      # the ONE batch shape the projector ever sees
+    max_wait_ms: float = 2.0  # coalescing window after the first request
+    prefetch_depth: int = 2
+
+
+class LatencyStats:
+    """Per-request wall-latency accumulator -> p50/p99/docs-per-second.
+
+    Percentiles are computed over a bounded sliding window (``window``
+    most-recent requests) so a long-lived server holds O(window) memory,
+    not one float per request ever served; ``count``/``docs_per_s`` still
+    reflect the full lifetime."""
+
+    def __init__(self, window: int = 100_000):
+        self._lat = deque(maxlen=window)
+        self._count = 0
+        self._t0: float | None = None
+        self._t1: float | None = None
+        self._lock = threading.Lock()
+
+    def record(self, latencies_s, now: float) -> None:
+        with self._lock:
+            if self._t0 is None:
+                # Clock starts at the first batch's earliest submit, so the
+                # first service time is inside the throughput window (and a
+                # single-batch snapshot doesn't divide by ~zero).
+                self._t0 = now - (max(latencies_s) if latencies_s else 0.0)
+            self._t1 = now
+            self._lat.extend(float(x) for x in latencies_s)
+            self._count += len(latencies_s)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            if not self._lat:
+                return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                        "docs_per_s": 0.0}
+            lat = np.asarray(self._lat)
+            wall = max((self._t1 or 0.0) - (self._t0 or 0.0), 1e-9)
+            return {
+                "count": self._count,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "docs_per_s": float(self._count / wall),
+            }
+
+
+class _Request:
+    __slots__ = ("word_ids", "counts", "t_submit", "future")
+
+    def __init__(self, word_ids, counts):
+        self.word_ids = np.asarray(word_ids, np.int64)
+        self.counts = np.asarray(counts, np.float32)
+        self.t_submit = time.perf_counter()
+        self.future: Future = Future()
+
+
+class MicroBatcher:
+    """Queue -> coalesce -> pad -> project -> resolve futures.
+
+    ``projector`` is any object with ``.project((B, n) array) -> (B, k)``
+    (normally the active ``TopicProjector``; pass a registry-backed lambda
+    for hot-swappable serving).  ``observer`` (optional) receives each
+    batch's *live* rows — the drift monitor taps traffic here.
+    """
+
+    def __init__(self, projector, n_features: int,
+                 cfg: BatcherConfig | None = None, *, observer=None):
+        self.projector = projector
+        self.n = int(n_features)
+        self.cfg = cfg if cfg is not None else BatcherConfig()
+        self.observer = observer
+        self.stats = LatencyStats()
+        self.batches_served = 0
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- client
+    def submit(self, word_ids, counts) -> Future:
+        """Enqueue one sparse document; resolves to its (k,) score row."""
+        if self._stop.is_set():
+            raise RuntimeError("batcher is stopped")
+        r = _Request(word_ids, counts)
+        self._q.put(r)
+        if self._stop.is_set():
+            # stop() raced between our check and the put: its drain may
+            # already have run, so drain again — never strand a future.
+            self._drain_failed()
+        return r.future
+
+    # ------------------------------------------------------------- server
+    def _collect(self):
+        """Yield (requests, padded (max_batch, n) matrix) until stopped."""
+        cfg = self.cfg
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if first is None:       # shutdown sentinel
+                return
+            reqs = [first]
+            deadline = time.perf_counter() + cfg.max_wait_ms / 1e3
+            while len(reqs) < cfg.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    r = self._q.get(timeout=left)
+                except queue.Empty:
+                    break
+                if r is None:
+                    break
+                reqs.append(r)
+            X = np.zeros((cfg.max_batch, self.n), np.float32)
+            live = []
+            for r in reqs:
+                try:   # a malformed request fails ITS future, not the loop
+                    w = r.word_ids
+                    if w.size and (int(w.min()) < 0 or int(w.max()) >= self.n):
+                        # negative ids would silently alias into the vocab
+                        # tail via numpy indexing — reject them explicitly
+                        raise IndexError(
+                            f"word ids outside [0, {self.n})")
+                    np.add.at(X[len(live)], w, r.counts)
+                    live.append(r)
+                except (IndexError, ValueError, TypeError) as e:
+                    X[len(live)] = 0.0   # scatter may have partially landed
+                    r.future.set_exception(e)
+            if live:
+                yield live, X
+
+    def _serve_loop(self):
+        for reqs, X in prefetch(self._collect(), size=self.cfg.prefetch_depth):
+            try:
+                scores = np.asarray(self.projector.project(X))
+            except Exception as e:          # fail the waiting futures, not us
+                for r in reqs:
+                    r.future.set_exception(e)
+                continue
+            for i, r in enumerate(reqs):
+                r.future.set_result(scores[i])
+            now = time.perf_counter()       # after resolution: honest latency
+            self.stats.record([now - r.t_submit for r in reqs], now)
+            self.batches_served += 1
+            if self.observer is not None:   # off the response critical path
+                self.observer(X[: len(reqs)])
+
+    def start(self) -> "MicroBatcher":
+        assert self._thread is None, "already started"
+        # Warm-up: trace/compile the (max_batch, n) program before traffic
+        # arrives, so the first real batch doesn't eat the compile latency.
+        self.projector.project(np.zeros((self.cfg.max_batch, self.n),
+                                        np.float32))
+        self._thread = threading.Thread(target=self._serve_loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def _drain_failed(self) -> None:
+        """Fail every request still sitting in the queue (post-shutdown)."""
+        while True:
+            try:
+                r = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if r is not None and not r.future.done():
+                r.future.set_exception(RuntimeError("batcher stopped"))
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._q.put(None)
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        # Requests that raced past the sentinel would otherwise hang their
+        # futures forever; fail them promptly instead (submit() re-drains
+        # on its own post-put stop check, closing the enqueue race).
+        self._drain_failed()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,151 @@
+"""Pack fitted sparse PCs into a gather representation and serve projections.
+
+A fitted component is a sparse vector in R^n (n ~ 10^5) with card ~ 5
+nonzeros.  Serving never touches n-sized dense loadings: ``pack_components``
+extracts each component's (support, values) pair into padded (k, cap)
+arrays — ``cap`` is the max cardinality rounded up so re-fits with slightly
+different cardinalities reuse the same jitted program — and ``TopicProjector``
+pushes batches through ``kernels.ops.sparse_project`` (the Pallas
+gather-matvec on TPU, its jnp gather oracle elsewhere).
+
+Luss & d'Aspremont (2008): sparse PCs double as feature selectors / cluster
+assigners, so the projector also exposes ``assign_topics`` (argmax score)
+and a sparse-document path ``project_docs`` that maps raw (word_id, count)
+pairs straight into the packed coordinate system without materialising any
+n-length vector — O(doc nnz) per document.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spca import PCResult
+from repro.kernels import ops
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class ProjectorPack:
+    """Gather representation of k sparse components over an n-word vocab.
+
+    ``support_idx[c, j]`` is the word id of component c's j-th loading and
+    ``values[c, j]`` its weight; slots past a component's cardinality hold
+    (0, 0.0) — index 0 with weight exactly 0.0, so padded slots contribute
+    nothing whichever column they gather.
+    """
+
+    support_idx: np.ndarray  # (k, cap) int32
+    values: np.ndarray       # (k, cap) float32
+    n_features: int
+
+    @property
+    def k(self) -> int:
+        return int(self.support_idx.shape[0])
+
+    @property
+    def cap(self) -> int:
+        return int(self.support_idx.shape[1])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.count_nonzero(self.values))
+
+
+def pack_components(
+    results: list[PCResult], *, n_features: int | None = None,
+    cap_multiple: int = 8,
+) -> ProjectorPack:
+    """Pack ``fit_components`` output into a ``ProjectorPack``.
+
+    ``cap`` = max cardinality rounded up to ``cap_multiple`` so the packed
+    shapes (and therefore every downstream jitted program) are stable across
+    refits whose cardinalities wobble within the slack.
+    """
+    if not results:
+        raise ValueError("cannot pack an empty component list")
+    n = n_features if n_features is not None else int(results[0].x.shape[0])
+    cap = _round_up(max(max(r.cardinality, 1) for r in results), cap_multiple)
+    k = len(results)
+    support_idx = np.zeros((k, cap), np.int32)
+    values = np.zeros((k, cap), np.float32)
+    for c, r in enumerate(results):
+        s = np.asarray(r.support, np.int64)
+        support_idx[c, : s.size] = s
+        values[c, : s.size] = np.asarray(r.x)[s]
+    return ProjectorPack(support_idx=support_idx, values=values, n_features=n)
+
+
+class TopicProjector:
+    """Jitted batched document->topic projection for one packed model.
+
+    The projection function is jitted once per (batch, n) shape; the
+    microbatcher always presents one fixed shape, so steady-state serving
+    never recompiles.  ``trace_count`` counts retraces (the shape-stability
+    tests assert it stays at 1).
+    """
+
+    def __init__(self, pack: ProjectorPack, *, impl: str = "auto"):
+        self.pack = pack
+        self.impl = impl
+        self.trace_count = 0
+        sidx = jnp.asarray(pack.support_idx)
+        vals = jnp.asarray(pack.values)
+
+        def _project(X):
+            self.trace_count += 1  # python side effect: fires per trace only
+            return ops.sparse_project(X, sidx, vals, impl=impl)
+
+        self._project = jax.jit(_project)
+        # Word id -> packed slot(s), sorted-CSR style, for the sparse-doc
+        # fast path.  A word may own several slots when component supports
+        # overlap (Hotelling 'project' deflation does not guarantee the
+        # disjoint supports 'remove' deflation produces).
+        flat = pack.support_idx.reshape(-1)
+        live = np.flatnonzero(pack.values.reshape(-1) != 0)
+        order = np.argsort(flat[live], kind="stable")
+        self._sorted_words = flat[live][order]   # (nnz,) ascending word ids
+        self._sorted_slots = live[order]         # (nnz,) their flat slots
+
+    def project(self, X) -> jax.Array:
+        """(B, n) counts -> (B, k) scores."""
+        return self._project(jnp.asarray(X))
+
+    def project_docs(self, docs) -> np.ndarray:
+        """Sparse path: ``docs`` is a list of (word_ids, counts) pairs.
+
+        Work is O(total doc nnz + slot hits): each (word, count) lands in
+        *every* packed slot that word owns (supports may overlap under
+        'project' deflation) via binary search on the sorted slot table,
+        then a (B, k*cap) x (k*cap,) weighted fold produces the scores.
+        No n-length buffer anywhere.
+        """
+        k, cap = self.pack.k, self.pack.cap
+        G = np.zeros((len(docs), k * cap), np.float32)
+        for d, (wi, ct) in enumerate(docs):
+            wi = np.asarray(wi, np.int64)
+            lo = np.searchsorted(self._sorted_words, wi, side="left")
+            hi = np.searchsorted(self._sorted_words, wi, side="right")
+            reps = hi - lo                      # slots owned per doc word
+            if not reps.any():
+                continue
+            total = int(reps.sum())
+            starts = np.cumsum(reps) - reps
+            # flat indices [lo_j, hi_j) for every doc word j, concatenated
+            r = (np.arange(total) - np.repeat(starts, reps)
+                 + np.repeat(lo, reps))
+            np.add.at(G[d], self._sorted_slots[r],
+                      np.repeat(np.asarray(ct, np.float32), reps))
+        g = G.reshape(len(docs), k, cap)
+        return np.einsum("bkc,kc->bk", g, self.pack.values)
+
+    def assign_topics(self, scores) -> tuple[np.ndarray, np.ndarray]:
+        """Cluster interpretation: (topic id, |score|) per document."""
+        s = np.abs(np.asarray(scores))
+        top = np.argmax(s, axis=1)
+        return top, s[np.arange(s.shape[0]), top]

@@ -1,0 +1,178 @@
+"""Versioned model registry with atomic hot-swap and checkpoint persistence.
+
+The serving fleet looks up "the active model" millions of times while a
+refit lands a new one.  Two invariants make that safe without a read lock:
+
+  * a ``ModelVersion`` is immutable — pack, projector, certificate threshold
+    and training screen are frozen at registration;
+  * the active pointer is swapped with a single attribute store (atomic
+    under the GIL), so a concurrent lookup sees either the old or the new
+    version in full, never a torn mix.
+
+Persistence rides the existing ``repro.checkpoint`` subsystem (atomic
+tmp-dir + rename writes): one checkpoint step per registered version, so a
+restarted server ``load_all()``s the registry back, newest version active.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro import checkpoint
+from repro.core.elimination import Screen
+from repro.core.spca import PCResult
+
+from .projector import ProjectorPack, TopicProjector, pack_components
+
+
+@dataclass(frozen=True)
+class ModelVersion:
+    """One immutable registered model: everything a server needs to serve
+    it and to judge when it has gone stale."""
+
+    version: int
+    pack: ProjectorPack
+    projector: TopicProjector
+    lam: float          # loosest safe-elimination threshold (min over PCs)
+    lams: np.ndarray    # per-component thresholds — each PC's own Thm 2.1
+                        # certificate; the drift monitor watches all of them
+    screen: Screen      # training-time variance screen (drift baseline)
+    meta: dict = field(default_factory=dict)
+
+
+class ModelRegistry:
+    """Monotonically versioned store of packed models.
+
+    ``register`` allocates the next version, persists it (when a root
+    directory was given) and atomically makes it active; ``active()`` is a
+    lock-free read of the current version; ``rollback`` re-activates an
+    older version without refitting.
+    """
+
+    def __init__(self, root: str | None = None, *, impl: str = "auto"):
+        self.root = root
+        self.impl = impl
+        self._lock = threading.Lock()
+        self._versions: dict[int, ModelVersion] = {}
+        self._active: ModelVersion | None = None
+
+    # ------------------------------------------------------------- lookups
+    def active(self) -> ModelVersion:
+        mv = self._active
+        if mv is None:
+            raise LookupError("registry has no active model")
+        return mv
+
+    def get(self, version: int) -> ModelVersion:
+        return self._versions[version]
+
+    def versions(self) -> list[int]:
+        return sorted(self._versions)
+
+    # ------------------------------------------------------------ mutation
+    def register(
+        self,
+        results: list[PCResult],
+        screen: Screen,
+        *,
+        n_features: int | None = None,
+        meta: dict | None = None,
+        persist: bool = True,
+    ) -> ModelVersion:
+        """Pack, persist, and hot-swap a freshly fitted component list."""
+        pack = pack_components(results, n_features=n_features)
+        lams = np.asarray([r.lam for r in results], np.float64)
+        with self._lock:
+            version = max(self._versions, default=-1) + 1
+            mv = ModelVersion(
+                version=version,
+                pack=pack,
+                projector=TopicProjector(pack, impl=self.impl),
+                lam=float(lams.min()),
+                lams=lams,
+                screen=screen,
+                meta=dict(meta or {}),
+            )
+            if persist and self.root is not None:
+                self._save(mv)
+            self._versions[version] = mv
+            self._active = mv    # the atomic hot-swap
+        return mv
+
+    def rollback(self, version: int) -> ModelVersion:
+        with self._lock:
+            mv = self._versions[version]
+            self._active = mv
+        return mv
+
+    # --------------------------------------------------------- persistence
+    def _save(self, mv: ModelVersion) -> str:
+        tree = {
+            "support_idx": mv.pack.support_idx,
+            "values": mv.pack.values,
+            "n_features": np.asarray(mv.pack.n_features, np.int64),
+            "lam": np.asarray(mv.lam, np.float64),
+            "lams": mv.lams,
+            "screen_var": np.asarray(mv.screen.variances),
+            "screen_mean": np.asarray(mv.screen.means),
+            "screen_count": np.asarray(mv.screen.count),
+            # JSON-as-bytes: checkpoint leaves are arrays, meta is not.
+            "meta_json": np.frombuffer(
+                json.dumps(mv.meta).encode(), dtype=np.uint8),
+        }
+        return checkpoint.save(self.root, mv.version, tree)
+
+    def _load_version(self, version: int) -> ModelVersion:
+        d = os.path.join(self.root, f"step_{version:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        like = {
+            k: jax.ShapeDtypeStruct(tuple(v["shape"]), np.dtype(v["dtype"]))
+            for k, v in manifest["leaves"].items()
+        }
+        tree = checkpoint.restore(self.root, version, like)
+        pack = ProjectorPack(
+            support_idx=np.asarray(tree["support_idx"], np.int32),
+            values=np.asarray(tree["values"], np.float32),
+            n_features=int(tree["n_features"]),
+        )
+        screen = Screen(
+            variances=tree["screen_var"],
+            means=tree["screen_mean"],
+            count=tree["screen_count"],
+        )
+        lam = float(tree["lam"])
+        meta = {}
+        if "meta_json" in tree:
+            meta = json.loads(
+                np.asarray(tree["meta_json"], np.uint8).tobytes().decode())
+        return ModelVersion(
+            version=version,
+            pack=pack,
+            projector=TopicProjector(pack, impl=self.impl),
+            lam=lam,
+            lams=np.asarray(tree.get("lams", [lam]), np.float64),
+            screen=screen,
+            meta=meta,
+        )
+
+    def load_all(self) -> list[int]:
+        """Restore every persisted version; newest becomes active."""
+        if self.root is None or not os.path.isdir(self.root):
+            return []
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.root)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        with self._lock:
+            for s in steps:
+                self._versions[s] = self._load_version(s)
+            if steps:
+                self._active = self._versions[steps[-1]]
+        return steps

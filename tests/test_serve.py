@@ -1,0 +1,408 @@
+"""Online serving subsystem: projector/kernel equivalence, registry
+hot-swap under concurrent lookups, batcher shape stability, drift trigger."""
+import tempfile
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.elimination import Screen, feature_variances
+from repro.core.spca import PCResult
+from repro.data.corpus import make_corpus
+from repro.data.pipeline import prefetch
+from repro.kernels import ops, ref
+from repro.serve import (
+    BatcherConfig, DriftMonitor, MicroBatcher, ModelRegistry, TopicProjector,
+    pack_components,
+)
+
+
+def _fake_components(n, k, card, seed=0, lam=1.0):
+    rng = np.random.default_rng(seed)
+    results = []
+    used = rng.permutation(n)
+    for c in range(k):
+        sup = np.sort(used[c * card:(c + 1) * card])
+        x = np.zeros(n)
+        x[sup] = rng.normal(size=card)
+        x /= np.linalg.norm(x)
+        results.append(PCResult(
+            x=x, support=sup, lam=lam + 0.1 * c, variance=1.0,
+            cardinality=card, reduced_n=card, gap=0.0,
+        ))
+    return results
+
+
+# --------------------------------------------------------------- projector
+@pytest.mark.parametrize("B,n,k,card", [
+    (16, 200, 3, 5), (100, 1000, 5, 7), (8, 300, 1, 3), (130, 513, 4, 9),
+])
+def test_projector_kernel_matches_dense_reference(B, n, k, card):
+    """Pallas gather kernel (interpret) == gather oracle == dense matmul."""
+    rng = np.random.default_rng(B * n)
+    pack = pack_components(_fake_components(n, k, card, seed=n), n_features=n)
+    X = jnp.asarray(rng.poisson(0.5, size=(B, n)).astype(np.float32))
+
+    # Fully dense ground truth: scatter loadings into W (n, k), X @ W.
+    W = np.zeros((n, k), np.float32)
+    for c in range(k):
+        W[pack.support_idx[c], c] += pack.values[c]
+    dense = np.asarray(X) @ W
+
+    oracle = ref.sparse_project_ref(
+        X, jnp.asarray(pack.support_idx), jnp.asarray(pack.values))
+    np.testing.assert_allclose(oracle, dense, rtol=1e-5, atol=1e-5)
+
+    # impl='pallas' off-TPU runs the gather kernel in interpret mode.
+    out = ops.sparse_project(
+        X, jnp.asarray(pack.support_idx), jnp.asarray(pack.values),
+        impl="pallas",
+    )
+    np.testing.assert_allclose(np.asarray(out), dense, rtol=1e-5, atol=1e-5)
+
+
+def test_projector_sparse_doc_path_matches_dense():
+    n, k = 400, 3
+    pack = pack_components(_fake_components(n, k, 6), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    rng = np.random.default_rng(0)
+    X = rng.poisson(0.4, size=(12, n)).astype(np.float32)
+    docs = [(np.flatnonzero(x), x[np.flatnonzero(x)]) for x in X]
+    np.testing.assert_allclose(
+        proj.project_docs(docs), np.asarray(proj.project(X)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_projector_sparse_doc_path_with_overlapping_supports():
+    """'project' (Hotelling) deflation can give overlapping supports: a
+    shared word must contribute to EVERY component that loads on it."""
+    n, card = 100, 4
+    rng = np.random.default_rng(5)
+    shared = np.array([7, 42])
+    results = []
+    for c in range(3):
+        extra = 50 + c * card + np.arange(card - shared.size)
+        sup = np.sort(np.concatenate([shared, extra]))
+        x = np.zeros(n)
+        x[sup] = rng.normal(size=card)
+        results.append(PCResult(x=x, support=sup, lam=1.0, variance=1.0,
+                                cardinality=card, reduced_n=card, gap=0.0))
+    proj = TopicProjector(pack_components(results, n_features=n), impl="ref")
+    X = rng.poisson(1.0, size=(10, n)).astype(np.float32)
+    X[:, shared] += 3.0  # make the shared words matter
+    docs = [(np.flatnonzero(x), x[np.flatnonzero(x)]) for x in X]
+    np.testing.assert_allclose(
+        proj.project_docs(docs), np.asarray(proj.project(X)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_pack_components_shape_stable_across_cardinality_wobble():
+    n = 300
+    p1 = pack_components(_fake_components(n, 3, 5), n_features=n)
+    p2 = pack_components(_fake_components(n, 3, 7, seed=1), n_features=n)
+    assert p1.cap == p2.cap == 8  # both round up to the same padded cap
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_persist_and_reload():
+    n = 250
+    res = _fake_components(n, 2, 4)
+    screen = Screen(variances=jnp.ones(n), means=jnp.zeros(n),
+                    count=jnp.asarray(100))
+    with tempfile.TemporaryDirectory() as d:
+        reg = ModelRegistry(d, impl="ref")
+        mv = reg.register(res, screen, n_features=n,
+                          meta={"corpus": "unit", "note": 7})
+        assert mv.version == 0
+        mv2 = reg.register(res, screen, n_features=n)
+        assert mv2.version == 1
+        assert reg.active().version == 1
+        reg.rollback(0)
+        assert reg.active().version == 0
+
+        fresh = ModelRegistry(d, impl="ref")
+        assert fresh.load_all() == [0, 1]
+        assert fresh.active().version == 1
+        np.testing.assert_array_equal(
+            fresh.get(0).pack.support_idx, mv.pack.support_idx)
+        np.testing.assert_allclose(
+            fresh.get(0).pack.values, mv.pack.values, rtol=1e-6)
+        assert fresh.get(0).lam == pytest.approx(mv.lam)
+        np.testing.assert_allclose(fresh.get(0).lams, mv.lams)
+        assert fresh.get(0).meta == {"corpus": "unit", "note": 7}
+
+
+def test_registry_hot_swap_under_concurrent_lookups():
+    """Readers hammering active() during swaps must always see a complete,
+    internally consistent version (pack matches projector), never a torn
+    or missing one."""
+    n = 200
+    screen = Screen(variances=jnp.ones(n), means=jnp.zeros(n),
+                    count=jnp.asarray(10))
+    reg = ModelRegistry(None, impl="ref")
+    reg.register(_fake_components(n, 2, 4, seed=0), screen, n_features=n)
+
+    stop = threading.Event()
+    errors: list[Exception] = []
+
+    def reader():
+        X = np.ones((4, n), np.float32)
+        try:
+            while not stop.is_set():
+                mv = reg.active()
+                # internal consistency: projector serves ITS OWN pack
+                s = np.asarray(mv.projector.project(X))
+                assert s.shape == (4, mv.pack.k)
+                assert mv.pack.values is mv.projector.pack.values
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for v in range(1, 6):
+        reg.register(_fake_components(n, 2 + v % 2, 4, seed=v), screen,
+                     n_features=n, persist=False)
+        time.sleep(0.02)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors, errors
+    assert reg.active().version == 5
+    assert reg.versions() == [0, 1, 2, 3, 4, 5]
+
+
+# ----------------------------------------------------------------- batcher
+def test_batcher_shape_stability_across_ragged_requests():
+    """Ragged request sizes must never retrace the jitted projector: the
+    batcher always presents the one padded (max_batch, n) shape."""
+    n = 300
+    pack = pack_components(_fake_components(n, 3, 5), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    rng = np.random.default_rng(1)
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=8, max_wait_ms=1.0))
+    with mb:
+        futs = []
+        for sz in rng.integers(1, 60, size=100):  # ragged doc lengths
+            wi = rng.choice(n, size=sz, replace=False)
+            futs.append(mb.submit(wi, np.ones(sz, np.float32)))
+        scores = [f.result(timeout=30) for f in futs]
+    assert proj.trace_count == 1, "projector retraced on ragged traffic"
+    assert all(s.shape == (3,) for s in scores)
+    assert mb.batches_served >= 100 // 8
+    snap = mb.stats.snapshot()
+    assert snap["count"] == 100
+    assert snap["p99_ms"] >= snap["p50_ms"] >= 0.0
+
+
+def test_batcher_scores_match_direct_projection():
+    n = 150
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    rng = np.random.default_rng(2)
+    X = rng.poisson(0.5, size=(20, n)).astype(np.float32)
+    direct = np.asarray(proj.project(X))
+    with MicroBatcher(proj, n, BatcherConfig(max_batch=4)) as mb:
+        futs = [mb.submit(np.flatnonzero(x), x[np.flatnonzero(x)]) for x in X]
+        got = np.stack([f.result(timeout=30) for f in futs])
+    np.testing.assert_allclose(got, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_batcher_propagates_projection_errors_to_futures():
+    class Boom:
+        def project(self, X):
+            raise RuntimeError("kernel exploded")
+
+    mb = MicroBatcher(Boom(), 50, BatcherConfig(max_batch=2, max_wait_ms=0.5))
+    mb._thread = threading.Thread(target=mb._serve_loop, daemon=True)
+    mb._thread.start()  # bypass start()'s warm-up (it would raise here)
+    f = mb.submit([1, 2], [1.0, 1.0])
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        f.result(timeout=30)
+    mb.stop()
+
+
+def test_batcher_survives_malformed_request():
+    """An out-of-range word id fails ITS request's future; the serve loop
+    keeps running and later requests still resolve."""
+    n = 120
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    with MicroBatcher(proj, n, BatcherConfig(max_batch=4,
+                                             max_wait_ms=0.5)) as mb:
+        bad = mb.submit([n + 5], [1.0])       # word id beyond the vocab
+        with pytest.raises(IndexError):
+            bad.result(timeout=30)
+        neg = mb.submit([-1], [1.0])          # would alias to column n-1
+        with pytest.raises(IndexError):
+            neg.result(timeout=30)
+        good = mb.submit([3, 4], [1.0, 2.0])
+        assert good.result(timeout=30).shape == (2,)
+
+
+def test_batcher_stop_fails_stranded_requests():
+    """A request that races in behind the shutdown sentinel is failed by
+    stop()'s queue drain rather than hanging its future forever."""
+    from repro.serve.batcher import _Request
+
+    n = 80
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=4)).start()
+    mb.stop()
+    r = _Request([1], [1.0])   # enqueue directly: submit() already rejects
+    mb._q.put(r)
+    mb.stop()                  # second stop drains and fails it
+    with pytest.raises(RuntimeError, match="batcher stopped"):
+        r.future.result(timeout=5)
+
+
+def test_prefetch_reraises_worker_exception():
+    """Satellite: producer-side exceptions must surface in the consumer,
+    not silently end the stream."""
+    def boom():
+        yield 1
+        yield 2
+        raise ValueError("worker died")
+
+    got = []
+    with pytest.raises(ValueError, match="worker died"):
+        for x in prefetch(boom(), size=2):
+            got.append(x)
+    assert got == [1, 2]
+
+
+def test_drift_watches_every_components_threshold():
+    """A feature eliminated only from the higher-lambda solves must still
+    trip the flag when traffic crosses THAT component's threshold."""
+    n = 50
+    train = np.full(n, 0.1)
+    train[7] = 1.0                    # kept at lam=0.5, eliminated at lam=2.0
+    screen = Screen(variances=jnp.asarray(train), means=jnp.zeros(n),
+                    count=jnp.asarray(1000))
+    mon = DriftMonitor(screen, np.array([0.5, 2.0]), min_docs=1)
+    rng = np.random.default_rng(11)
+    X = (rng.normal(scale=np.sqrt(0.05), size=(4000, n))
+         .astype(np.float32))
+    X[:, 7] = rng.normal(scale=np.sqrt(10.0), size=4000)  # var 10 >> 2.0
+    mon.observe(X)
+    rep = mon.check()
+    assert rep.triggered
+    assert 7 in rep.offending.tolist()
+    # scalar-lam monitor at the min threshold would have missed it:
+    mon_min = DriftMonitor(screen, 0.5, min_docs=1)
+    mon_min.observe(X)
+    assert 7 not in mon_min.check().offending.tolist()
+
+
+# ------------------------------------------------------------------- drift
+def _zipf_fit_screen(n_docs=600, n_words=800, seed=0):
+    corpus = make_corpus(n_docs, n_words, topics=None, seed=seed)
+    mean, var = corpus.column_stats_exact()
+    screen = Screen(variances=jnp.asarray(var), means=jnp.asarray(mean),
+                    count=jnp.asarray(n_docs))
+    return corpus, screen
+
+
+def test_drift_quiet_on_training_distribution():
+    corpus, screen = _zipf_fit_screen()
+    lam = float(np.sort(np.asarray(screen.variances))[::-1][30])  # keep ~30
+    mon = DriftMonitor(screen, lam, min_docs=100)
+    fresh = make_corpus(400, corpus.n_words, topics=None, seed=99)
+    for X in fresh.batches(128):
+        mon.observe(X)
+    rep = mon.check()
+    assert rep.docs_seen == 400
+    assert not rep.triggered, (
+        f"false drift alarm: ratio={rep.max_ratio} ids={rep.offending[:5]}")
+
+
+def test_drift_fires_on_shifted_tail_words():
+    """Boosting tail-word rates pushes eliminated-feature variance past the
+    fitted lambda — the certificate is stale and the flag must fire."""
+    corpus, screen = _zipf_fit_screen()
+    n = corpus.n_words
+    lam = float(np.sort(np.asarray(screen.variances))[::-1][30])
+    mon = DriftMonitor(screen, lam, min_docs=100)
+    rng = np.random.default_rng(7)
+    fresh = make_corpus(400, n, topics=None, seed=98)
+    hot = np.arange(n - 4, n)
+    for X in fresh.batches(128):
+        X = X.copy()
+        X[:, hot] += rng.poisson(3.0, size=(X.shape[0], hot.size))
+        mon.observe(X)
+    rep = mon.check()
+    assert rep.triggered
+    assert set(hot) <= set(rep.offending.tolist())
+    assert rep.max_ratio > 1.5
+
+
+def test_drift_respects_min_docs():
+    _, screen = _zipf_fit_screen(n_docs=200, n_words=300)
+    lam = float(np.sort(np.asarray(screen.variances))[::-1][10])
+    mon = DriftMonitor(screen, lam, min_docs=500)
+    X = np.zeros((100, 300), np.float32)
+    X[:, 299] = 50.0 * np.arange(100)  # wild drift, but below min_docs
+    mon.observe(X)
+    assert not mon.check().triggered
+    mon.observe(X)
+    mon.observe(X)
+    mon.observe(X)
+    mon.observe(X)
+    assert mon.check().triggered
+
+
+def test_drift_fold_matches_single_screen():
+    """Batch-wise folding via combine_screens must equal one global
+    screen over the concatenated traffic."""
+    rng = np.random.default_rng(3)
+    X = rng.poisson(0.7, size=(300, 120)).astype(np.float32)
+    whole = feature_variances(jnp.asarray(X), center=True)
+    _, screen = _zipf_fit_screen(n_docs=100, n_words=120)
+    mon = DriftMonitor(screen, lam=1e9, min_docs=1)
+    for lo in range(0, 300, 77):
+        mon.observe(X[lo:lo + 77])
+    np.testing.assert_allclose(
+        np.asarray(mon._running.variances), np.asarray(whole.variances),
+        rtol=1e-5, atol=1e-7,
+    )
+    assert int(mon._running.count) == 300
+
+
+# ------------------------------------------------------------- end-to-end
+@pytest.mark.slow
+def test_end_to_end_fit_register_serve_drift():
+    """The full serve_topics story on a real (small) fitted model."""
+    from repro.core import fit_components
+    from repro.core.spca import SPCAConfig
+
+    corpus = make_corpus(1200, 900, topics={"t": ["alpha", "beta", "gamma"]},
+                         seed=0)
+    A = corpus.dense()
+    res = fit_components(A, 2, target_card=3,
+                         cfg=SPCAConfig(max_sweeps=6, lam_search_evals=6))
+    screen = feature_variances(jnp.asarray(A), center=True)
+    with tempfile.TemporaryDirectory() as d:
+        reg = ModelRegistry(d, impl="ref")
+        mv = reg.register(res, screen, n_features=corpus.n_words)
+        mon = DriftMonitor(mv.screen, mv.lam, min_docs=64)
+        mb = MicroBatcher(mv.projector, corpus.n_words,
+                          BatcherConfig(max_batch=32, max_wait_ms=1.0),
+                          observer=mon.observe)
+        fresh = make_corpus(600, 900,
+                            topics={"t": ["alpha", "beta", "gamma"]}, seed=5)
+        with mb:
+            futs = []
+            rows = fresh.dense()
+            for x in rows:
+                nz = np.flatnonzero(x)
+                futs.append(mb.submit(nz, x[nz]))
+            for f in futs:
+                f.result(timeout=60)
+        assert mb.stats.snapshot()["count"] == 600
+        assert mv.projector.trace_count == 1
+        assert not mon.check().triggered
