@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import timeit as _timeit
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels.bcd_fused import bcd_solve_pallas
 from repro.kernels.bcd_sweep import qp_sweep_pallas
 from repro.kernels.gram import gram_pallas
 from repro.kernels.variance import column_stats_pallas
@@ -49,4 +50,36 @@ def run():
                  "us_per_call": t * 1e6,
                  "derived": f"vmem_bytes={n * n * 4} interp_vs_ref_maxdiff="
                             f"{float(jnp.max(jnp.abs(u1 - u2))):.2e}"})
+
+    # Fused whole-solve kernel vs the per-row path.  Launch economics: the
+    # per-row Pallas path issues one pallas_call PER ROW UPDATE (n_hat per
+    # sweep, sweeps*n_hat per solve); the fused kernel issues exactly ONE
+    # per solve.  Timing uses the jnp oracle (the CPU production path);
+    # interpret-mode parity of the kernel is reported alongside.
+    n, sweeps, qp_sw = 130, 4, 2
+    F = rng.normal(size=(n + 10, n)).astype(np.float32)
+    Sigma = jnp.asarray(F.T @ F / n)
+    lam = 0.3 * float(jnp.max(jnp.diag(Sigma)))
+    beta = 1e-4 * float(jnp.trace(Sigma)) / n
+    X0 = jnp.eye(n, dtype=Sigma.dtype)
+    t = _timeit(
+        lambda S: ops.bcd_solve(S, lam, beta, X0, max_sweeps=sweeps,
+                                qp_sweeps=qp_sw, tol=-1.0, impl="ref")[0],
+        Sigma,
+    )
+    Xk, _, _, _ = bcd_solve_pallas(Sigma, lam, beta, X0, -1.0,
+                                   max_sweeps=sweeps, qp_sweeps=qp_sw,
+                                   interpret=True)
+    Xr, _, _, _ = ops.bcd_solve(Sigma, lam, beta, X0, max_sweeps=sweeps,
+                                qp_sweeps=qp_sw, tol=-1.0, impl="ref")
+    n_pad = max(128, ((n + 127) // 128) * 128)   # kernel pads to 128 lanes
+    rows.append({
+        "name": f"kernel_bcd_fused_solve_n{n}",
+        "us_per_call": t * 1e6,
+        "derived": (
+            f"pallas_calls_fused=1 pallas_calls_per_row={sweeps * n} "
+            f"vmem_bytes={4 * n_pad * n_pad * 4} interp_vs_ref_maxdiff="
+            f"{float(jnp.max(jnp.abs(Xk - Xr))):.2e}"
+        ),
+    })
     return rows

@@ -1,10 +1,18 @@
 """Benchmark harness — one bench per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline tables (from the
-dry-run JSON) are appended when benchmarks/dryrun.json exists.
+Prints ``name,us_per_call,derived`` CSV to stdout and writes the
+machine-readable ``BENCH_spca.json`` (name -> us_per_call) next to this
+file so the perf trajectory can be tracked PR-over-PR.  Roofline tables
+(from the dry-run JSON) are appended when benchmarks/dryrun.json exists.
+
+``--quick`` runs the kernel + convergence suites only (the solver hot
+path); the full run adds elimination, topics, complexity, lambda-search
+and serving.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import traceback
@@ -17,11 +25,21 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+_QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels"}
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="run the kernel + convergence suites only")
+    ap.add_argument("--json", default=os.path.join(_BENCH_DIR, "BENCH_spca.json"),
+                    help="path of the machine-readable name->us_per_call dump")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_complexity, bench_convergence, bench_elimination, bench_kernels,
-        bench_serve, bench_topics,
+        bench_lambda_search, bench_serve, bench_topics,
     )
 
     suites = [
@@ -32,20 +50,26 @@ def main() -> None:
         ("Tables1-2 topics", bench_topics.run),
         ("O(n^3) complexity", bench_complexity.run),
         ("kernels", bench_kernels.run),
+        ("lambda search", bench_lambda_search.run),
         ("serving", bench_serve.run),
     ]
+    if args.quick:
+        suites = [s for s in suites if s[0] in _QUICK_SUITES]
+
+    results: dict[str, float] = {}
     print("name,us_per_call,derived")
     for label, fn in suites:
         try:
             for row in fn():
                 print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+                results[row["name"]] = row["us_per_call"]
         except Exception as e:
             print(f"{label},nan,ERROR {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
 
     # Roofline tables (if the dry-run has produced data).
-    dj = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun.json")
-    if os.path.exists(dj) and os.path.getsize(dj) > 2:
+    dj = os.path.join(_BENCH_DIR, "dryrun.json")
+    if not args.quick and os.path.exists(dj) and os.path.getsize(dj) > 2:
         try:
             from benchmarks import roofline
 
@@ -61,6 +85,23 @@ def main() -> None:
         except Exception as e:
             print(f"roofline,nan,ERROR {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+
+    # Merge into any existing dump instead of overwriting, so a --quick run
+    # (or a run with a failed suite) refreshes its rows without clobbering
+    # the rest of the tracked trajectory.
+    merged: dict[str, float] = {}
+    if os.path.exists(args.json):
+        try:
+            with open(args.json) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(results)
+    with open(args.json, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.json} ({len(results)} updated / {len(merged)} total)",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -39,7 +39,12 @@ class BCDResult(NamedTuple):
     Z: jax.Array          # X / Tr X — feasible for DSPCA (1)
     obj: jax.Array        # augmented objective value at X
     phi: jax.Array        # primal DSPCA value Tr(Sigma Z) - lam ||Z||_1
-    history: jax.Array    # (max_sweeps,) augmented objective after each sweep (nan-padded)
+    # (max_sweeps,) per-sweep objective trace, nan-padded past the executed
+    # sweeps.  The jnp path records the augmented objective (6); the fused
+    # kernel impls record the barrier-free objective F(X) their on-chip
+    # early exit tests (see kernels/bcd_fused.py — the two differ by the
+    # O(beta) logdet term only).
+    history: jax.Array
     sweeps: jax.Array     # number of sweeps actually executed
     beta: float = 0.0     # logdet barrier weight actually used (for kkt_gap)
 
@@ -174,19 +179,22 @@ def _solve_bcd_jit(
         )
 
     def cond(state):
-        _, prev, obj, k, done = state
+        _, _, prev, obj, k, done = state
         return (~done) & (k < max_sweeps)
 
     def body(state):
-        X, prev, _, k, _ = state
+        X, hist, prev, _, k, _ = state
         X = sweep(X)
         obj = augmented_objective(X, Sigma, lam, beta)
+        hist = jax.lax.dynamic_update_slice(hist, obj[None], (k,))
         done = jnp.abs(obj - prev) <= tol * (1.0 + jnp.abs(obj))
-        return X, obj, obj, k + 1, done
+        return X, hist, obj, obj, k + 1, done
 
     minus_inf = jnp.array(-jnp.inf, Sigma.dtype)
-    X, obj, _, k, _ = jax.lax.while_loop(
-        cond, body, (X0, minus_inf, minus_inf, jnp.array(0), jnp.array(False))
+    hist0 = jnp.full((max_sweeps,), jnp.nan, Sigma.dtype)
+    X, hist, _, obj, k, _ = jax.lax.while_loop(
+        cond, body,
+        (X0, hist0, minus_inf, minus_inf, jnp.array(0), jnp.array(False)),
     )
 
     trX = jnp.trace(X)
@@ -196,9 +204,29 @@ def _solve_bcd_jit(
         Z=Z,
         obj=obj,
         phi=primal_value(Z, Sigma, lam),
-        history=jnp.zeros((0,)),
+        history=hist,
         sweeps=k,
     )
+
+
+def _resolve_solver_impl(solver_impl: str, n: int, itemsize: int) -> str:
+    """Map 'auto' to a concrete impl: the fused whole-solve kernel on TPU
+    when the resident state fits VMEM, the jnp while/fori program elsewhere
+    (interpret-mode Pallas on CPU measures the interpreter, not the kernel —
+    see ROADMAP.md "Solver kernel architecture")."""
+    if solver_impl != "auto":
+        return solver_impl
+    from repro.kernels import ops as kernel_ops
+
+    # itemsize <= 4: Mosaic cannot lower f64 kernels, so x64 solves (the
+    # benchmark/test default) stay on the jnp program even on TPU.
+    if (
+        jax.default_backend() == "tpu"
+        and itemsize <= 4
+        and kernel_ops.fused_solve_fits(n, itemsize)
+    ):
+        return "fused"
+    return "jnp"
 
 
 def solve_bcd(
@@ -212,6 +240,7 @@ def solve_bcd(
     tau_iters: int = 80,
     X0=None,
     qp_impl: str = "jnp",
+    solver_impl: str = "jnp",
 ) -> BCDResult:
     """Solve DSPCA (1) by block coordinate ascent on the augmented problem (6).
 
@@ -222,6 +251,13 @@ def solve_bcd(
       beta: logdet barrier weight; ``eps/n``-style default scaled to the data.
       max_sweeps: K in the paper (they report K~5 in practice).
       qp_sweeps: inner coordinate-descent sweeps for (11).
+      X0: warm-start iterate (PD); defaults to the identity (cold start).
+      qp_impl: inner-QP backend for the 'jnp' solver ('jnp' or the per-row
+        'pallas' kernel — one launch per row update, the legacy path).
+      solver_impl: 'jnp' (while/fori XLA program), 'fused' (ONE Pallas
+        launch for the whole solve, kernels/bcd_fused.py), 'fused_ref'
+        (its jnp oracle), or 'auto' (fused on TPU when n_hat fits the VMEM
+        budget, jnp otherwise).
     """
     Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
@@ -229,8 +265,30 @@ def solve_bcd(
         beta = 1e-4 * float(jnp.trace(Sigma)) / n
     if X0 is None:
         X0 = jnp.eye(n, dtype=Sigma.dtype)
+    else:
+        X0 = jnp.asarray(X0, Sigma.dtype)
     lam = jnp.asarray(lam, Sigma.dtype)
     beta_ = jnp.asarray(beta, Sigma.dtype)
+    impl = _resolve_solver_impl(solver_impl, n, Sigma.dtype.itemsize)
+    if impl in ("fused", "fused_ref"):
+        from repro.kernels import ops as kernel_ops
+
+        X, _, sweeps, hist = kernel_ops.bcd_solve(
+            Sigma, lam, beta_, X0, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+            tol=tol, tau_iters=tau_iters,
+            impl="pallas" if impl == "fused" else "ref",
+        )
+        trX = jnp.trace(X)
+        Z = X / trX
+        return BCDResult(
+            X=X,
+            Z=Z,
+            obj=augmented_objective(X, Sigma, lam, beta_),
+            phi=primal_value(Z, Sigma, lam),
+            history=hist,
+            sweeps=sweeps,
+            beta=float(beta),
+        )
     res = _solve_bcd_jit(
         Sigma, lam, beta_, X0, max_sweeps, qp_sweeps, jnp.asarray(tol, Sigma.dtype),
         tau_iters, qp_impl,
@@ -247,39 +305,13 @@ def solve_bcd_with_history(
     qp_sweeps: int = 4,
     tau_iters: int = 80,
 ) -> BCDResult:
-    """Like ``solve_bcd`` but records the augmented objective after every sweep
-    (used by the Fig-1 convergence benchmark; runs sweeps eagerly)."""
-    Sigma = jnp.asarray(Sigma)
-    n = Sigma.shape[0]
-    if beta is None:
-        beta = 1e-4 * float(jnp.trace(Sigma)) / n
-    lam_ = jnp.asarray(lam, Sigma.dtype)
-    beta_ = jnp.asarray(beta, Sigma.dtype)
-    X = jnp.eye(n, dtype=Sigma.dtype)
-
-    @jax.jit
-    def one_sweep(X):
-        return jax.lax.fori_loop(
-            0,
-            n,
-            lambda j, X: row_update(X, Sigma, lam_, beta_, j, qp_sweeps, tau_iters),
-            X,
-        )
-
-    hist = []
-    for _ in range(max_sweeps):
-        X = one_sweep(X)
-        hist.append(float(augmented_objective(X, Sigma, lam_, beta_)))
-    trX = jnp.trace(X)
-    Z = X / trX
-    return BCDResult(
-        X=X,
-        Z=Z,
-        obj=jnp.asarray(hist[-1]),
-        phi=primal_value(Z, Sigma, lam_),
-        history=jnp.asarray(hist),
-        sweeps=jnp.asarray(max_sweeps),
-        beta=float(beta),
+    """Like ``solve_bcd`` but guaranteed to run all ``max_sweeps`` sweeps so
+    ``history`` has no nan padding (Fig-1 convergence benchmark).  A negative
+    tol can never satisfy ``|dobj| <= tol (1 + |obj|)``, disabling the early
+    exit."""
+    return solve_bcd(
+        Sigma, lam, beta=beta, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+        tau_iters=tau_iters, tol=-1.0,
     )
 
 
@@ -291,22 +323,27 @@ def solve_bcd_grid(
     max_sweeps: int = 20,
     qp_sweeps: int = 4,
     tol: float = 1e-7,
+    tau_iters: int = 80,
+    X0=None,
 ) -> BCDResult:
     """vmap the solver over a lambda grid — the outer-level parallelism the
     paper's laptop could not exploit (DESIGN.md §5): on a TPU pod each
     lambda's reduced problem runs on its own VMEM-resident solve.  Returns a
-    batched BCDResult (leading axis = lambda)."""
+    batched BCDResult (leading axis = lambda).  The lambda-search bracketing
+    probe (`spca.search_lambda` with ``lam_grid_probe``) routes its multi-
+    lambda evaluations through here instead of solving one lambda at a time."""
     Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
     if beta is None:
         beta = 1e-4 * float(jnp.trace(Sigma)) / n
     lams = jnp.asarray(lams, Sigma.dtype)
-    X0 = jnp.eye(n, dtype=Sigma.dtype)
+    if X0 is None:
+        X0 = jnp.eye(n, dtype=Sigma.dtype)
 
     def one(lam):
         return _solve_bcd_jit(
             Sigma, lam, jnp.asarray(beta, Sigma.dtype), X0, max_sweeps,
-            qp_sweeps, jnp.asarray(tol, Sigma.dtype), 80,
+            qp_sweeps, jnp.asarray(tol, Sigma.dtype), tau_iters,
         )
 
     res = jax.vmap(one)(lams)

@@ -16,7 +16,7 @@ default deflation removes the selected words from the dictionary and re-runs
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +34,11 @@ class PCResult:
     reduced_n: int           # problem size after safe elimination
     gap: float               # duality-gap certificate on the reduced problem
     sweeps: int = 0
+    # Reduced-problem state for lambda-search warm starts: the feature
+    # indices of Sigma_hat's rows, and (only when requested via
+    # ``keep_reduced``) the solver iterate X on that support.
+    reduced_support: np.ndarray | None = field(default=None, repr=False)
+    X_reduced: np.ndarray | None = field(default=None, repr=False)
 
 
 @dataclass
@@ -47,6 +52,13 @@ class SPCAConfig:
     support_rel_tol: float = 1e-2
     lam_search_evals: int = 12
     card_slack: int = 2          # accept cardinality in [target, target+slack]
+    tau_iters: int = 80          # bisection steps for the tau sub-problem
+    qp_impl: str = "jnp"         # inner-QP backend of the 'jnp' solver
+    solver_impl: str = "auto"    # 'auto' | 'jnp' | 'fused' | 'fused_ref' (see bcd.solve_bcd)
+    reuse_covariance: bool = True  # build Sigma_hat once per search, slice per eval
+    warm_start: bool = True      # carry X between lambda evaluations
+    lam_grid_probe: int = 0      # >1: vmapped solve_bcd_grid bracketing probe
+    grid_probe_max_n: int = 512  # skip the probe above this reduced size
 
 
 def _as_stats(data, is_covariance: bool, center: bool):
@@ -73,6 +85,95 @@ def _as_stats(data, is_covariance: bool, center: bool):
     return np.asarray(screen.variances), build
 
 
+def _support_at(v: np.ndarray, lam: float, max_reduced: int) -> np.ndarray:
+    """Surviving-feature indices at ``lam`` (Thm 2.1 screen on masked
+    variances ``v``), with the solver-size guard applied.
+
+    Shared by `solve_at_lambda` and the `search_lambda` covariance cache so
+    both compute bit-identical supports.  Supports are nested in lambda:
+    ``_support_at(v, lam')`` is a subset of ``_support_at(v, lam)`` whenever
+    ``lam' >= lam`` (the top-``max_reduced`` cut preserves nesting because a
+    feature's variance rank among survivors does not change with lam).
+    """
+    support = np.flatnonzero(v >= lam)
+    if support.size == 0:
+        # lambda kills everything; keep the single largest-variance feature.
+        support = np.array([int(np.argmax(v))])
+    if support.size > max_reduced:
+        # Solver-size guard: keep the top max_reduced by variance.  This is a
+        # *heuristic* cut (recorded via reduced_n == max_reduced) — at the
+        # lambdas a small target cardinality commands it never triggers.
+        order = np.argsort(v[support])[::-1]
+        support = np.sort(support[order[:max_reduced]])
+    return support
+
+
+class ReducedCovarianceCache:
+    """Sigma_hat cache across the nested supports of a lambda search.
+
+    Supports shrink as lambda grows (Thm 2.1), so the reduced covariance is
+    built ONCE at the smallest lambda evaluated so far — one column gather +
+    one O(m n_hat^2) matmul — and every evaluation at a larger lambda slices
+    the needed principal submatrix out of it (O(n_hat'^2) gather, no
+    data-matrix pass).  Entries of a gram matrix depend only on their own
+    column pair, so the slice is bit-identical to a rebuild.
+
+    Seeding is lazy (first ``get``): geometric bisection usually ratchets
+    lambda *upward* from its first midpoint on decaying-variance data, so
+    the first evaluation's support is both the base and right-sized.  A
+    later support that escapes the base (lambda dipped below every previous
+    one, or variance ties broke nesting) falls back to a full rebuild that
+    re-seeds the cache with the larger support — never worse than the
+    rebuild-per-eval path.  ``builds``/``slices`` count the underlying
+    invocations (asserted by the driver tests).
+    """
+
+    def __init__(self, build):
+        self._build = build
+        self._support: np.ndarray | None = None
+        self._sigma = None
+        self.builds = 0
+        self.slices = 0
+
+    def get(self, support: np.ndarray):
+        support = np.asarray(support)
+        if self._support is not None and support.size <= self._support.size:
+            if support.size == self._support.size and np.array_equal(
+                support, self._support
+            ):
+                self.slices += 1
+                return self._sigma
+            pos = np.searchsorted(self._support, support)
+            pos = np.minimum(pos, self._support.size - 1)
+            if np.array_equal(self._support[pos], support):
+                self.slices += 1
+                idx = jnp.asarray(pos)
+                return self._sigma[jnp.ix_(idx, idx)]
+        self.builds += 1
+        self._support = support
+        self._sigma = self._build(support)
+        return self._sigma
+
+
+def _warm_x0(support: np.ndarray, prev_X, prev_support, dtype):
+    """Embed the previous lambda's iterate into the new support.
+
+    The common block keeps the previous (PD) principal submatrix; features
+    entering the support start at the identity — the resulting X0 is block
+    diagonal up to permutation, hence PD, and BCD ascends from any PD start.
+    """
+    if prev_X is None or prev_support is None:
+        return None
+    common, ia, ib = np.intersect1d(
+        support, prev_support, assume_unique=True, return_indices=True
+    )
+    if common.size == 0:
+        return None
+    X0 = np.eye(support.size)
+    X0[np.ix_(ia, ia)] = np.asarray(prev_X)[np.ix_(ib, ib)]
+    return jnp.asarray(X0, dtype)
+
+
 def solve_at_lambda(
     data,
     lam: float,
@@ -81,8 +182,17 @@ def solve_at_lambda(
     cfg: SPCAConfig | None = None,
     active_mask: np.ndarray | None = None,
     stats=None,
+    cov_cache: ReducedCovarianceCache | None = None,
+    warm: tuple | None = None,
+    keep_reduced: bool = False,
 ) -> PCResult:
-    """Full pipeline for one lambda.  ``active_mask`` masks deflated features."""
+    """Full pipeline for one lambda.  ``active_mask`` masks deflated features.
+
+    ``cov_cache`` reuses/slices the reduced covariance instead of rebuilding
+    it; ``warm`` is a ``(X_reduced, reduced_support)`` pair from a previous
+    evaluation used to warm-start the solver; ``keep_reduced`` retains the
+    solver iterate on the result for the caller's next warm start.
+    """
     if cfg is None:
         cfg = SPCAConfig()
     if stats is None:
@@ -91,17 +201,11 @@ def solve_at_lambda(
     v = variances.copy()
     if active_mask is not None:
         v = np.where(active_mask, v, -np.inf)
-    support = np.flatnonzero(v >= lam)
-    if support.size == 0:
-        # lambda kills everything; keep the single largest-variance feature.
-        support = np.array([int(np.argmax(v))])
-    if support.size > cfg.max_reduced:
-        # Solver-size guard: keep the top max_reduced by variance.  This is a
-        # *heuristic* cut (recorded via reduced_n == max_reduced) — at the
-        # lambdas a small target cardinality commands it never triggers.
-        order = np.argsort(v[support])[::-1]
-        support = np.sort(support[order[: cfg.max_reduced]])
-    Sigma_hat = build(support)
+    support = _support_at(v, lam, cfg.max_reduced)
+    Sigma_hat = cov_cache.get(support) if cov_cache is not None else build(support)
+    X0 = None
+    if warm is not None and cfg.warm_start:
+        X0 = _warm_x0(support, warm[0], warm[1], Sigma_hat.dtype)
     res = bcd.solve_bcd(
         Sigma_hat,
         lam,
@@ -109,6 +213,10 @@ def solve_at_lambda(
         max_sweeps=cfg.max_sweeps,
         qp_sweeps=cfg.qp_sweeps,
         tol=cfg.tol,
+        tau_iters=cfg.tau_iters,
+        X0=X0,
+        qp_impl=cfg.qp_impl,
+        solver_impl=cfg.solver_impl,
     )
     x_red = bcd.leading_sparse_component(res.Z, rel_tol=cfg.support_rel_tol)
     gap = float(validate.kkt_gap(res.X, Sigma_hat, lam, res.beta)[0])
@@ -124,7 +232,37 @@ def solve_at_lambda(
         reduced_n=int(support.size),
         gap=gap,
         sweeps=int(res.sweeps),
+        reduced_support=support,
+        X_reduced=np.asarray(res.X) if keep_reduced else None,
     )
+
+
+def _grid_probe_bracket(Sigma_base, lo, hi, target_card, cfg):
+    """Tighten the bisection bracket with ONE vmapped multi-lambda solve.
+
+    All probe lambdas are solved on the shared base support, which is safe:
+    by Thm 2.1 a feature with variance below lambda is absent from the
+    optimum of the *larger* problem too, so cardinalities read off the base
+    solves match the per-lambda eliminated solves.  Bracketing needs trends,
+    not converged solutions, so the probe runs few sweeps.
+    """
+    lams = np.geomspace(lo, hi, cfg.lam_grid_probe)
+    grid = bcd.solve_bcd_grid(
+        Sigma_base, lams, beta=cfg.beta,
+        max_sweeps=min(cfg.max_sweeps, 5), qp_sweeps=cfg.qp_sweeps,
+        tol=cfg.tol, tau_iters=cfg.tau_iters,
+    )
+    cards = []
+    for i in range(lams.size):
+        x = bcd.leading_sparse_component(grid.Z[i], rel_tol=cfg.support_rel_tol)
+        cards.append(int(np.count_nonzero(np.asarray(x))))
+    too_dense = [la for la, c in zip(lams, cards) if c > target_card + cfg.card_slack]
+    too_sparse = [la for la, c in zip(lams, cards) if c < target_card]
+    new_lo = max(too_dense) if too_dense else lo
+    new_hi = min(too_sparse) if too_sparse else hi
+    if new_lo < new_hi:
+        return float(new_lo), float(new_hi)
+    return lo, hi
 
 
 def search_lambda(
@@ -135,18 +273,28 @@ def search_lambda(
     cfg: SPCAConfig | None = None,
     active_mask: np.ndarray | None = None,
     stats=None,
+    diagnostics: dict | None = None,
 ) -> PCResult:
     """Bisection on lambda for a solution with cardinality ~ target_card.
 
     Cardinality decreases (weakly, not strictly monotonically) in lambda, so
     we bisect and keep the best candidate: prefer cardinality in
     [target, target+slack], else closest-from-above, else closest.
+
+    The search amortises work across evaluations (all default-on, see
+    SPCAConfig): the reduced covariance is built once at the smallest
+    lambda evaluated and sliced for every nested support
+    (`ReducedCovarianceCache`); each evaluation warm-starts the solver from
+    the previous solution embedded into the new support; and with
+    ``lam_grid_probe > 1`` a single vmapped `solve_bcd_grid` call tightens
+    the bracket before bisection.  ``diagnostics``, when given, is filled
+    with the eval/build/warm counters.
     """
     if cfg is None:
         cfg = SPCAConfig()
     if stats is None:
         stats = _as_stats(data, is_covariance, cfg.center)
-    variances, _ = stats
+    variances, build = stats
     v = variances.copy()
     if active_mask is not None:
         v = np.where(active_mask, v, -np.inf)
@@ -155,7 +303,26 @@ def search_lambda(
     lo_rank = min(max(30 * target_card, 100), vs.size) - 1
     lo = float(max(vs[lo_rank], 1e-12))
 
+    cache: ReducedCovarianceCache | None = None
+    if cfg.reuse_covariance:
+        cache = ReducedCovarianceCache(build)
+    if cfg.lam_grid_probe > 1:
+        # The probe solves on the support at the smallest bracketed lambda.
+        # Check the size guard BEFORE building anything, and eager-seed the
+        # cache only when the probe actually runs (every later evaluation is
+        # nested inside its support); otherwise seeding stays lazy — the
+        # first evaluation's support is the right-sized base.
+        probe_support = _support_at(v, lo, cfg.max_reduced)
+        if probe_support.size <= cfg.grid_probe_max_n:
+            base = cache.get(probe_support) if cache is not None \
+                else build(probe_support)
+            lo, hi = _grid_probe_bracket(base, lo, hi, target_card, cfg)
+
     best: PCResult | None = None
+    warm: tuple | None = None
+    evals = 0
+    warm_starts = 0
+    total_sweeps = 0
 
     def better(a: PCResult, b: PCResult | None) -> bool:
         if b is None:
@@ -173,7 +340,14 @@ def search_lambda(
         r = solve_at_lambda(
             data, lam, is_covariance=is_covariance, cfg=cfg,
             active_mask=active_mask, stats=stats,
+            cov_cache=cache, warm=warm, keep_reduced=cfg.warm_start,
         )
+        evals += 1
+        total_sweeps += r.sweeps
+        if warm is not None and cfg.warm_start:
+            warm_starts += 1
+        if cfg.warm_start:
+            warm = (r.X_reduced, r.reduced_support)
         if better(r, best):
             best = r
         if target_card <= r.cardinality <= target_card + cfg.card_slack:
@@ -183,7 +357,15 @@ def search_lambda(
         else:
             hi = lam   # too sparse -> lower lambda
     assert best is not None
-    return best
+    if diagnostics is not None:
+        diagnostics.update(
+            evals=evals,
+            warm_starts=warm_starts,
+            total_sweeps=total_sweeps,
+            cov_builds=cache.builds if cache is not None else evals,
+            cov_slices=cache.slices if cache is not None else 0,
+        )
+    return replace(best, X_reduced=None)   # drop the O(n_hat^2) iterate
 
 
 def fit_components(

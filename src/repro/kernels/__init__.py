@@ -2,7 +2,8 @@
 
   variance.py  — per-column sum/sumsq screen pass     (memory-bound)
   gram.py      — reduced covariance A^T A             (MXU-bound)
-  bcd_sweep.py — VMEM-resident box-QP coordinate descent (the BCD inner loop)
+  bcd_sweep.py — VMEM-resident box-QP coordinate descent (per-row legacy path)
+  bcd_fused.py — fused whole-solve BCD: one launch per solve (the hot path)
   project.py   — gather-matvec document->topic projection (serving hot path)
 
 ops.py holds the jit'd wrappers (interpret=True off-TPU), ref.py the
@@ -10,10 +11,11 @@ pure-jnp oracles every kernel is tested against.
 """
 from . import ops, ref
 from .ops import (
-    column_stats, column_variances, gram, qp_sweeps, sparse_project,
+    bcd_solve, column_stats, column_variances, fused_solve_fits, gram,
+    qp_sweeps, sparse_project,
 )
 
 __all__ = [
-    "ops", "ref", "column_stats", "column_variances", "gram", "qp_sweeps",
-    "sparse_project",
+    "ops", "ref", "bcd_solve", "column_stats", "column_variances",
+    "fused_solve_fits", "gram", "qp_sweeps", "sparse_project",
 ]

@@ -1,0 +1,215 @@
+r"""Pallas TPU kernel: fused VMEM-resident whole-solve BCD (Algorithm 1).
+
+This is the end state of the per-row -> fused-sweep migration (see
+"Solver kernel architecture" in ROADMAP.md).  The legacy path
+(`core.bcd.row_update` + `kernels.bcd_sweep.qp_sweep_pallas`) launches one
+`pallas_call` per row/column update — n launches per sweep, O(K n) per
+solve — re-padding the full n_hat x n_hat matrix and round-tripping X
+through HBM between every launch.  After safe feature elimination the
+reduced Sigma_hat is small (n_hat <= 768 after 128-lane padding keeps the
+~4 n_pad^2 f32 words of resident state inside a 12 MB budget), which
+is exactly the regime the paper's O(K n^3) complexity claim lives in: the
+*whole solve* fits a single core's ~16 MB VMEM.
+
+This kernel therefore executes the entire Algorithm 1 in ONE `pallas_call`:
+
+  while |F(X_k) - F(X_{k-1})| > tol (1 + |F|) and k < max_sweeps:   # on-chip
+      for j in 0..n_hat:                                # row/column updates
+          Y   = X with row/col j masked to zero         # VMEM elementwise
+          s   = Sigma[:, j] masked,  c = Sigma_jj - lam - Tr Y
+          u   <- box-QP coordinate descent on (11) via closed form (13)
+          tau <- branch-free bisection on the monotone derivative of (12)
+          X   <- Y + (Yu/tau) e_j^T + e_j (Yu/tau)^T + (c + tau) e_j e_j^T
+
+so a full `solve_bcd` is O(1) kernel launches instead of O(K n_hat): Sigma
+and X stay VMEM-resident for the whole solve, and every Y-column load in
+the inner coordinate loop is a VMEM->VREG move.
+
+The in-kernel early-exit criterion uses the barrier-free objective
+
+    F(X) = Tr(Sigma X) - lam ||X||_1 - (Tr X)^2 / 2
+
+(the beta*logdet barrier term would need an on-chip Cholesky; its
+sweep-to-sweep variation is O(beta) ~ 1e-4 and is irrelevant for the
+stopping test).  beta still enters the tau sub-problem exactly as in the
+host solver, so the *iterates* match `core.bcd` bit-for-bit-modulo-padding;
+only the stopping rule reads a different (equally monotone) functional.
+
+Padding: shapes are padded to 128 lanes.  Padded rows/cols of Sigma/X0 are
+zero and both loops run only to n_valid, so padded coordinates never
+contribute to w = Y u, the trace, or the objective.
+
+The coordinate recursion is inherently sequential (each eta depends on the
+w produced by the previous coordinate) so there is no grid parallelism —
+parallelism lives one level up (vmapped lambda-grid / deflation solves,
+see `core.bcd.solve_bcd_grid`).  Oracle: `ref.bcd_solve_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bcd_solve_kernel(
+    sig_ref, x0_ref, scal_ref, x_ref, hist_ref, meta_ref,
+    *, n_pad, hist_pad, max_sweeps, qp_sweeps, tau_iters,
+):
+    Sigma = sig_ref[...]
+    dtype = Sigma.dtype
+    lam = scal_ref[0, 0]
+    beta = scal_ref[0, 1]
+    n_valid = scal_ref[0, 2].astype(jnp.int32)
+    tol = scal_ref[0, 3]
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)[:, 0]
+    ri = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 1)
+    eyem = (ri == ci).astype(dtype)                 # diagonal mask
+
+    def coord_step(i, carry, Y, s, j):
+        u, w = carry
+        col = jax.lax.dynamic_slice(Y, (jnp.int32(0), i), (n_pad, 1))[:, 0]
+        y1 = col[i]
+        ui = u[i]
+        g = w[i] - y1 * ui                          # \hat y^T \hat u
+        lo = s[i] - lam
+        hi = s[i] + lam
+        eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+        eta_zero = jnp.where(g > 0, lo, hi)
+        eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+        eta = jnp.where(i == j, ui, eta)            # coordinate j is pinned
+        w = w + col * (eta - ui)
+        u = jax.lax.dynamic_update_slice(u, eta[None], (i,))
+        return u, w
+
+    def solve_tau(R2, c):
+        hi = jnp.maximum(1.0, -c) + jnp.sqrt(jnp.maximum(R2, 0.0)) + beta + 1.0
+        lo = jnp.minimum(beta / (beta + jnp.maximum(-c, 0.0) + 1.0), hi) * 1e-12
+
+        def bisect(_, bounds):
+            lo, hi = bounds
+            mid = 0.5 * (lo + hi)
+            g = mid + c - R2 / (mid * mid) - beta / mid
+            lo = jnp.where(g < 0, mid, lo)
+            hi = jnp.where(g < 0, hi, mid)
+            return lo, hi
+
+        lo, hi = jax.lax.fori_loop(0, tau_iters, bisect, (lo, hi))
+        return 0.5 * (lo + hi)
+
+    def row_update(j, X):
+        col = jax.lax.dynamic_slice(Sigma, (jnp.int32(0), j), (n_pad, 1))[:, 0]
+        mf = ((idx != j) & (idx < n_valid)).astype(dtype)
+        Y = X * mf[:, None] * mf[None, :]
+        s = col * mf
+        diag = jnp.sum(X * eyem, axis=1)
+        t = jnp.sum(diag) - diag[j]                 # Tr Y = Tr X - X_jj
+        c = col[j] - lam - t
+
+        def qp_sweep(_, carry):
+            return jax.lax.fori_loop(
+                0, n_valid,
+                functools.partial(coord_step, Y=Y, s=s, j=j), carry,
+            )
+
+        u, w = jax.lax.fori_loop(0, qp_sweeps, qp_sweep, (s, Y @ s))
+        tau = solve_tau(jnp.dot(u, w), c)
+
+        y = w / tau                                 # zero at j and in padding
+        ejf = ((idx == j) & (idx < n_valid)).astype(dtype)
+        X = Y + y[:, None] * ejf[None, :] + ejf[:, None] * y[None, :]
+        return X + (c + tau) * ejf[:, None] * ejf[None, :]
+
+    def partial_obj(X):
+        tr = jnp.sum(X * eyem)
+        return jnp.sum(Sigma * X) - lam * jnp.sum(jnp.abs(X)) - 0.5 * tr * tr
+
+    def cond(state):
+        _, _, _, _, k, done = state
+        return jnp.logical_not(done) & (k < max_sweeps)
+
+    def body(state):
+        X, hist, prev, _, k, _ = state
+        X = jax.lax.fori_loop(0, n_valid, row_update, X)
+        obj = partial_obj(X)
+        hist = jax.lax.dynamic_update_slice(hist, obj[None], (k,))
+        done = jnp.abs(obj - prev) <= tol * (1.0 + jnp.abs(obj))
+        return X, hist, obj, obj, k + 1, done
+
+    minus_inf = jnp.array(-jnp.inf, dtype)
+    state0 = (
+        x0_ref[...],
+        jnp.full((hist_pad,), jnp.nan, dtype),
+        minus_inf,
+        minus_inf,
+        jnp.array(0, jnp.int32),
+        jnp.array(False),
+    )
+    X, hist, _, obj, k, _ = jax.lax.while_loop(cond, body, state0)
+    x_ref[...] = X
+    hist_ref[0, :] = hist
+    meta_ref[0, 0] = obj
+    meta_ref[0, 1] = k.astype(dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_sweeps", "qp_sweeps", "tau_iters", "interpret")
+)
+def bcd_solve_pallas(
+    Sigma, lam, beta, X0, tol,
+    *, max_sweeps: int = 20, qp_sweeps: int = 4, tau_iters: int = 80,
+    interpret: bool = False,
+):
+    """Whole-solve fused BCD: ONE `pallas_call` for all sweeps of Algorithm 1.
+
+    Returns ``(X, obj, sweeps, history)`` where ``obj`` is the barrier-free
+    objective F(X) at exit, ``sweeps`` the number of sweeps executed, and
+    ``history`` the (max_sweeps,) nan-padded per-sweep F(X) trace.
+    """
+    n = Sigma.shape[0]
+    n_pad = max(128, ((n + 127) // 128) * 128)
+    hist_pad = max(128, ((max_sweeps + 127) // 128) * 128)
+    p = n_pad - n
+    dtype = jnp.asarray(Sigma).dtype
+    Sigma = jnp.asarray(Sigma, dtype)
+    X0 = jnp.asarray(X0, dtype)
+    if p:
+        Sigma = jnp.pad(Sigma, ((0, p), (0, p)))
+        X0 = jnp.pad(X0, ((0, p), (0, p)))
+    scal = jnp.stack([
+        jnp.asarray(lam, dtype), jnp.asarray(beta, dtype),
+        jnp.asarray(n, dtype), jnp.asarray(tol, dtype),
+    ])[None, :]
+    kern = functools.partial(
+        _bcd_solve_kernel, n_pad=n_pad, hist_pad=hist_pad,
+        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+    )
+    X, hist, meta = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, hist_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, n_pad), dtype),
+            jax.ShapeDtypeStruct((1, hist_pad), dtype),
+            jax.ShapeDtypeStruct((1, 2), dtype),
+        ],
+        interpret=interpret,
+    )(Sigma, X0, scal)
+    return (
+        X[:n, :n],
+        meta[0, 0],
+        meta[0, 1].astype(jnp.int32),
+        hist[0, :max_sweeps],
+    )

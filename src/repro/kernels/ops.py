@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .bcd_fused import bcd_solve_pallas
 from .bcd_sweep import qp_sweep_pallas
 from .gram import gram_pallas
 from .project import sparse_project_pallas
@@ -22,6 +23,25 @@ from .variance import column_stats_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# VMEM the fused solver may claim for its resident state: Sigma + X in/out
+# plus loop temporaries (Y, the mask outer products) all live on-chip at
+# once.  ~4 n_pad^2 words against a ~16 MB/core budget with headroom for
+# the compiler's double-buffering.
+_FUSED_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def fused_solve_fits(n: int, itemsize: int = 4) -> bool:
+    """Whether the whole-solve kernel's resident state fits the VMEM budget
+    at reduced size ``n`` (post-elimination n_hat, pre-padding)."""
+    n_pad = max(128, ((n + 127) // 128) * 128)
+    return 4 * n_pad * n_pad * itemsize <= _FUSED_VMEM_BUDGET_BYTES
+
+
+_bcd_solve_ref_jit = jax.jit(
+    ref.bcd_solve_ref, static_argnames=("max_sweeps", "qp_sweeps", "tau_iters")
+)
 
 
 def column_stats(A, *, impl: str = "auto", block_m: int = 256, block_n: int = 512):
@@ -49,6 +69,38 @@ def gram(A, *, impl: str = "auto", block_i: int = 128, block_j: int = 128,
         return ref.gram_ref(A)
     return gram_pallas(
         A, block_i=block_i, block_j=block_j, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+def bcd_solve(Sigma, lam, beta, X0=None, *, max_sweeps: int = 20,
+              qp_sweeps: int = 4, tol: float = 1e-7, tau_iters: int = 80,
+              impl: str = "auto"):
+    """Whole-solve fused BCD (Algorithm 1) — ONE kernel launch per solve.
+
+    ``auto`` selects the Pallas kernel on TPU when the resident state fits
+    the VMEM budget (`fused_solve_fits`), else the jnp oracle.  Returns
+    ``(X, obj, sweeps, history)``; ``obj``/``history`` are the barrier-free
+    objective used for the in-kernel early exit (see `bcd_solve` module doc).
+    """
+    Sigma = jnp.asarray(Sigma)
+    n = Sigma.shape[0]
+    if X0 is None:
+        X0 = jnp.eye(n, dtype=Sigma.dtype)
+    lam = jnp.asarray(lam, Sigma.dtype)
+    beta = jnp.asarray(beta, Sigma.dtype)
+    tol = jnp.asarray(tol, Sigma.dtype)
+    use_pallas = impl == "pallas" or (
+        impl == "auto" and _on_tpu() and fused_solve_fits(n, Sigma.dtype.itemsize)
+    )
+    if not use_pallas:
+        return _bcd_solve_ref_jit(
+            Sigma, lam, beta, X0, tol,
+            max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+        )
+    return bcd_solve_pallas(
+        Sigma, lam, beta, X0, tol,
+        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
         interpret=not _on_tpu(),
     )
 

@@ -1,4 +1,6 @@
 """End-to-end driver: lambda search, deflation, topic recovery."""
+from dataclasses import replace
+
 import numpy as np
 import pytest
 
@@ -45,6 +47,62 @@ def test_project_deflation_orthogonalish():
     x0, x1 = pcs[0].x, pcs[1].x
     c = abs(x0 @ x1) / (np.linalg.norm(x0) * np.linalg.norm(x1))
     assert c < 0.3
+
+
+def test_lambda_search_cached_covariance_matches_rebuild():
+    """Regression: the cached/sliced-covariance path must return the exact
+    supports of the rebuild-per-eval path (a gram entry depends only on its
+    own column pair, so slicing is bit-identical), while doing ONE build."""
+    X, _ = _planted(m=1500, n=250, seed=2)
+    cfg_cached = SPCAConfig(max_sweeps=12, lam_search_evals=8, warm_start=False)
+    cfg_rebuild = replace(cfg_cached, reuse_covariance=False)
+    d_cached, d_rebuild = {}, {}
+    r_cached = search_lambda(X, 4, cfg=cfg_cached, diagnostics=d_cached)
+    r_rebuild = search_lambda(X, 4, cfg=cfg_rebuild, diagnostics=d_rebuild)
+    assert np.array_equal(r_cached.support, r_rebuild.support)
+    assert r_cached.lam == r_rebuild.lam
+    assert r_cached.variance == pytest.approx(r_rebuild.variance, rel=1e-12)
+    # counting: one gather+matmul total (lazy seed at the first eval, every
+    # later eval slices) vs one build per evaluation
+    assert d_cached["cov_builds"] == 1
+    assert d_cached["cov_slices"] == d_cached["evals"] - 1
+    assert d_cached["cov_builds"] + d_cached["cov_slices"] == d_cached["evals"]
+    assert d_rebuild["cov_builds"] == d_rebuild["evals"]
+
+
+def test_lambda_search_warm_starts_every_subsequent_eval():
+    """The search must not cold-start X after the first evaluation, and the
+    warm-started search must land in the same acceptance window."""
+    X, _ = _planted(m=1500, n=250, seed=3)
+    cfg_warm = SPCAConfig(max_sweeps=12, lam_search_evals=8)
+    cfg_cold = replace(cfg_warm, warm_start=False)
+    d_warm, d_cold = {}, {}
+    r_warm = search_lambda(X, 4, cfg=cfg_warm, diagnostics=d_warm)
+    r_cold = search_lambda(X, 4, cfg=cfg_cold, diagnostics=d_cold)
+    assert d_warm["warm_starts"] == d_warm["evals"] - 1
+    assert d_cold["warm_starts"] == 0
+    # warm starts can only reduce the sweeps needed across the search
+    assert d_warm["total_sweeps"] <= d_cold["total_sweeps"]
+    assert np.array_equal(r_warm.support, r_cold.support)
+    # Both start points converge to the same unique optimum; at a finite
+    # sweep budget they may sit on slightly different iterates, so compare
+    # the explained variance with a relative tolerance.
+    assert r_warm.variance == pytest.approx(r_cold.variance, rel=1e-2)
+    # the returned result is stripped of the O(n_hat^2) iterate
+    assert r_warm.X_reduced is None
+
+
+def test_lambda_search_grid_probe_consistent():
+    """The vmapped solve_bcd_grid bracketing probe must not change the
+    answer, only (possibly) the number of bisection evaluations."""
+    X, _ = _planted(m=1500, n=250, seed=4)
+    cfg = SPCAConfig(max_sweeps=12, lam_search_evals=8)
+    cfg_probe = replace(cfg, lam_grid_probe=5)
+    d0, d1 = {}, {}
+    r0 = search_lambda(X, 4, cfg=cfg, diagnostics=d0)
+    r1 = search_lambda(X, 4, cfg=cfg_probe, diagnostics=d1)
+    assert np.array_equal(r0.support, r1.support)
+    assert d1["evals"] <= d0["evals"]
 
 
 def test_solve_at_lambda_explained_variance_reasonable():
