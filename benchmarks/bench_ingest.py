@@ -1,0 +1,133 @@
+"""Ingest throughput: dense-block vs CSR-chunk screen + Gram.
+
+The out-of-core claim in numbers: the dense streaming leg reads every one
+of the m*n elements per pass while the CSR leg touches only the nnz
+(>99% sparsity on text), so chunked sparse ingest should win by roughly
+the density factor on the memory-bound screen.  Reported per leg:
+
+  us_per_call — one full pass over the corpus
+  derived     — effective MB/s of *logical* dense traffic (m*n*4 bytes for
+                the dense leg, nnz*8 for the sparse leg), us/chunk, and
+                the chunk count
+
+``run_smoke`` is the --quick row: one small corpus, screen legs only.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.data import make_corpus
+from repro.data.bow import StreamingGram, StreamingStats
+from repro.sparse import write_corpus
+
+
+def _bench_pass(fn, reps: int = 3) -> float:
+    """Seconds per full streaming pass (host loop + device work)."""
+    fn()   # warm-up: jit traces for the fixed chunk shape
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
+              tag, gram_support=None):
+    m, n = corpus.n_docs, corpus.n_words
+    rows = []
+
+    def dense_screen():
+        acc = StreamingStats(n)
+        for b in corpus.batches(batch_docs):
+            acc.update(b)
+        return acc.finalize()
+
+    def sparse_screen():
+        acc = StreamingStats(n)
+        for c in store.iter_chunks(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows):
+            acc.update_csr(c)
+        return acc.finalize()
+
+    n_chunks = sum(
+        1 for _ in store.iter_chunks(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows)
+    )
+    dense_bytes = m * n * 4
+    sparse_bytes = store.nnz * 8
+    t_d = _bench_pass(dense_screen)
+    t_s = _bench_pass(sparse_screen)
+    rows.append({
+        "name": f"ingest_screen_dense_{tag}",
+        "us_per_call": t_d * 1e6,
+        "derived": f"logical={dense_bytes / t_d / 1e6:.0f}MB/s m={m} n={n}",
+    })
+    rows.append({
+        "name": f"ingest_screen_csr_{tag}",
+        "us_per_call": t_s * 1e6,
+        "derived": (
+            f"touched={sparse_bytes / t_s / 1e6:.0f}MB/s "
+            f"{t_s / n_chunks * 1e6:.0f}us/chunk chunks={n_chunks} "
+            f"nnz={store.nnz} speedup={t_d / t_s:.2f}x"
+        ),
+    })
+
+    if gram_support is not None:
+        support = np.asarray(gram_support)
+
+        def dense_gram():
+            acc = StreamingGram(support)
+            for b in corpus.batches(batch_docs):
+                acc.update(b)
+            return acc.finalize()
+
+        def sparse_gram():
+            acc = StreamingGram(support, chunk_rows=chunk_rows)
+            for c in store.iter_chunks(chunk_nnz=chunk_nnz,
+                                       chunk_rows=chunk_rows):
+                acc.update_csr(c)
+            return acc.finalize()
+
+        t_dg = _bench_pass(dense_gram)
+        t_sg = _bench_pass(sparse_gram)
+        rows.append({
+            "name": f"ingest_gram_dense_{tag}",
+            "us_per_call": t_dg * 1e6,
+            "derived": f"n_hat={support.size} "
+                       f"logical={dense_bytes / t_dg / 1e6:.0f}MB/s",
+        })
+        rows.append({
+            "name": f"ingest_gram_csr_{tag}",
+            "us_per_call": t_sg * 1e6,
+            "derived": (
+                f"n_hat={support.size} {t_sg / n_chunks * 1e6:.0f}us/chunk "
+                f"speedup={t_dg / t_sg:.2f}x"
+            ),
+        })
+    return rows
+
+
+def run(n_docs: int = 4000, n_words: int = 20_000):
+    """Full ingest comparison: screen + Gram on an NYTimes-shaped slice."""
+    corpus = make_corpus(n_docs, n_words, topics={"t": ["a", "b", "c", "d"]},
+                         seed=0)
+    _, var = corpus.column_stats_exact()
+    support = np.sort(np.argsort(var)[::-1][:256])
+    with tempfile.TemporaryDirectory() as d:
+        store = write_corpus(corpus, d, shard_nnz=1 << 20)
+        return _rows_for(
+            corpus, store, chunk_nnz=16_384, chunk_rows=512,
+            batch_docs=512, tag=f"{n_docs}x{n_words}",
+            gram_support=support,
+        )
+
+
+def run_smoke(n_docs: int = 600, n_words: int = 3_000):
+    """--quick row: small corpus, screen legs only."""
+    corpus = make_corpus(n_docs, n_words, topics={"t": ["a", "b"]}, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        store = write_corpus(corpus, d, shard_nnz=1 << 18)
+        return _rows_for(
+            corpus, store, chunk_nnz=4_096, chunk_rows=256,
+            batch_docs=256, tag="smoke",
+        )

@@ -26,7 +26,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 _BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
-_QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels"}
+_QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels", "ingest smoke"}
 
 
 def main(argv=None) -> None:
@@ -38,8 +38,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        bench_complexity, bench_convergence, bench_elimination, bench_kernels,
-        bench_lambda_search, bench_serve, bench_topics,
+        bench_complexity, bench_convergence, bench_elimination, bench_ingest,
+        bench_kernels, bench_lambda_search, bench_serve, bench_topics,
     )
 
     suites = [
@@ -50,11 +50,17 @@ def main(argv=None) -> None:
         ("Tables1-2 topics", bench_topics.run),
         ("O(n^3) complexity", bench_complexity.run),
         ("kernels", bench_kernels.run),
+        ("ingest smoke", bench_ingest.run_smoke),
+        ("ingest", bench_ingest.run),
         ("lambda search", bench_lambda_search.run),
         ("serving", bench_serve.run),
     ]
     if args.quick:
         suites = [s for s in suites if s[0] in _QUICK_SUITES]
+    else:
+        # the smoke leg is a reduced duplicate of "ingest", not a suite of
+        # its own — only --quick runs it
+        suites = [s for s in suites if s[0] != "ingest smoke"]
 
     results: dict[str, float] = {}
     print("name,us_per_call,derived")

@@ -23,6 +23,12 @@ from jax.sharding import PartitionSpec as P
 
 from .elimination import Screen
 
+# jax.shard_map graduated from jax.experimental in newer releases; take
+# whichever this jax provides.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
     """All mesh axes that shard documents (everything except 'model')."""
@@ -47,7 +53,7 @@ def distributed_variances(A, mesh: Mesh, *, center: bool = True) -> Screen:
         cnt = jax.lax.psum(cnt, axes)
         return s, ss, cnt
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         local, mesh=mesh, in_specs=(spec_in,), out_specs=(P(None), P(None), P(None))
     )
     s, ss, cnt = shard_fn(A)
@@ -71,7 +77,7 @@ def distributed_gram(A_red, mesh: Mesh, *, means=None) -> jax.Array:
         cnt = jnp.full((1,), a.shape[0], a.dtype)
         return jax.lax.psum(g, axes), jax.lax.psum(cnt, axes)
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         local, mesh=mesh, in_specs=(spec_in,), out_specs=(P(None, None), P(None))
     )
     g, cnt = shard_fn(A_red)
@@ -86,16 +92,10 @@ def distributed_screen_and_gram(
 ):
     """Fused end-to-end preprocessing: one variance pass, host-side support
     selection (tiny), one gram pass.  Returns (Sigma_hat, support, screen)."""
-    import numpy as np
+    from .elimination import select_support
 
     screen = distributed_variances(A, mesh, center=center)
-    v = np.asarray(screen.variances)
-    support = np.flatnonzero(v >= lam)
-    if support.size == 0:
-        support = np.array([int(np.argmax(v))])
-    if support.size > max_reduced:
-        order = np.argsort(v[support])[::-1]
-        support = np.sort(support[order[:max_reduced]])
+    support = select_support(screen.variances, lam, max_reduced)
     idx = jnp.asarray(support)
     axes = data_axes_of(mesh)
     cols = jax.jit(

@@ -25,7 +25,9 @@ class Screen(NamedTuple):
     """Result of the variance screen.
 
     Fields are ``jax.Array``s (device-resident); note the derived support
-    from ``safe_support``/``eliminate`` is a host-side ``np.ndarray``."""
+    from ``safe_support``/``eliminate`` is a host-side ``np.ndarray``, and
+    ``combine_screens`` returns ``count`` as a host int64 (an exact
+    integer regardless of the x64 flag)."""
 
     variances: jax.Array  # (n,) per-feature variance Sigma_ii
     means: jax.Array      # (n,) per-feature mean (0 when center=False)
@@ -48,25 +50,63 @@ def feature_variances(A: jax.Array, *, center: bool = True) -> Screen:
     return Screen(variances=jnp.maximum(var, 0.0), means=mean, count=jnp.asarray(m))
 
 
+@jax.jit
+def _pooled_moments(w, means, variances):
+    """Device-side pooled mean/variance from per-partial fractional
+    weights (stacked along axis 0)."""
+    mean = (w[:, None] * means).sum(0)
+    # E[x^2] pooled, then recentre.
+    second = (w[:, None] * (means * means + variances)).sum(0)
+    var = jnp.maximum(second - mean * mean, 0.0)
+    return mean, var
+
+
 def combine_screens(partials: list[Screen]) -> Screen:
     """Merge streaming/sharded partial screens (sum/sumsq accumulators).
 
     Each partial must carry *uncentered* sums: we reconstruct from
     ``mean_k, var_k, m_k`` the global mean/variance by the usual pooled
-    formulas.  Used by the streaming BOW pipeline and by the distributed
-    variance computation.
+    formulas.  Used by the streaming BOW pipeline (dense and CSR-chunk
+    legs alike) and by the distributed variance computation.
+
+    Counts are pooled as exact Python integers — a float pool would go
+    inexact past 2^53 rows — and the per-feature moments merge on device
+    (one stack + weighted reduction), not through per-partial NumPy
+    round-trips.
     """
-    counts = np.array([float(p.count) for p in partials])
-    m = counts.sum()
-    means = np.stack([np.asarray(p.means) for p in partials])
-    variances = np.stack([np.asarray(p.variances) for p in partials])
-    mean = (counts[:, None] * means).sum(0) / m
-    # E[x^2] pooled, then recentre.
-    second = (counts[:, None] * (variances + means**2)).sum(0) / m
-    var = np.maximum(second - mean**2, 0.0)
-    return Screen(
-        variances=jnp.asarray(var), means=jnp.asarray(mean), count=jnp.asarray(m)
-    )
+    if not partials:
+        raise ValueError("combine_screens needs at least one partial")
+    counts = [int(p.count) for p in partials]
+    m = sum(counts)
+    m_eff = max(m, 1)
+    w = jnp.asarray([c / m_eff for c in counts])
+    means = jnp.stack([jnp.asarray(p.means) for p in partials])
+    variances = jnp.stack([jnp.asarray(p.variances) for p in partials])
+    mean, var = _pooled_moments(w.astype(means.dtype), means, variances)
+    # Count stays a host int64: jnp.asarray(m) would overflow int32 past
+    # 2^31 rows whenever x64 is off — the very regime this merge targets.
+    return Screen(variances=var, means=mean, count=np.asarray(m, np.int64))
+
+
+def select_support(variances, lam: float, max_reduced: int | None = None
+                   ) -> np.ndarray:
+    """The one support-selection policy every pipeline leg shares.
+
+    Thm 2.1 screen (``variances >= lam``), with two guards: an empty
+    survivor set falls back to the single largest-variance feature, and
+    ``max_reduced`` (when given) keeps only the top-``max_reduced``
+    survivors by variance (sorted by index).  Dense, streaming,
+    distributed and out-of-core paths all call this, so they cannot
+    drift apart on threshold/fallback/truncation semantics.
+    """
+    v = np.asarray(variances)
+    support = np.flatnonzero(v >= lam)
+    if support.size == 0:
+        support = np.array([int(np.argmax(v))])
+    if max_reduced is not None and support.size > max_reduced:
+        order = np.argsort(v[support])[::-1]
+        support = np.sort(support[order[:max_reduced]])
+    return support
 
 
 def safe_support(variances, lam: float) -> np.ndarray:

@@ -59,10 +59,29 @@ class SPCAConfig:
     warm_start: bool = True      # carry X between lambda evaluations
     lam_grid_probe: int = 0      # >1: vmapped solve_bcd_grid bracketing probe
     grid_probe_max_n: int = 512  # skip the probe above this reduced size
+    # Out-of-core leg: chunk geometry + kernel backend when ``data`` is a
+    # `repro.sparse.SparseCorpus` store handle (see repro.sparse.engine).
+    chunk_nnz: int = 16_384      # CSR slots per fixed-shape chunk
+    chunk_rows: int = 512        # row capacity per chunk (Gram scratch height)
+    csr_impl: str = "auto"       # 'auto' | 'ref' | 'pallas' for the CSR kernels
 
 
-def _as_stats(data, is_covariance: bool, center: bool):
-    """Normalise input to (variances, reduced-covariance builder)."""
+def _as_stats(data, is_covariance: bool, center: bool, cfg=None):
+    """Normalise input to (variances, reduced-covariance builder).
+
+    Accepts a dense (m, n) data matrix, an (n, n) covariance
+    (``is_covariance=True``), or an out-of-core `SparseCorpus` store
+    handle (duck-typed on ``iter_chunks``), whose two streaming passes run
+    through the CSR kernels and never materialise an (m, n) array.
+    """
+    if hasattr(data, "iter_chunks"):
+        from repro.sparse import engine
+
+        cfg = cfg if cfg is not None else SPCAConfig()
+        return engine.sparse_stats(
+            data, center=center, impl=cfg.csr_impl,
+            chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
+        )
     if is_covariance:
         Sigma = jnp.asarray(data)
         variances = jnp.diag(Sigma)
@@ -94,18 +113,11 @@ def _support_at(v: np.ndarray, lam: float, max_reduced: int) -> np.ndarray:
     ``_support_at(v, lam')`` is a subset of ``_support_at(v, lam)`` whenever
     ``lam' >= lam`` (the top-``max_reduced`` cut preserves nesting because a
     feature's variance rank among survivors does not change with lam).
+    The max_reduced cut is a *heuristic* solver-size guard (recorded via
+    reduced_n == max_reduced) — at the lambdas a small target cardinality
+    commands it never triggers.
     """
-    support = np.flatnonzero(v >= lam)
-    if support.size == 0:
-        # lambda kills everything; keep the single largest-variance feature.
-        support = np.array([int(np.argmax(v))])
-    if support.size > max_reduced:
-        # Solver-size guard: keep the top max_reduced by variance.  This is a
-        # *heuristic* cut (recorded via reduced_n == max_reduced) — at the
-        # lambdas a small target cardinality commands it never triggers.
-        order = np.argsort(v[support])[::-1]
-        support = np.sort(support[order[:max_reduced]])
-    return support
+    return elimination.select_support(v, lam, max_reduced)
 
 
 class ReducedCovarianceCache:
@@ -196,7 +208,7 @@ def solve_at_lambda(
     if cfg is None:
         cfg = SPCAConfig()
     if stats is None:
-        stats = _as_stats(data, is_covariance, cfg.center)
+        stats = _as_stats(data, is_covariance, cfg.center, cfg)
     variances, build = stats
     v = variances.copy()
     if active_mask is not None:
@@ -293,7 +305,7 @@ def search_lambda(
     if cfg is None:
         cfg = SPCAConfig()
     if stats is None:
-        stats = _as_stats(data, is_covariance, cfg.center)
+        stats = _as_stats(data, is_covariance, cfg.center, cfg)
     variances, build = stats
     v = variances.copy()
     if active_mask is not None:
@@ -379,12 +391,24 @@ def fit_components(
 ) -> list[PCResult]:
     """Top-k sparse PCs.  deflation='remove' drops selected features from the
     dictionary between components (paper-style disjoint topics);
-    'project' applies Hotelling deflation to the covariance."""
+    'project' applies Hotelling deflation to the covariance.
+
+    ``data`` may be a dense (m, n) matrix, an (n, n) covariance, or a
+    `repro.sparse.SparseCorpus` store handle — the out-of-core path
+    streams CSR chunks and supports deflation='remove' only (Hotelling
+    deflation needs the full (n, n) covariance, which is exactly what an
+    out-of-core corpus cannot hold).
+    """
     if cfg is None:
         cfg = SPCAConfig()
+    if deflation == "project" and hasattr(data, "iter_chunks"):
+        raise ValueError(
+            "deflation='project' requires a dense (n, n) covariance; "
+            "use deflation='remove' with a SparseCorpus store"
+        )
     results: list[PCResult] = []
     if deflation == "remove":
-        stats = _as_stats(data, is_covariance, cfg.center)
+        stats = _as_stats(data, is_covariance, cfg.center, cfg)
         mask = np.ones(stats[0].shape[0], dtype=bool)
         for _ in range(n_components):
             r = search_lambda(

@@ -7,23 +7,66 @@ pipeline legs are streaming, single-pass, batch-at-a-time:
   StreamingStats  — per-word sum/sumsq for the Thm 2.1 variance screen
   StreamingGram   — A_S^T A_S on the post-elimination support
 
-Both consume dense row blocks (what `Corpus.batches` yields and what a real
-loader would produce per host) and route the per-batch reduction through the
-Pallas kernels (`repro.kernels.ops`), falling back to the jnp oracle on CPU.
-Both accumulators are trivially mergeable across hosts/pods — a single psum
-at finalise time (see core.distributed).
+Each accumulator has two input legs sharing one accumulator state (the
+`StreamingAccumulator` protocol, so the legs cannot drift apart):
+
+  update(block)      — dense row blocks (what `Corpus.batches` yields),
+                       routed through the dense Pallas kernels;
+  update_csr(chunk)  — fixed-shape padded `CSRChunk`s from the sharded
+                       store (`repro.sparse.store`), routed through the
+                       CSR Pallas kernels — O(nnz), never densifying.
+
+Both are trivially mergeable across hosts/pods — `merge` on the host,
+or a single psum at finalise time (see core.distributed), or
+`core.elimination.combine_screens` on finalized Screens.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.elimination import Screen
+from repro.core.elimination import Screen, select_support
 from repro.kernels import ops
 
 
-class StreamingStats:
+class StreamingAccumulator:
+    """Shared update/merge/finalize protocol for one-pass reductions.
+
+    Subclasses declare their summed state in ``_acc_fields`` (plus the
+    always-present ``count``) and implement the two update legs; ``merge``
+    is the one shared implementation, so the dense-block and CSR-chunk
+    paths accumulate into — and pool — identical state.
+    """
+
+    _acc_fields: tuple[str, ...] = ()
+
+    def update(self, batch) -> "StreamingAccumulator":
+        """Fold in a dense (rows, n) row block."""
+        raise NotImplementedError
+
+    def update_csr(self, chunk) -> "StreamingAccumulator":
+        """Fold in a `repro.sparse.store.CSRChunk` (fixed-shape, padded)."""
+        raise NotImplementedError
+
+    def merge(self, other: "StreamingAccumulator") -> "StreamingAccumulator":
+        assert type(self) is type(other), (type(self), type(other))
+        self._check_mergeable(other)
+        for f in self._acc_fields:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.count += other.count
+        return self
+
+    def finalize(self, **kw):
+        raise NotImplementedError
+
+    def _check_mergeable(self, other) -> None:
+        pass
+
+
+class StreamingStats(StreamingAccumulator):
     """One-pass per-column mean/variance accumulator."""
+
+    _acc_fields = ("sum", "sumsq")
 
     def __init__(self, n_features: int, *, impl: str = "auto"):
         self.n = n_features
@@ -39,33 +82,46 @@ class StreamingStats:
         self.count += batch.shape[0]
         return self
 
-    def merge(self, other: "StreamingStats") -> "StreamingStats":
-        assert self.n == other.n
-        self.sum += other.sum
-        self.sumsq += other.sumsq
-        self.count += other.count
+    def update_csr(self, chunk) -> "StreamingStats":
+        s, ss = ops.csr_column_stats(
+            jnp.asarray(chunk.values), jnp.asarray(chunk.col_ids),
+            n=self.n, impl=self.impl,
+        )
+        self.sum += np.asarray(s, np.float64)
+        self.sumsq += np.asarray(ss, np.float64)
+        self.count += chunk.n_rows   # empty rows count, padded slots don't
         return self
 
+    def _check_mergeable(self, other) -> None:
+        assert self.n == other.n
+
     def finalize(self, *, center: bool = True) -> Screen:
-        m = max(self.count, 1)
+        m = max(self.count, 1)   # guards the division only
         mean = self.sum / m if center else np.zeros(self.n)
         var = np.maximum(self.sumsq / m - mean**2, 0.0)
+        # True count, host int64: an empty accumulator must pool with
+        # weight 0, and jnp.asarray would overflow int32 past 2^31 rows
+        # with x64 off.
         return Screen(
             variances=jnp.asarray(var),
             means=jnp.asarray(mean),
-            count=jnp.asarray(m),
+            count=np.asarray(self.count, np.int64),
         )
 
 
-class StreamingGram:
+class StreamingGram(StreamingAccumulator):
     """One-pass reduced gram accumulator over the surviving columns."""
 
-    def __init__(self, support: np.ndarray, *, impl: str = "auto"):
+    _acc_fields = ("g",)
+
+    def __init__(self, support: np.ndarray, *, impl: str = "auto",
+                 chunk_rows: int = 512):
         self.support = np.asarray(support)
         k = self.support.size
         self.g = np.zeros((k, k), np.float64)
         self.count = 0
         self.impl = impl
+        self.chunk_rows = chunk_rows
 
     def update(self, batch) -> "StreamingGram":
         cols = jnp.asarray(batch)[:, self.support]
@@ -73,10 +129,38 @@ class StreamingGram:
         self.count += batch.shape[0]
         return self
 
-    def merge(self, other: "StreamingGram") -> "StreamingGram":
-        self.g += other.g
-        self.count += other.count
+    def update_csr(self, chunk) -> "StreamingGram":
+        # Map global column ids to support positions (support is sorted —
+        # it comes from flatnonzero); entries off the support get the
+        # >= n_hat sentinel the kernel/oracle drop.
+        k = self.support.size
+        if chunk.n_rows > self.chunk_rows:
+            raise ValueError(
+                f"chunk has {chunk.n_rows} rows > chunk_rows="
+                f"{self.chunk_rows}; iterate the store with "
+                f"chunk_rows <= the accumulator's"
+            )
+        if k == 0:
+            self.count += chunk.n_rows
+            return self
+        pos = np.searchsorted(self.support, chunk.col_ids)
+        pos_c = np.minimum(pos, k - 1)
+        local = np.where(
+            self.support[pos_c] == chunk.col_ids, pos_c, k
+        ).astype(np.int32)
+        self.g += np.asarray(
+            ops.csr_gram(
+                jnp.asarray(chunk.values), jnp.asarray(local),
+                jnp.asarray(chunk.seg_ids),
+                n_rows=self.chunk_rows, n_hat=k, impl=self.impl,
+            ),
+            np.float64,
+        )
+        self.count += chunk.n_rows
         return self
+
+    def _check_mergeable(self, other) -> None:
+        assert np.array_equal(self.support, other.support)
 
     def finalize(self, *, means: np.ndarray | None = None) -> np.ndarray:
         m = max(self.count, 1)
@@ -98,13 +182,7 @@ def screen_and_gram_streaming(batches, n_features: int, lam: float,
     for b in batches():
         stats.update(b)
     screen = stats.finalize(center=center)
-    v = np.asarray(screen.variances)
-    support = np.flatnonzero(v >= lam)
-    if support.size == 0:
-        support = np.array([int(np.argmax(v))])
-    if support.size > max_reduced:
-        order = np.argsort(v[support])[::-1]
-        support = np.sort(support[order[:max_reduced]])
+    support = select_support(screen.variances, lam, max_reduced)
     gram = StreamingGram(support, impl=impl)
     for b in batches():
         gram.update(b)

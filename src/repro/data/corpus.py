@@ -24,6 +24,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+# Largest dense (m, n) materialisation `Corpus.dense()` will allow before
+# pointing the caller at the out-of-core sparse store (repro.sparse).
+DENSE_BYTE_BUDGET = 2 << 30   # 2 GiB
+
 # Planted topics mirroring the paper's Table 1 (NYTimes) so the example
 # output reads like the paper's.
 NYTIMES_TOPICS: dict[str, list[str]] = {
@@ -62,8 +66,27 @@ class Corpus:
     def nnz(self) -> int:
         return int(self.counts.size)
 
-    def dense(self) -> np.ndarray:
-        """Materialise (n_docs, n_words) — small corpora only."""
+    def dense(self, *, max_bytes: int | None = None) -> np.ndarray:
+        """Materialise (n_docs, n_words) — small corpora only.
+
+        Refuses to allocate past ``max_bytes`` (default
+        `DENSE_BYTE_BUDGET`): the paper's corpora are exactly the ones a
+        dense (m, n) array cannot hold, and the supported route at that
+        scale is the sharded CSR store
+        (``repro.sparse.write_corpus(corpus, path)`` +
+        ``SparseCorpus.iter_chunks``).
+        """
+        budget = DENSE_BYTE_BUDGET if max_bytes is None else max_bytes
+        need = self.n_docs * self.n_words * 4
+        if need > budget:
+            raise MemoryError(
+                f"dense materialisation of ({self.n_docs}, {self.n_words}) "
+                f"needs {need / 1e9:.2f} GB > {budget / 1e9:.2f} GB budget "
+                f"(pass max_bytes= to override). At this scale use the "
+                f"out-of-core sparse store: "
+                f"repro.sparse.write_corpus(corpus, path) and stream "
+                f"SparseCorpus.iter_chunks through the CSR kernels."
+            )
         X = np.zeros((self.n_docs, self.n_words), np.float32)
         np.add.at(X, (self.doc_idx, self.word_idx), self.counts)
         return X

@@ -2,6 +2,8 @@
 
   variance.py  — per-column sum/sumsq screen pass     (memory-bound)
   gram.py      — reduced covariance A^T A             (MXU-bound)
+  csr_stats.py — segmented per-column sum/sumsq from CSR chunks (O(nnz))
+  csr_gram.py  — gather-Gram on the support from CSR chunks (O(nnz_S + n_hat^2))
   bcd_sweep.py — VMEM-resident box-QP coordinate descent (per-row legacy path)
   bcd_fused.py — fused whole-solve BCD: one launch per solve (the hot path)
   project.py   — gather-matvec document->topic projection (serving hot path)
@@ -11,11 +13,12 @@ pure-jnp oracles every kernel is tested against.
 """
 from . import ops, ref
 from .ops import (
-    bcd_solve, column_stats, column_variances, fused_solve_fits, gram,
-    qp_sweeps, sparse_project,
+    bcd_solve, column_stats, column_variances, csr_column_stats, csr_gram,
+    fused_solve_fits, gram, qp_sweeps, sparse_project,
 )
 
 __all__ = [
     "ops", "ref", "bcd_solve", "column_stats", "column_variances",
-    "fused_solve_fits", "gram", "qp_sweeps", "sparse_project",
+    "csr_column_stats", "csr_gram", "fused_solve_fits", "gram", "qp_sweeps",
+    "sparse_project",
 ]

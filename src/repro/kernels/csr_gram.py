@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: gather-Gram — Sigma_hat numerator from CSR chunks.
+
+After safe elimination only ``n_hat << n`` columns survive, but the
+streaming dense path still reads every column of every row block to slice
+out A_S.  This kernel builds ``G += A_S^T A_S`` for one store chunk
+*directly from the CSR entries*: entries are scatter-densified into a
+chunk-local ``(R, n_hat_pad)`` scratch (R = chunk row capacity) resident
+in VMEM, then the Gram tile is an MXU contraction over R.  Work is
+O(nnz_S) scatter + O(R n_hat^2) flops — never O(m n).
+
+Support mapping happens upstream (``repro.sparse.engine``): ``local_cols``
+holds each entry's position *within the support* and any value >= n_hat is
+a sentinel meaning "entry not on the support, drop it" (matching the
+oracle's ``mode='drop'`` scatter).
+
+Layout: the scratch is shaped ``(n_tiles, R, 128)`` — column ``c`` lives
+at (c // 128, seg, c % 128) — so both scatter indices are leading-dim
+dynamic slices and the lane dim stays static.  Grid: (n_tiles, n_tiles)
+output tiles; the scatter runs once at step (0, 0) and every step
+contracts two scratch tiles on the MXU.  Padded slots (value 0) are
+additively harmless.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(vals_ref, cols_ref, segs_ref, out_ref, b_ref, *, n_hat: int,
+            n_entries: int, R: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _scatter():
+        b_ref[...] = jnp.zeros_like(b_ref)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
+
+        def body(p, _):
+            c = cols_ref[0, p]
+            valid = c < n_hat
+            v = jnp.where(valid, vals_ref[0, p].astype(jnp.float32), 0.0)
+            cc = jnp.where(valid, c, 0)
+            oh = (lanes == cc % 128).astype(jnp.float32)
+            b_ref[pl.ds(cc // 128, 1), pl.ds(segs_ref[0, p], 1), :] += v * oh
+            return 0
+
+        jax.lax.fori_loop(0, n_entries, body, 0)
+
+    bi = b_ref[pl.ds(i, 1), :, :].reshape(R, 128)
+    bj = b_ref[pl.ds(j, 1), :, :].reshape(R, 128)
+    out_ref[...] = jax.lax.dot_general(
+        bi, bj,
+        dimension_numbers=(((0,), (0,)), ((), ())),   # contract rows
+        preferred_element_type=jnp.float32,
+    )
+
+
+def csr_gram_pallas(
+    values: jax.Array,
+    local_cols: jax.Array,
+    seg_ids: jax.Array,
+    n_rows: int,
+    n_hat: int,
+    *,
+    interpret: bool = False,
+):
+    """Chunk Gram ``G[a, b] = sum_r B[r, a] B[r, b]`` where ``B`` is the
+    (n_rows, n_hat) densification of the chunk on the support.
+
+    ``seg_ids`` must be chunk-local rows in [0, n_rows); ``local_cols``
+    entries >= n_hat are dropped (off-support sentinel).  Returns
+    (n_hat, n_hat) f32.
+    """
+    (E,) = values.shape
+    assert local_cols.shape == (E,) and seg_ids.shape == (E,)
+    n_pad = ((n_hat + 127) // 128) * 128
+    n_tiles = n_pad // 128
+    R = ((max(n_rows, 8) + 7) // 8) * 8
+    G = pl.pallas_call(
+        functools.partial(_kernel, n_hat=n_hat, n_entries=E, R=R),
+        grid=(n_tiles, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, E), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, E), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_tiles, R, 128), jnp.float32)],
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * R * n_pad * n_pad + 2 * E,
+            bytes_accessed=(3 * E + n_pad * n_pad) * 4,
+            transcendentals=0,
+        ),
+    )(
+        values.reshape(1, E),
+        jnp.asarray(local_cols, jnp.int32).reshape(1, E),
+        jnp.asarray(seg_ids, jnp.int32).reshape(1, E),
+    )
+    return G[:n_hat, :n_hat]

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: segmented per-column sum/sumsq from CSR chunks.
+
+The variance screen (Thm 2.1) over an out-of-core corpus must never
+densify: a >99%-sparse (m, n) matrix read as dense blocks wastes 100x the
+HBM bandwidth on zeros.  This kernel consumes the store's fixed-shape
+``(chunk_nnz,)`` entry chunks directly and scatter-accumulates into
+per-column ``(sum, sumsq)`` living in VMEM — one pass, O(nnz) work.
+
+Layout: the accumulators are shaped ``(n_pad/128, 128)`` so column ``c``
+maps to sublane-row ``c // 128``, lane ``c % 128``.  The scatter is a
+per-entry loop: a dynamic-sublane read-modify-write of one 128-lane row
+with a one-hot lane mask (TPU has no vector scatter; a dynamic sublane
+slice + VPU select is the native primitive).  Per entry that is one
+128-lane VPU op — nnz-proportional, vs the dense kernel's m*n.
+
+Grid: (chunk_nnz / block_e,) sequential, entries streamed through VMEM in
+``(1, block_e)`` tiles; both accumulators stay resident across steps.
+Padded slots (value 0, col 0) add zero and need no masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, cols_ref, sum_ref, sumsq_ref, *, block_e: int):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sumsq_ref[...] = jnp.zeros_like(sumsq_ref)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
+
+    def body(i, _):
+        v = vals_ref[0, i].astype(jnp.float32)
+        c = cols_ref[0, i]
+        row = c // 128
+        oh = (lanes == c % 128).astype(jnp.float32)
+        sum_ref[pl.ds(row, 1), :] += v * oh
+        sumsq_ref[pl.ds(row, 1), :] += (v * v) * oh
+        return 0
+
+    jax.lax.fori_loop(0, block_e, body, 0)
+
+
+def csr_column_stats_pallas(
+    values: jax.Array,
+    col_ids: jax.Array,
+    n: int,
+    *,
+    block_e: int = 4096,
+    interpret: bool = False,
+):
+    """Returns ``(col_sum, col_sumsq)`` of shape (n,) in f32 from flat CSR
+    entry arrays.  ``col_ids`` must be in [0, n); padded slots must carry
+    value 0 (their column is then irrelevant)."""
+    (E,) = values.shape
+    assert col_ids.shape == (E,)
+    block_e = min(block_e, max(128, E))
+    pe = (-E) % block_e
+    if pe:
+        values = jnp.pad(values, (0, pe))
+        col_ids = jnp.pad(col_ids, (0, pe))
+    Ep = E + pe
+    n_pad = ((n + 127) // 128) * 128
+    S = n_pad // 128
+    out_shape = [
+        jax.ShapeDtypeStruct((S, 128), jnp.float32),
+        jax.ShapeDtypeStruct((S, 128), jnp.float32),
+    ]
+    s, ss = pl.pallas_call(
+        functools.partial(_kernel, block_e=block_e),
+        grid=(Ep // block_e,),
+        in_specs=[
+            pl.BlockSpec((1, block_e), lambda e: (0, e)),
+            pl.BlockSpec((1, block_e), lambda e: (0, e)),
+        ],
+        out_specs=[
+            pl.BlockSpec((S, 128), lambda e: (0, 0)),
+            pl.BlockSpec((S, 128), lambda e: (0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=3 * Ep,
+            bytes_accessed=(2 * Ep + 2 * n_pad) * 4,
+            transcendentals=0,
+        ),
+    )(
+        values.reshape(1, Ep),
+        jnp.asarray(col_ids, jnp.int32).reshape(1, Ep),
+    )
+    return s.reshape(n_pad)[:n], ss.reshape(n_pad)[:n]

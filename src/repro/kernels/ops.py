@@ -13,9 +13,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import functools
+
 from . import ref
 from .bcd_fused import bcd_solve_pallas
 from .bcd_sweep import qp_sweep_pallas
+from .csr_gram import csr_gram_pallas
+from .csr_stats import csr_column_stats_pallas
 from .gram import gram_pallas
 from .project import sparse_project_pallas
 from .variance import column_stats_pallas
@@ -70,6 +74,38 @@ def gram(A, *, impl: str = "auto", block_i: int = 128, block_j: int = 128,
     return gram_pallas(
         A, block_i=block_i, block_j=block_j, block_k=block_k,
         interpret=not _on_tpu(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "impl", "block_e")
+)
+def csr_column_stats(values, col_ids, *, n: int, impl: str = "auto",
+                     block_e: int = 4096):
+    """(col_sum, col_sumsq) in f32 from flat CSR entries — the sparse leg
+    of the Thm 2.1 screen.  Chunks from the store have a fixed shape, so
+    this traces once per (chunk_nnz, n) and never recompiles."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.csr_column_stats_ref(values, col_ids, n)
+    return csr_column_stats_pallas(
+        values, col_ids, n, block_e=block_e, interpret=not _on_tpu()
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "n_hat", "impl")
+)
+def csr_gram(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
+             impl: str = "auto"):
+    """Chunk gather-Gram G = B^T B on the post-elimination support.
+
+    ``local_cols`` are support positions with >= n_hat meaning "drop"
+    (entry not on the support); ``seg_ids`` are chunk-local rows.  Fixed
+    chunk shapes keep this a single trace per (chunk_nnz, n_hat)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.csr_gram_ref(values, local_cols, seg_ids, n_rows, n_hat)
+    return csr_gram_pallas(
+        values, local_cols, seg_ids, n_rows, n_hat, interpret=not _on_tpu()
     )
 
 

@@ -25,6 +25,28 @@ def gram_ref(A):
     return A32.T @ A32
 
 
+def csr_column_stats_ref(values, col_ids, n: int):
+    """Per-column (sum, sumsq) from flat CSR entries — the segmented
+    scatter the csr_stats kernel implements.  Out-of-range columns are
+    dropped; padded slots (value 0) contribute nothing wherever they
+    point."""
+    v = values.astype(jnp.float32)
+    idx = jnp.asarray(col_ids, jnp.int32)
+    s = jnp.zeros(n, jnp.float32).at[idx].add(v, mode="drop")
+    ss = jnp.zeros(n, jnp.float32).at[idx].add(v * v, mode="drop")
+    return s, ss
+
+
+def csr_gram_ref(values, local_cols, seg_ids, n_rows: int, n_hat: int):
+    """Chunk gather-Gram oracle: densify the chunk's entries onto the
+    support — ``B[seg, col] += v`` with off-support sentinels
+    (col >= n_hat) dropped — then contract rows: G = B^T B in f32."""
+    B = jnp.zeros((n_rows, n_hat), jnp.float32).at[
+        jnp.asarray(seg_ids, jnp.int32), jnp.asarray(local_cols, jnp.int32)
+    ].add(values.astype(jnp.float32), mode="drop")
+    return B.T @ B
+
+
 def sparse_project_ref(X, support_idx, values):
     """Document->topic scores via the gather representation.
 

@@ -4,6 +4,12 @@ screen -> safe elimination -> reduced gram -> BCD -> topic tables.
     PYTHONPATH=src python -m repro.launch.spca_run --corpus nytimes \
         --docs 8000 --components 5 --target-card 5
 
+With ``--streaming`` the corpus is first written to a sharded CSR store on
+disk (``--store-dir``, default a temp dir) and the whole fit runs
+out-of-core from the store through the CSR Pallas kernels
+(``repro.sparse``): two streaming passes per component, never an (m, n)
+dense array — the paper's "cannot even load them into memory" regime.
+
 With --mesh NxM (and XLA_FLAGS device count) the variance/gram passes run
 as shard_map collectives over the data axes (core/distributed.py) — the
 same program a 512-chip run would execute per pod.
@@ -20,6 +26,7 @@ traffic drift — lives in ``repro.serve`` and is exercised end-to-end by
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -37,6 +44,12 @@ def main():
                     help="0 = the corpus's real vocabulary width")
     ap.add_argument("--components", type=int, default=5)
     ap.add_argument("--target-card", type=int, default=5)
+    ap.add_argument("--streaming", action="store_true",
+                    help="run out-of-core from a sharded CSR store on disk")
+    ap.add_argument("--store-dir", default="",
+                    help="where to write the CSR store (default: temp dir)")
+    ap.add_argument("--chunk-nnz", type=int, default=16_384)
+    ap.add_argument("--chunk-rows", type=int, default=512)
     args = ap.parse_args()
 
     exp = NYTIMES if args.corpus == "nytimes" else PUBMED
@@ -49,21 +62,41 @@ def main():
                          seed=exp.seed)
     print(f"  nnz={corpus.nnz} ({time.time() - t0:.1f}s)")
 
-    mean, var = corpus.column_stats_exact()
+    cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8,
+                     chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows)
 
-    def build(support):
-        import jax.numpy as jnp
+    if args.streaming:
+        from repro.sparse import write_corpus
+        from repro.sparse.engine import sparse_stats
 
-        A = corpus.columns_dense(np.asarray(support))
-        A = A - A.mean(0, keepdims=True)
-        return jnp.asarray((A.T @ A) / corpus.n_docs)
+        store_dir = args.store_dir or tempfile.mkdtemp(prefix="csr_store_")
+        t0 = time.time()
+        store = write_corpus(corpus, store_dir)
+        mb = store.nnz * (4 + 4) / 1e6 + 8 * (store.n_rows + store.n_shards) / 1e6
+        print(f"  wrote CSR store: {store.n_shards} shard(s), {mb:.1f} MB "
+              f"at {store_dir} ({time.time() - t0:.1f}s)")
+        t0 = time.time()
+        var, build = sparse_stats(
+            store, chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
+            impl=cfg.csr_impl,
+        )
+        print(f"  out-of-core variance screen: {time.time() - t0:.1f}s "
+              f"(one pass over {store.nnz} nnz)")
+    else:
+        mean, var = corpus.column_stats_exact()
+
+        def build(support):
+            import jax.numpy as jnp
+
+            A = corpus.columns_dense(np.asarray(support))
+            A = A - A.mean(0, keepdims=True)
+            return jnp.asarray((A.T @ A) / corpus.n_docs)
 
     mask = np.ones(n_words, bool)
-    cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8)
     for c in range(args.components):
         t0 = time.time()
         r = search_lambda(None, args.target_card, cfg=cfg,
-                          active_mask=mask, stats=(var, build))
+                          active_mask=mask, stats=(np.asarray(var), build))
         words = [corpus.vocab[i] for i in r.support]
         print(f"PC{c + 1}: card={r.cardinality} n_hat={r.reduced_n} "
               f"lam={r.lam:.3f} var={r.variance:.2f} gap={r.gap:.1e} "

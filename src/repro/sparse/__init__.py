@@ -1,0 +1,26 @@
+"""Out-of-core sparse corpus engine.
+
+  store.py  — disk-backed sharded CSR store (writer, manifest, mmap reader,
+              fixed-shape padded chunk iterator)
+  engine.py — streaming screen/Gram over a store through the CSR Pallas
+              kernels, multi-host merge via combine_screens, and the
+              (variances, build) stats pair the SPCA driver consumes
+
+The corresponding device kernels live in ``repro.kernels`` (csr_stats.py,
+csr_gram.py) with oracles in ``repro.kernels.ref`` and wrappers in
+``repro.kernels.ops``.
+"""
+from .engine import (
+    screen_and_gram_sparse, sparse_feature_variances, sparse_reduced_covariance,
+    sparse_stats,
+)
+from .store import (
+    CSRChunk, CSRStoreWriter, DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS,
+    SparseCorpus, write_corpus,
+)
+
+__all__ = [
+    "CSRChunk", "CSRStoreWriter", "DEFAULT_CHUNK_NNZ", "DEFAULT_CHUNK_ROWS",
+    "SparseCorpus", "write_corpus", "screen_and_gram_sparse",
+    "sparse_feature_variances", "sparse_reduced_covariance", "sparse_stats",
+]

@@ -1,0 +1,143 @@
+"""Streaming screen/Gram over a sharded CSR store — the out-of-core leg
+of the SPCA preprocessing pipeline.
+
+Mirrors the dense streaming pipeline (`data/bow.py`) chunk-for-batch:
+
+  pass 1  sparse_feature_variances — per-column sum/sumsq through the
+          csr_stats kernel, one partial `Screen` per host slice, pooled
+          with `core.elimination.combine_screens` (the same merge a real
+          multi-host run finishes with one psum — see core.distributed);
+  pass 2  sparse_reduced_covariance — gather-Gram on the post-elimination
+          support through the csr_gram kernel, O(nnz_S + n_hat^2) per
+          chunk, never materialising an (m, n) dense array.
+
+`sparse_stats` packages the two passes as the ``(variances, build)`` pair
+`core.spca._as_stats` hands to the lambda search, so `fit_components`
+runs end-to-end from a store handle: the `ReducedCovarianceCache` already
+guarantees ONE `build` per search, i.e. exactly two passes over the
+corpus per component.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elimination import Screen, combine_screens, select_support
+from repro.data.bow import StreamingGram, StreamingStats
+
+from .store import DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS, SparseCorpus
+
+
+def sparse_feature_variances(
+    store: SparseCorpus,
+    *,
+    center: bool = True,
+    impl: str = "auto",
+    chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    num_hosts: int = 1,
+) -> Screen:
+    """One streaming pass: the Thm 2.1 screen input from CSR chunks.
+
+    ``num_hosts > 1`` emulates the multi-host layout on one process: each
+    host slice reduces its own shards into a partial Screen and the pool
+    goes through `combine_screens` — byte-identical to what H real hosts
+    would produce and merge.
+    """
+    partials = []
+    for h in range(num_hosts):
+        acc = StreamingStats(store.n_cols, impl=impl)
+        for chunk in store.iter_chunks(
+            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+            host_id=h, num_hosts=num_hosts,
+        ):
+            acc.update_csr(chunk)
+        partials.append(acc.finalize(center=center))
+    if len(partials) == 1:
+        return partials[0]
+    return combine_screens(partials)
+
+
+def sparse_reduced_covariance(
+    store: SparseCorpus,
+    support: np.ndarray,
+    *,
+    means: np.ndarray | None = None,
+    impl: str = "auto",
+    chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    num_hosts: int = 1,
+):
+    """One streaming pass: Sigma_hat = A_S^T A_S / m (centred when
+    ``means`` is given) on the surviving columns, straight from chunks."""
+    support = np.asarray(support)
+    accs = []
+    for h in range(num_hosts):
+        acc = StreamingGram(support, impl=impl, chunk_rows=chunk_rows)
+        for chunk in store.iter_chunks(
+            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+            host_id=h, num_hosts=num_hosts,
+        ):
+            acc.update_csr(chunk)
+        accs.append(acc)
+    acc = accs[0]
+    for other in accs[1:]:
+        acc.merge(other)
+    return jnp.asarray(acc.finalize(means=means))
+
+
+def sparse_stats(
+    store: SparseCorpus,
+    *,
+    center: bool = True,
+    impl: str = "auto",
+    chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    num_hosts: int = 1,
+):
+    """The ``(variances, build)`` pair `core.spca` drives the lambda
+    search with, computed out-of-core.  ``build(support)`` is one more
+    streaming pass; the driver's covariance cache calls it once per
+    search."""
+    screen = sparse_feature_variances(
+        store, center=center, impl=impl,
+        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, num_hosts=num_hosts,
+    )
+    means = np.asarray(screen.means) if center else None
+
+    def build(support):
+        return sparse_reduced_covariance(
+            store, np.asarray(support), means=means,
+            impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+            num_hosts=num_hosts,
+        )
+
+    return np.asarray(screen.variances), build
+
+
+def screen_and_gram_sparse(
+    store: SparseCorpus,
+    lam: float,
+    *,
+    center: bool = True,
+    impl: str = "auto",
+    max_reduced: int = 2048,
+    chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    num_hosts: int = 1,
+):
+    """Two-pass out-of-core pipeline at a fixed lambda — the sparse twin
+    of `data.bow.screen_and_gram_streaming`.  Returns
+    (Sigma_hat, support, screen)."""
+    screen = sparse_feature_variances(
+        store, center=center, impl=impl,
+        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, num_hosts=num_hosts,
+    )
+    support = select_support(screen.variances, lam, max_reduced)
+    Sigma_hat = sparse_reduced_covariance(
+        store, support,
+        means=np.asarray(screen.means) if center else None,
+        impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+        num_hosts=num_hosts,
+    )
+    return Sigma_hat, support, screen

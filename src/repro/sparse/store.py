@@ -1,0 +1,325 @@
+"""Disk-backed sharded CSR store — the out-of-core corpus substrate.
+
+The paper's corpora are "so large that we cannot even load them into memory
+all at once" (NYTimes 300k x 102,660 at 1 GB, PubMed 8.2M x 141,043 at
+7.8 GB), and text BOW matrices are >99% sparse — so the on-disk format is
+CSR split into row-range *shards*, each shard three flat ``.npy`` files
+(``values`` f32, ``col_ids`` i32, ``row_ptr`` i64) memory-mapped at read
+time, plus a ``manifest.json`` describing the whole matrix.  Nothing about
+the store requires the matrix (or even one shard) to fit in memory.
+
+Chunk contract (what the Pallas CSR kernels consume)
+----------------------------------------------------
+``SparseCorpus.iter_chunks`` yields fixed-shape :class:`CSRChunk`s of
+exactly ``(chunk_nnz,)`` slots so downstream jit traces ONCE and never
+recompiles on the ragged tail:
+
+  * whole rows only — a document never spans two chunks (the gather-Gram
+    accumulates per-chunk outer products, which would drop cross terms for
+    a split row); a single row with nnz > chunk_nnz raises.
+  * ``seg_ids[p]`` is the row *local to the chunk* (< chunk_rows), so the
+    kernels can densify into a fixed (chunk_rows, ·) scratch.
+  * padded slots carry ``value 0, col_id 0, seg_id 0`` — additively
+    harmless for every consumer (stats scatter and Gram densify alike).
+  * empty rows occupy no slots but still count via ``n_rows`` (they shift
+    means/variances exactly like a zero dense row).
+
+Multi-host: shards are the unit of work — host ``h`` of ``H`` iterates
+``shards[h::H]`` and the partial accumulators merge with one
+``combine_screens`` / psum (see ``repro.sparse.engine``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_VERSION = 1
+
+# Default chunk geometry: 16k nnz slots / 512 rows keeps the Gram kernel's
+# densify scratch at chunk_rows * n_hat_pad * 4 B (4 MB at n_hat = 2048).
+DEFAULT_CHUNK_NNZ = 16_384
+DEFAULT_CHUNK_ROWS = 512
+
+
+class CSRChunk(NamedTuple):
+    """One fixed-shape padded chunk of whole CSR rows.
+
+    ``values``/``col_ids``/``seg_ids`` all have shape ``(chunk_nnz,)``;
+    slots past ``nnz`` are padding (value 0, col 0, seg 0).
+    """
+
+    values: np.ndarray    # (chunk_nnz,) float32
+    col_ids: np.ndarray   # (chunk_nnz,) int32, global column ids
+    seg_ids: np.ndarray   # (chunk_nnz,) int32, chunk-local row ids
+    row_offset: int       # global row index of local row 0
+    n_rows: int           # real rows packed in this chunk (incl. empty rows)
+    nnz: int              # real entries (<= chunk_nnz)
+
+
+class CSRStoreWriter:
+    """Appends CSR row blocks and splits them into shards on disk.
+
+    A shard closes at the first row boundary past ``shard_nnz`` stored
+    entries, so shards are row-aligned and independently iterable.
+    """
+
+    def __init__(self, path: str, n_cols: int, *, shard_nnz: int = 1 << 22):
+        self.path = path
+        self.n_cols = int(n_cols)
+        self.shard_nnz = int(shard_nnz)
+        os.makedirs(path, exist_ok=True)
+        self._shards: list[dict] = []
+        self._vals: list[np.ndarray] = []
+        self._cols: list[np.ndarray] = []
+        self._lens: list[np.ndarray] = []   # per-row nnz for the open shard
+        self._open_nnz = 0
+        self._total_rows = 0
+        self._total_nnz = 0
+        self._finished = False
+
+    def append_csr(self, values, col_ids, row_ptr) -> None:
+        """Append a block of rows given as local CSR arrays."""
+        values = np.asarray(values, np.float32)
+        col_ids = np.asarray(col_ids, np.int32)
+        row_ptr = np.asarray(row_ptr, np.int64)
+        if row_ptr[0] != 0 or row_ptr[-1] != values.size:
+            raise ValueError("row_ptr must start at 0 and end at nnz")
+        if col_ids.size and (col_ids.min() < 0 or col_ids.max() >= self.n_cols):
+            raise ValueError("col_ids out of range")
+        lens = np.diff(row_ptr)
+        # Split the incoming block at shard boundaries (row-aligned).
+        start = 0
+        while start < lens.size:
+            room = self.shard_nnz - self._open_nnz
+            take_nnz = np.cumsum(lens[start:])
+            n_take = int(np.searchsorted(take_nnz, room, side="right"))
+            if n_take == 0 and self._open_nnz == 0:
+                n_take = 1   # a single row larger than shard_nnz: own shard
+            if n_take == 0:
+                self._flush_shard()
+                continue
+            stop = start + n_take
+            lo, hi = row_ptr[start], row_ptr[stop]
+            self._vals.append(values[lo:hi])
+            self._cols.append(col_ids[lo:hi])
+            self._lens.append(lens[start:stop])
+            self._open_nnz += int(hi - lo)
+            start = stop
+            if self._open_nnz >= self.shard_nnz:
+                self._flush_shard()
+
+    def append_dense(self, block: np.ndarray) -> None:
+        """Convenience: sparsify a dense row block and append it."""
+        block = np.asarray(block)
+        rows, cols = np.nonzero(block)
+        row_ptr = np.zeros(block.shape[0] + 1, np.int64)
+        np.add.at(row_ptr, rows + 1, 1)
+        self.append_csr(block[rows, cols], cols, np.cumsum(row_ptr))
+
+    def _flush_shard(self) -> None:
+        if not self._lens:
+            return
+        vals = np.concatenate(self._vals) if self._vals else np.zeros(0, np.float32)
+        cols = np.concatenate(self._cols) if self._cols else np.zeros(0, np.int32)
+        lens = np.concatenate(self._lens)
+        row_ptr = np.zeros(lens.size + 1, np.int64)
+        np.cumsum(lens, out=row_ptr[1:])
+        k = len(self._shards)
+        names = {
+            "values": f"shard_{k:05d}.values.npy",
+            "col_ids": f"shard_{k:05d}.col_ids.npy",
+            "row_ptr": f"shard_{k:05d}.row_ptr.npy",
+        }
+        np.save(os.path.join(self.path, names["values"]), vals)
+        np.save(os.path.join(self.path, names["col_ids"]), cols)
+        np.save(os.path.join(self.path, names["row_ptr"]), row_ptr)
+        self._shards.append({
+            "files": names,
+            "row_offset": self._total_rows,
+            "n_rows": int(lens.size),
+            "nnz": int(vals.size),
+        })
+        self._total_rows += int(lens.size)
+        self._total_nnz += int(vals.size)
+        self._vals, self._cols, self._lens = [], [], []
+        self._open_nnz = 0
+
+    def finish(self) -> "SparseCorpus":
+        if self._finished:
+            raise RuntimeError("writer already finished")
+        self._flush_shard()
+        self._finished = True
+        manifest = {
+            "version": FORMAT_VERSION,
+            "n_rows": self._total_rows,
+            "n_cols": self.n_cols,
+            "nnz": self._total_nnz,
+            "shards": self._shards,
+        }
+        with open(os.path.join(self.path, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.write("\n")
+        return SparseCorpus.open(self.path)
+
+
+class SparseCorpus:
+    """Read handle on a sharded CSR store (shards are memory-mapped)."""
+
+    def __init__(self, path: str, manifest: dict):
+        self.path = path
+        self.manifest = manifest
+
+    @classmethod
+    def open(cls, path: str) -> "SparseCorpus":
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported store version {manifest.get('version')!r}"
+            )
+        return cls(path, manifest)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.manifest["n_rows"])
+
+    @property
+    def n_cols(self) -> int:
+        return int(self.manifest["n_cols"])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.manifest["nnz"])
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.manifest["shards"])
+
+    def _mmap(self, shard: dict, which: str) -> np.ndarray:
+        return np.load(
+            os.path.join(self.path, shard["files"][which]), mmap_mode="r"
+        )
+
+    def iter_shards(self, *, host_id: int = 0, num_hosts: int = 1):
+        """This host's shard slice as (values, col_ids, row_ptr, row_offset)
+        memory-mapped views — shards are the multi-host unit of work."""
+        if not (0 <= host_id < num_hosts):
+            raise ValueError(f"host_id {host_id} not in [0, {num_hosts})")
+        for shard in self.manifest["shards"][host_id::num_hosts]:
+            yield (
+                self._mmap(shard, "values"),
+                self._mmap(shard, "col_ids"),
+                self._mmap(shard, "row_ptr"),
+                int(shard["row_offset"]),
+            )
+
+    def iter_chunks(
+        self,
+        *,
+        chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+        chunk_rows: int = DEFAULT_CHUNK_ROWS,
+        host_id: int = 0,
+        num_hosts: int = 1,
+    ) -> Iterator[CSRChunk]:
+        """Fixed-shape padded chunks of whole rows (see module docstring).
+
+        A chunk closes when the next row would overflow either the
+        ``chunk_nnz`` slot budget or the ``chunk_rows`` row budget; the
+        final chunk of each shard is ragged and zero-padded to shape.
+        """
+        for vals, cols, row_ptr, row_offset in self.iter_shards(
+            host_id=host_id, num_hosts=num_hosts
+        ):
+            n_rows = row_ptr.size - 1
+            r = 0
+            while r < n_rows:
+                lo = int(row_ptr[r])
+                # Greedy pack: longest run of whole rows within both budgets.
+                r_hi = min(r + chunk_rows, n_rows)
+                stop = int(
+                    np.searchsorted(row_ptr[r + 1 : r_hi + 1], lo + chunk_nnz,
+                                    side="right")
+                ) + r
+                if stop == r:
+                    raise ValueError(
+                        f"row {row_offset + r} has "
+                        f"{int(row_ptr[r + 1]) - lo} nnz > chunk_nnz="
+                        f"{chunk_nnz}; raise chunk_nnz (rows may not span "
+                        f"chunks — the gather-Gram needs whole rows)"
+                    )
+                hi = int(row_ptr[stop])
+                k = hi - lo
+                values = np.zeros(chunk_nnz, np.float32)
+                col_ids = np.zeros(chunk_nnz, np.int32)
+                seg_ids = np.zeros(chunk_nnz, np.int32)
+                values[:k] = vals[lo:hi]
+                col_ids[:k] = cols[lo:hi]
+                seg_ids[:k] = (
+                    np.repeat(
+                        np.arange(stop - r, dtype=np.int32),
+                        np.diff(row_ptr[r : stop + 1]).astype(np.int64),
+                    )
+                )
+                yield CSRChunk(
+                    values=values,
+                    col_ids=col_ids,
+                    seg_ids=seg_ids,
+                    row_offset=row_offset + r,
+                    n_rows=stop - r,
+                    nnz=k,
+                )
+                r = stop
+
+    def to_dense(self, *, max_bytes: int | None = None) -> np.ndarray:
+        """Materialise the full matrix — tests/small stores only."""
+        if max_bytes is None:
+            from repro.data.corpus import DENSE_BYTE_BUDGET
+
+            max_bytes = DENSE_BYTE_BUDGET   # one budget for both guards
+        need = self.n_rows * self.n_cols * 4
+        if need > max_bytes:
+            raise MemoryError(
+                f"dense materialisation needs {need / 1e9:.2f} GB "
+                f"(> {max_bytes / 1e9:.2f} GB budget); iterate "
+                f"SparseCorpus.iter_chunks instead"
+            )
+        X = np.zeros(self.shape, np.float32)
+        for chunk in self.iter_chunks():
+            rows = chunk.row_offset + chunk.seg_ids[: chunk.nnz]
+            np.add.at(
+                X, (rows, chunk.col_ids[: chunk.nnz]), chunk.values[: chunk.nnz]
+            )
+        return X
+
+
+def write_corpus(
+    corpus, path: str, *, shard_nnz: int = 1 << 22
+) -> SparseCorpus:
+    """Convert an in-memory COO :class:`repro.data.corpus.Corpus` into a
+    sharded CSR store (the offline ingest step a real pipeline would run
+    once per corpus snapshot)."""
+    writer = CSRStoreWriter(path, corpus.n_words, shard_nnz=shard_nnz)
+    order = np.argsort(corpus.doc_idx, kind="stable")
+    di = corpus.doc_idx[order]
+    wi = corpus.word_idx[order]
+    ct = corpus.counts[order]
+    row_ptr = np.zeros(corpus.n_docs + 1, np.int64)
+    np.add.at(row_ptr, di.astype(np.int64) + 1, 1)
+    np.cumsum(row_ptr, out=row_ptr)
+    # Append in bounded row blocks so peak memory stays O(block nnz).
+    block_rows = 65_536
+    for lo_r in range(0, corpus.n_docs, block_rows):
+        hi_r = min(lo_r + block_rows, corpus.n_docs)
+        lo, hi = row_ptr[lo_r], row_ptr[hi_r]
+        writer.append_csr(
+            ct[lo:hi], wi[lo:hi], row_ptr[lo_r : hi_r + 1] - lo
+        )
+    return writer.finish()

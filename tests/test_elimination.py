@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import elimination, solve_bcd
 from repro.core.bcd import leading_sparse_component
@@ -66,6 +67,82 @@ def test_streaming_combine_matches_global():
     merged = combine_screens(parts)
     np.testing.assert_allclose(merged.variances, A.var(axis=0), rtol=1e-8)
     np.testing.assert_allclose(merged.means, A.mean(axis=0), rtol=1e-8)
+
+
+def test_combine_screens_integer_counts_exact():
+    """Counts pool as exact integers (a float pool breaks past 2^53)."""
+    huge = (1 << 53) + 1   # needs 54 mantissa bits: float64 cannot hold it
+    assert int(float(huge)) != huge
+    p = Screen(variances=jnp.ones(3), means=jnp.zeros(3),
+               count=np.array(huge, np.int64))
+    merged = combine_screens([p, p, p])
+    assert int(merged.count) == 3 * huge
+    np.testing.assert_allclose(merged.variances, np.ones(3))
+
+
+def test_combine_screens_count_is_host_int64():
+    """The pooled count must stay an exact host integer even past 2^31 —
+    jnp.asarray would overflow int32 whenever x64 is off."""
+    p = Screen(variances=jnp.ones(2), means=jnp.zeros(2),
+               count=np.array(1 << 33, np.int64))
+    merged = combine_screens([p, p])
+    assert isinstance(merged.count, np.ndarray)
+    assert merged.count.dtype == np.int64
+    assert int(merged.count) == 1 << 34
+
+
+def test_combine_screens_single_partial_identity():
+    A = _corpus(m=64, n=10, seed=7)
+    s = feature_variances(jnp.asarray(A))
+    merged = combine_screens([s])
+    np.testing.assert_allclose(merged.variances, s.variances, rtol=1e-12)
+    np.testing.assert_allclose(merged.means, s.means, rtol=1e-12)
+    assert int(merged.count) == int(s.count)
+
+
+def test_combine_screens_empty_raises():
+    with pytest.raises(ValueError):
+        combine_screens([])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), k=st.integers(2, 6))
+def test_property_combine_screens_order_invariant(seed, k):
+    """Permuting the partials must not change the pooled screen (beyond
+    float summation noise)."""
+    rng = np.random.default_rng(seed)
+    m, n = 40 * k, 17
+    A = rng.normal(size=(m, n)) * (1.0 + rng.random(n))[None, :]
+    cuts = np.sort(rng.choice(np.arange(1, m), size=k - 1, replace=False))
+    blocks = np.split(A, cuts)
+    parts = [feature_variances(jnp.asarray(b)) for b in blocks]
+    ref = combine_screens(parts)
+    perm = [parts[i] for i in rng.permutation(k)]
+    out = combine_screens(perm)
+    np.testing.assert_allclose(out.variances, ref.variances,
+                               rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(out.means, ref.means, rtol=1e-10, atol=1e-12)
+    assert int(out.count) == int(ref.count) == m
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), k=st.integers(1, 7))
+def test_property_split_merge_equals_one_shot(seed, k):
+    """Splitting rows into k partial screens and merging must equal the
+    one-shot feature_variances of the whole matrix."""
+    rng = np.random.default_rng(seed)
+    m, n = 30 * k + rng.integers(1, 10), 23
+    A = rng.normal(size=(m, n)) * 2.0
+    cuts = (np.sort(rng.choice(np.arange(1, m), size=k - 1, replace=False))
+            if k > 1 else np.array([], int))
+    parts = [feature_variances(jnp.asarray(b)) for b in np.split(A, cuts)]
+    merged = combine_screens(parts)
+    whole = feature_variances(jnp.asarray(A))
+    np.testing.assert_allclose(merged.variances, whole.variances,
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(merged.means, whole.means,
+                               rtol=1e-8, atol=1e-10)
+    assert int(merged.count) == m
 
 
 def test_lam_for_target_size():

@@ -1,0 +1,164 @@
+"""Out-of-core engine: streaming screen/Gram parity with the dense path
+and end-to-end `fit_components` from a store handle."""
+import numpy as np
+import pytest
+
+from repro.core import SPCAConfig, fit_components
+from repro.core.elimination import feature_variances
+from repro.data import make_corpus
+from repro.sparse import write_corpus
+from repro.sparse.engine import (
+    screen_and_gram_sparse, sparse_feature_variances, sparse_stats,
+)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    corpus = make_corpus(1500, 4000, topics={"t": ["a", "b", "c", "d"]}, seed=0)
+    path = str(tmp_path_factory.mktemp("store") / "csr")
+    store = write_corpus(corpus, path, shard_nnz=40_000)
+    return corpus, store
+
+
+def test_sparse_screen_matches_exact(setup):
+    corpus, store = setup
+    mean_e, var_e = corpus.column_stats_exact()
+    sc = sparse_feature_variances(store, chunk_nnz=4096, chunk_rows=256)
+    np.testing.assert_allclose(np.asarray(sc.variances), var_e,
+                               rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(sc.means), mean_e,
+                               rtol=1e-6, atol=1e-9)
+    assert int(sc.count) == corpus.n_docs
+
+
+def test_sparse_screen_multi_host_merge_matches_single(setup):
+    """H host slices, each reducing its own shards, pooled through
+    combine_screens — must equal the single-host pass."""
+    corpus, store = setup
+    assert store.n_shards >= 3
+    one = sparse_feature_variances(store, chunk_nnz=4096, chunk_rows=256)
+    many = sparse_feature_variances(store, chunk_nnz=4096, chunk_rows=256,
+                                    num_hosts=3)
+    np.testing.assert_allclose(np.asarray(many.variances),
+                               np.asarray(one.variances),
+                               rtol=1e-10, atol=1e-12)
+    assert int(many.count) == int(one.count)
+
+
+def test_sparse_screen_hosts_exceed_shards(setup):
+    """Hosts with no shards contribute count-0 partials that pool with
+    weight zero (finalize keeps the true count; no phantom rows)."""
+    corpus, store = setup
+    many = sparse_feature_variances(store, chunk_nnz=4096, chunk_rows=256,
+                                    num_hosts=store.n_shards + 5)
+    _, var_e = corpus.column_stats_exact()
+    np.testing.assert_allclose(np.asarray(many.variances), var_e,
+                               rtol=1e-6, atol=1e-9)
+    assert int(many.count) == corpus.n_docs
+
+
+def test_streaming_stats_empty_accumulator_reports_zero_count():
+    from repro.data.bow import StreamingStats
+
+    sc = StreamingStats(7).finalize()
+    assert int(sc.count) == 0
+    assert float(np.abs(np.asarray(sc.variances)).max()) == 0.0
+
+
+def test_sparse_gram_matches_dense_columns(setup):
+    corpus, store = setup
+    _, var = corpus.column_stats_exact()
+    lam = np.sort(var)[::-1][25]
+    Sigma, support, _ = screen_and_gram_sparse(
+        store, lam, chunk_nnz=4096, chunk_rows=256
+    )
+    A = corpus.columns_dense(support)
+    A = A - A.mean(0, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(Sigma), (A.T @ A) / corpus.n_docs, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_fit_components_from_store_matches_dense(setup):
+    """The acceptance contract at test scale: same supports, objective
+    within 1e-5, no (m, n) dense array on the sparse path."""
+    corpus, store = setup
+    cfg = SPCAConfig(max_sweeps=8, lam_search_evals=6,
+                     chunk_nnz=4096, chunk_rows=256)
+    rs = fit_components(store, 2, target_card=4, cfg=cfg)
+    rd = fit_components(corpus.dense().astype(np.float64), 2, target_card=4,
+                        cfg=cfg)
+    for a, b in zip(rs, rd):
+        assert np.array_equal(a.support, b.support)
+        assert a.variance == pytest.approx(b.variance, rel=1e-5)
+        # lambda comes off the (f32-kernel) variance estimates: close, not
+        # bit-equal to the all-f64 dense leg
+        assert a.lam == pytest.approx(b.lam, rel=1e-4)
+
+
+def test_fit_components_project_deflation_rejected(setup):
+    _, store = setup
+    with pytest.raises(ValueError, match="remove"):
+        fit_components(store, 1, deflation="project")
+
+
+def test_sparse_stats_build_is_cacheable(setup):
+    """sparse_stats' build pairs with the driver's covariance cache: one
+    extra pass per search, and supports slice out of the base."""
+    corpus, store = setup
+    var, build = sparse_stats(store, chunk_nnz=4096, chunk_rows=256)
+    _, var_e = corpus.column_stats_exact()
+    np.testing.assert_allclose(var, var_e, rtol=1e-6, atol=1e-9)
+    support = np.sort(np.argsort(var)[::-1][:12])
+    Sigma = np.asarray(build(support))
+    A = corpus.columns_dense(support)
+    A = A - A.mean(0, keepdims=True)
+    np.testing.assert_allclose(Sigma, (A.T @ A) / corpus.n_docs,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_screen_uncentered(setup):
+    corpus, store = setup
+    sc = sparse_feature_variances(store, center=False,
+                                  chunk_nnz=4096, chunk_rows=256)
+    X = corpus.dense()
+    np.testing.assert_allclose(np.asarray(sc.variances),
+                               (X.astype(np.float64) ** 2).mean(0),
+                               rtol=1e-5, atol=1e-8)
+    assert float(np.abs(np.asarray(sc.means)).max()) == 0.0
+
+
+@pytest.mark.slow
+def test_acceptance_scale_fit_from_store(tmp_path):
+    """ISSUE 3 acceptance: ~10^5 docs x 3e4 words written to disk shards,
+    fit end-to-end from the store, dense-path parity — while the sparse
+    leg never allocates an (m, n) array (it wouldn't fit the dense()
+    budget anyway: 1e5 * 3e4 * 4 B = 12 GB)."""
+    corpus = make_corpus(100_000, 30_000,
+                         topics={"t": ["a", "b", "c", "d", "e"]}, seed=1)
+    store = write_corpus(corpus, str(tmp_path / "big"), shard_nnz=1 << 21)
+    assert store.n_shards > 1
+    with pytest.raises(MemoryError):
+        corpus.dense()   # the dense route is genuinely unavailable
+    cfg = SPCAConfig(max_sweeps=8, lam_search_evals=6)
+    rs = fit_components(store, 1, target_card=5, cfg=cfg)
+
+    # dense reference without materialising (m, n): exact COO stats +
+    # column gather for the reduced covariance
+    _, var_e = corpus.column_stats_exact()
+    np.testing.assert_allclose(
+        sparse_feature_variances(store).variances, var_e, rtol=1e-5, atol=1e-8
+    )
+
+    def build(support):
+        import jax.numpy as jnp
+
+        A = corpus.columns_dense(np.asarray(support))
+        A = A - A.mean(0, keepdims=True)
+        return jnp.asarray((A.T @ A) / corpus.n_docs)
+
+    from repro.core import search_lambda
+
+    rd = search_lambda(None, 5, cfg=cfg, stats=(var_e, build))
+    assert np.array_equal(rs[0].support, rd.support)
+    assert rs[0].variance == pytest.approx(rd.variance, rel=1e-5)

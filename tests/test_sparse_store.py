@@ -1,0 +1,162 @@
+"""Sharded CSR store: round-trip, chunk contract, sharding, guards."""
+import numpy as np
+import pytest
+
+from repro.data import make_corpus
+from repro.data.corpus import Corpus
+from repro.sparse import CSRStoreWriter, SparseCorpus, write_corpus
+
+
+def _random_csr(m, n, density=0.05, seed=0, empty_rows=()):
+    """Random CSR rows; rows listed in ``empty_rows`` get zero entries."""
+    rng = np.random.default_rng(seed)
+    lens = rng.poisson(density * n, size=m).astype(np.int64)
+    for r in empty_rows:
+        lens[r] = 0
+    row_ptr = np.zeros(m + 1, np.int64)
+    np.cumsum(lens, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    col_ids = np.concatenate(
+        [np.sort(rng.choice(n, size=k, replace=False)) for k in lens if k]
+    ).astype(np.int32) if nnz else np.zeros(0, np.int32)
+    values = rng.normal(size=nnz).astype(np.float32)
+    return values, col_ids, row_ptr
+
+
+def _dense_of(values, col_ids, row_ptr, n):
+    m = row_ptr.size - 1
+    X = np.zeros((m, n), np.float32)
+    for r in range(m):
+        lo, hi = row_ptr[r], row_ptr[r + 1]
+        np.add.at(X[r], col_ids[lo:hi], values[lo:hi])
+    return X
+
+
+def _write(tmp_path, values, col_ids, row_ptr, n, shard_nnz=97):
+    w = CSRStoreWriter(str(tmp_path / "store"), n, shard_nnz=shard_nnz)
+    w.append_csr(values, col_ids, row_ptr)
+    return w.finish()
+
+
+def test_round_trip_with_empty_rows_and_ragged_tail(tmp_path):
+    n = 50
+    # empty rows at the start, middle and end; shard/chunk sizes chosen so
+    # the final chunk of each shard is ragged.
+    vals, cols, ptr = _random_csr(37, n, seed=1, empty_rows=(0, 15, 36))
+    store = _write(tmp_path, vals, cols, ptr, n, shard_nnz=23)
+    assert store.n_rows == 37 and store.n_cols == n
+    assert store.nnz == vals.size
+    X = _dense_of(vals, cols, ptr, n)
+    np.testing.assert_array_equal(store.to_dense(), X)
+
+
+@pytest.mark.parametrize("chunk_nnz,chunk_rows", [(16, 4), (31, 100), (1000, 3)])
+def test_chunk_contract(tmp_path, chunk_nnz, chunk_rows):
+    """Fixed shapes, zero padding, whole rows, local seg ids, full cover."""
+    n = 40
+    vals, cols, ptr = _random_csr(29, n, seed=2, empty_rows=(5, 6))
+    store = _write(tmp_path, vals, cols, ptr, n, shard_nnz=57)
+    X = _dense_of(vals, cols, ptr, n)
+    rebuilt = np.zeros_like(X)
+    rows_seen = 0
+    for chunk in store.iter_chunks(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows):
+        # fixed shape + padding contract
+        assert chunk.values.shape == (chunk_nnz,)
+        assert chunk.col_ids.shape == (chunk_nnz,)
+        assert chunk.seg_ids.shape == (chunk_nnz,)
+        assert (chunk.values[chunk.nnz:] == 0).all()
+        assert (chunk.col_ids[chunk.nnz:] == 0).all()
+        assert (chunk.seg_ids[chunk.nnz:] == 0).all()
+        # whole rows, chunk-local segments
+        assert 0 < chunk.n_rows <= chunk_rows
+        assert chunk.nnz <= chunk_nnz
+        if chunk.nnz:
+            assert chunk.seg_ids[: chunk.nnz].max() < chunk.n_rows
+            assert (np.diff(chunk.seg_ids[: chunk.nnz]) >= 0).all()
+        assert chunk.row_offset == rows_seen
+        rows_seen += chunk.n_rows
+        np.add.at(
+            rebuilt,
+            (chunk.row_offset + chunk.seg_ids[: chunk.nnz],
+             chunk.col_ids[: chunk.nnz]),
+            chunk.values[: chunk.nnz],
+        )
+    assert rows_seen == store.n_rows
+    np.testing.assert_array_equal(rebuilt, X)
+
+
+def test_row_larger_than_chunk_raises(tmp_path):
+    n = 30
+    vals = np.ones(20, np.float32)
+    cols = np.arange(20, dtype=np.int32)
+    ptr = np.array([0, 20], np.int64)
+    store = _write(tmp_path, vals, cols, ptr, n, shard_nnz=100)
+    with pytest.raises(ValueError, match="chunk_nnz"):
+        list(store.iter_chunks(chunk_nnz=8, chunk_rows=4))
+
+
+def test_multi_host_partition_covers_all_rows_once(tmp_path):
+    n = 25
+    vals, cols, ptr = _random_csr(50, n, seed=3)
+    store = _write(tmp_path, vals, cols, ptr, n, shard_nnz=19)
+    assert store.n_shards >= 3
+    X = _dense_of(vals, cols, ptr, n)
+    rebuilt = np.zeros_like(X)
+    H = 3
+    total_rows = 0
+    for h in range(H):
+        for chunk in store.iter_chunks(chunk_nnz=64, chunk_rows=16,
+                                       host_id=h, num_hosts=H):
+            total_rows += chunk.n_rows
+            np.add.at(
+                rebuilt,
+                (chunk.row_offset + chunk.seg_ids[: chunk.nnz],
+                 chunk.col_ids[: chunk.nnz]),
+                chunk.values[: chunk.nnz],
+            )
+    assert total_rows == store.n_rows
+    np.testing.assert_array_equal(rebuilt, X)
+
+
+def test_write_corpus_matches_dense(tmp_path):
+    corpus = make_corpus(300, 500, topics={"t": ["x", "y"]}, seed=4)
+    store = write_corpus(corpus, str(tmp_path / "c"), shard_nnz=5_000)
+    assert store.n_rows == corpus.n_docs
+    assert store.nnz == corpus.nnz
+    np.testing.assert_allclose(store.to_dense(), corpus.dense(), rtol=0, atol=0)
+
+
+def test_writer_validates_inputs(tmp_path):
+    w = CSRStoreWriter(str(tmp_path / "bad"), 10)
+    with pytest.raises(ValueError, match="col_ids"):
+        w.append_csr([1.0], [10], [0, 1])
+    with pytest.raises(ValueError, match="row_ptr"):
+        w.append_csr([1.0], [3], [1, 1])
+
+
+def test_reopen_store(tmp_path):
+    n = 12
+    vals, cols, ptr = _random_csr(9, n, seed=5)
+    store = _write(tmp_path, vals, cols, ptr, n)
+    again = SparseCorpus.open(store.path)
+    np.testing.assert_array_equal(again.to_dense(), store.to_dense())
+
+
+def test_corpus_dense_memory_guard():
+    c = Corpus(
+        n_docs=200_000, vocab=[f"w{i}" for i in range(40_000)],
+        doc_idx=np.zeros(1, np.int32), word_idx=np.zeros(1, np.int32),
+        counts=np.ones(1, np.float32),
+    )
+    with pytest.raises(MemoryError, match="repro.sparse"):
+        c.dense()
+    with pytest.raises(MemoryError, match="max_bytes"):
+        c.dense(max_bytes=1 << 20)
+    # small corpora remain unaffected
+    small = Corpus(
+        n_docs=3, vocab=["a", "b"],
+        doc_idx=np.array([0, 2], np.int32), word_idx=np.array([1, 0], np.int32),
+        counts=np.array([2.0, 1.0], np.float32),
+    )
+    X = small.dense()
+    assert X.shape == (3, 2) and X[0, 1] == 2.0 and X[2, 0] == 1.0
