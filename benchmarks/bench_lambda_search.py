@@ -3,21 +3,33 @@ warm-started bisection vs the seed behaviour of rebuilding Sigma_hat and
 cold-starting X at EVERY lambda evaluation.
 
 One row per variant on the planted-topics corpus; ``derived`` records the
-eval/build counters so the recompute economics are visible in the CSV, and
-the optimised row reports speedup over the rebuild baseline.  The
-``lam_grid_probe`` bracketing path is deliberately NOT timed here: its
-vmapped dense-grid solve only pays off when per-lambda solves are
-launch-bound (TPU, fused kernel) — on CPU the probe itself dominates.
-Its answer-consistency is covered by the driver tests.
+eval/build/launch counters so the recompute economics are visible in the
+CSV, and the optimised rows report speedup over the rebuild baseline.
+
+The ``batched_grid`` row (``batch_evals``) is recorded for its LAUNCH
+count — the acceptance metric is a full bracket search in <= 1/3 the
+launches of the per-eval path.  Its CPU wall time is expected to be
+WORSE: like the PR-2 ``lam_grid_probe`` (still not timed here), the
+batched rounds solve the whole lambda grid including the big low-lambda
+problems bisection never visits, which only pays off when solves are
+launch-bound (TPU, fused kernels) — on CPU the extra solves dominate.
+Answer-consistency is covered by the driver tests.
+
+The ``fit3_*`` rows time a 3-component deflation fit with jit caches
+CLEARED first, because that is where support bucketing earns its keep:
+unbucketed, every component's evaluations land on fresh support sizes and
+retracing dominates the wall clock; bucketed, later components reuse the
+first component's handful of shapes.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import replace
 
+import jax
 import numpy as np
 
-from repro.core import SPCAConfig, search_lambda
+from repro.core import SPCAConfig, fit_components, search_lambda
 
 
 def _planted(m=12000, n=1000, seed=0, k=8, boost=5.0):
@@ -40,8 +52,15 @@ def run(target_card: int = 8):
     base_cfg = SPCAConfig(max_sweeps=40, tol=1e-5, lam_search_evals=10)
     variants = [
         ("rebuild_coldstart", replace(base_cfg, reuse_covariance=False,
-                                      warm_start=False)),
+                                      warm_start=False,
+                                      support_bucketing=False)),
+        ("unbucketed_warmstart", replace(base_cfg, support_bucketing=False)),
         ("cached_warmstart", base_cfg),
+        # Whole bracket rounds submitted as ONE batched launch each: the
+        # launch count in `derived` is the acceptance metric (<= 1/3 the
+        # per-eval path's launches even on CPU, where the launch is the
+        # vmapped masked oracle).
+        ("batched_grid", replace(base_cfg, batch_evals=8)),
     ]
     rows = []
     t_baseline = None
@@ -63,10 +82,46 @@ def run(target_card: int = 8):
             "us_per_call": dt * 1e6,
             "derived": (
                 f"card={r.cardinality} evals={diag['evals']} "
+                f"launches={diag['solve_launches']} "
                 f"cov_builds={diag['cov_builds']} "
                 f"warm_starts={diag['warm_starts']} "
                 f"total_sweeps={diag['total_sweeps']} "
                 f"speedup={t_baseline / max(dt, 1e-9):.2f}x"
+            ),
+        })
+    rows.extend(run_deflation_retrace(X))
+    return rows
+
+
+def run_deflation_retrace(X, n_components: int = 3, target_card: int = 8):
+    """Trace-INCLUSIVE cost of a multi-component fit, with and without
+    support bucketing.  jit caches are cleared before each timing, so the
+    rows measure what a fresh process pays: one `_solve_bcd_jit` trace per
+    distinct support shape.  Bucketing collapses the shape set."""
+    cfg_b = SPCAConfig(max_sweeps=20, tol=1e-6, lam_search_evals=8)
+    variants = [
+        ("fit3_unbucketed", replace(cfg_b, support_bucketing=False)),
+        ("fit3_bucketed", cfg_b),
+    ]
+    rows = []
+    t_unbucketed = None
+    for name, cfg in variants:
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        pcs = fit_components(X, n_components, target_card=target_card,
+                             cfg=cfg)
+        dt = time.perf_counter() - t0
+        if t_unbucketed is None:
+            t_unbucketed = dt
+        shapes = sorted({pc.reduced_n for pc in pcs})
+        rows.append({
+            "name": f"lambda_search_{name}",
+            "us_per_call": dt * 1e6,
+            "derived": (
+                f"components={n_components} "
+                f"final_shapes={'|'.join(map(str, shapes))} "
+                f"cold_s={dt:.2f} "
+                f"speedup={t_unbucketed / max(dt, 1e-9):.2f}x"
             ),
         })
     return rows

@@ -1,17 +1,72 @@
-"""§Perf before/after: compare roofline terms across two dry-run JSONs.
+"""§Perf before/after — two comparison modes.
+
+Roofline mode (the original): compare roofline terms across two dry-run
+JSONs:
 
     PYTHONPATH=src python benchmarks/perf_compare.py \
         benchmarks/dryrun_baseline.json benchmarks/dryrun.json
+
+Bench-gate mode: compare two ``BENCH_spca.json``-style name->us_per_call
+dumps and report regressions.  This is the engine behind
+``benchmarks/run.py --check``, which measures fresh numbers and fails the
+run when a kernel row regresses by more than the threshold:
+
+    PYTHONPATH=src python benchmarks/perf_compare.py --bench \
+        benchmarks/BENCH_spca.json fresh.json
 """
 from __future__ import annotations
 
 import json
 import sys
 
-from benchmarks.roofline import terms
+# Rows gated by `run.py --check`: the kernel-layer benches are stable
+# compiled-code timings; the corpus/driver rows wobble with host load and
+# would make a 20% gate flaky.
+GATED_PREFIXES = ("kernel_",)
+DEFAULT_THRESHOLD = 0.20
+
+
+def bench_regressions(
+    baseline: dict, fresh: dict, *, threshold: float = DEFAULT_THRESHOLD,
+    prefixes: tuple[str, ...] = GATED_PREFIXES,
+) -> list[dict]:
+    """Rows present in both dumps whose fresh us_per_call regressed by more
+    than ``threshold`` (relative).  Rows only in one dump are not gated —
+    new benches must be able to land, and retired ones to leave."""
+    out = []
+    for name in sorted(fresh):
+        if not name.startswith(prefixes) or name not in baseline:
+            continue
+        base, new = float(baseline[name]), float(fresh[name])
+        if base <= 0.0:       # seed rows that never measured anything
+            continue
+        ratio = new / base
+        if ratio > 1.0 + threshold:
+            out.append({
+                "name": name, "baseline_us": base, "fresh_us": new,
+                "ratio": ratio,
+            })
+    return out
+
+
+def print_bench_report(baseline: dict, fresh: dict,
+                       regressions: list[dict]) -> None:
+    gated = [n for n in sorted(fresh)
+             if n.startswith(GATED_PREFIXES) and n in baseline
+             and float(baseline[n]) > 0.0]
+    print(f"perf gate: {len(gated)} kernel row(s) compared, "
+          f"{len(regressions)} regression(s) over "
+          f"{DEFAULT_THRESHOLD:.0%}")
+    for n in gated:
+        ratio = float(fresh[n]) / float(baseline[n])
+        flag = "  REGRESSED" if any(r["name"] == n for r in regressions) else ""
+        print(f"  {n}: {float(baseline[n]):.1f} -> {float(fresh[n]):.1f} us "
+              f"({ratio:.2f}x){flag}")
 
 
 def index(path):
+    from benchmarks.roofline import terms
+
     out = {}
     for rec in json.load(open(path)):
         t = terms(rec)
@@ -20,9 +75,9 @@ def index(path):
     return out
 
 
-def main():
-    base = index(sys.argv[1])
-    new = index(sys.argv[2])
+def roofline_main(base_path: str, new_path: str):
+    base = index(base_path)
+    new = index(new_path)
     print("| cell | term | before_s | after_s | delta |")
     print("|---|---|---|---|---|")
     for key in sorted(new):
@@ -38,6 +93,23 @@ def main():
         if abs(rb - rn) > 0.005:
             print(f"| {key[0]} x {key[1]} | roofline_frac | {rb:.3f} | "
                   f"{rn:.3f} | {'+' if rn>rb else ''}{rn-rb:.3f} |")
+
+
+def bench_main(base_path: str, new_path: str) -> int:
+    with open(base_path) as f:
+        baseline = json.load(f)
+    with open(new_path) as f:
+        fresh = json.load(f)
+    regressions = bench_regressions(baseline, fresh)
+    print_bench_report(baseline, fresh, regressions)
+    return 1 if regressions else 0
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--bench"]
+    if "--bench" in sys.argv[1:]:
+        sys.exit(bench_main(args[0], args[1]))
+    roofline_main(args[0], args[1])
 
 
 if __name__ == "__main__":

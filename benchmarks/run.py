@@ -6,8 +6,18 @@ file so the perf trajectory can be tracked PR-over-PR.  Roofline tables
 (from the dry-run JSON) are appended when benchmarks/dryrun.json exists.
 
 ``--quick`` runs the kernel + convergence suites only (the solver hot
-path); the full run adds elimination, topics, complexity, lambda-search
-and serving.
+path; this includes the batched-solver smoke row in the kernels suite);
+the full run adds elimination, topics, complexity, lambda-search and
+serving.
+
+``--check`` turns the run into a regression gate: fresh numbers are
+compared against the committed BENCH_spca.json (via
+`perf_compare.bench_regressions`) and the process exits nonzero when any
+``kernel_*`` row regresses by more than 20%.  The JSON dump is NOT
+rewritten in this mode — the committed file stays the baseline.  Compose
+with ``--quick`` for a fast gate over the kernel rows:
+
+    PYTHONPATH=src python benchmarks/run.py --quick --check
 """
 from __future__ import annotations
 
@@ -33,9 +43,22 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="run the kernel + convergence suites only")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: compare against the committed "
+                         "JSON, exit nonzero on >20%% kernel-row "
+                         "regressions, never rewrite the baseline")
     ap.add_argument("--json", default=os.path.join(_BENCH_DIR, "BENCH_spca.json"),
                     help="path of the machine-readable name->us_per_call dump")
     args = ap.parse_args(argv)
+
+    committed: dict[str, float] = {}
+    if args.check:
+        try:
+            with open(args.json) as f:
+                committed = json.load(f)
+        except (OSError, ValueError):
+            print(f"--check: no readable baseline at {args.json}; "
+                  "nothing to gate against", file=sys.stderr)
 
     from benchmarks import (
         bench_complexity, bench_convergence, bench_elimination, bench_ingest,
@@ -91,6 +114,33 @@ def main(argv=None) -> None:
         except Exception as e:
             print(f"roofline,nan,ERROR {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+
+    if args.check:
+        # Gate mode: the committed dump is the baseline — report, exit
+        # nonzero on regression, and leave the file untouched.
+        from benchmarks import perf_compare
+
+        regressions = perf_compare.bench_regressions(committed, results)
+        perf_compare.print_bench_report(committed, results, regressions)
+        # A baseline kernel row that produced nothing fresh means the gated
+        # suite crashed (suite exceptions print ERROR rows but are
+        # swallowed above) or a bench was silently dropped — both must
+        # fail, or a crash would pass the very gate it broke.  Renaming a
+        # bench therefore requires updating the committed JSON in the same
+        # change.
+        missing = [n for n in sorted(committed)
+                   if n.startswith(perf_compare.GATED_PREFIXES)
+                   and float(committed[n]) > 0.0 and n not in results]
+        if missing:
+            print(f"--check FAILED: gated row(s) missing from this run: "
+                  f"{', '.join(missing)}", file=sys.stderr)
+            sys.exit(1)
+        if regressions:
+            print(f"--check FAILED: {len(regressions)} kernel row(s) "
+                  "regressed >20%", file=sys.stderr)
+            sys.exit(1)
+        print("--check passed", file=sys.stderr)
+        return
 
     # Merge into any existing dump instead of overwriting, so a --quick run
     # (or a run with a failed suite) refreshes its rows without clobbering

@@ -32,6 +32,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class BCDResult(NamedTuple):
@@ -209,11 +210,14 @@ def _solve_bcd_jit(
     )
 
 
-def _resolve_solver_impl(solver_impl: str, n: int, itemsize: int) -> str:
-    """Map 'auto' to a concrete impl: the fused whole-solve kernel on TPU
-    when the resident state fits VMEM, the jnp while/fori program elsewhere
-    (interpret-mode Pallas on CPU measures the interpreter, not the kernel —
-    see ROADMAP.md "Solver kernel architecture")."""
+def _resolve_solver_impl(solver_impl: str, n: int, itemsize: int,
+                         batch: int = 1) -> str:
+    """Map 'auto' to a concrete impl: a fused whole-solve kernel scheme on
+    TPU when `plan_fused_solve` finds one that fits VMEM (resident Sigma+X
+    for n_hat <= 768, tiled Sigma streaming up to ~1664), the jnp while/fori
+    program elsewhere (interpret-mode Pallas on CPU measures the
+    interpreter, not the kernel — see ROADMAP.md "Solver kernel
+    architecture")."""
     if solver_impl != "auto":
         return solver_impl
     from repro.kernels import ops as kernel_ops
@@ -223,7 +227,7 @@ def _resolve_solver_impl(solver_impl: str, n: int, itemsize: int) -> str:
     if (
         jax.default_backend() == "tpu"
         and itemsize <= 4
-        and kernel_ops.fused_solve_fits(n, itemsize)
+        and kernel_ops.plan_fused_solve(n, itemsize, batch) is not None
     ):
         return "fused"
     return "jnp"
@@ -241,6 +245,7 @@ def solve_bcd(
     X0=None,
     qp_impl: str = "jnp",
     solver_impl: str = "jnp",
+    panel_rows: int = 0,
 ) -> BCDResult:
     """Solve DSPCA (1) by block coordinate ascent on the augmented problem (6).
 
@@ -255,9 +260,11 @@ def solve_bcd(
       qp_impl: inner-QP backend for the 'jnp' solver ('jnp' or the per-row
         'pallas' kernel — one launch per row update, the legacy path).
       solver_impl: 'jnp' (while/fori XLA program), 'fused' (ONE Pallas
-        launch for the whole solve, kernels/bcd_fused.py), 'fused_ref'
-        (its jnp oracle), or 'auto' (fused on TPU when n_hat fits the VMEM
-        budget, jnp otherwise).
+        launch for the whole solve, kernels/bcd_fused.py — resident or
+        tiled scheme chosen by `ops.plan_fused_solve`), 'fused_ref'
+        (its jnp oracle), or 'auto' (fused on TPU when some one-launch
+        scheme fits the VMEM budget, jnp otherwise).
+      panel_rows: Sigma panel height for the tiled scheme (0 = auto).
     """
     Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
@@ -275,7 +282,7 @@ def solve_bcd(
 
         X, _, sweeps, hist = kernel_ops.bcd_solve(
             Sigma, lam, beta_, X0, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
-            tol=tol, tau_iters=tau_iters,
+            tol=tol, tau_iters=tau_iters, panel_rows=panel_rows,
             impl="pallas" if impl == "fused" else "ref",
         )
         trX = jnp.trace(X)
@@ -331,7 +338,13 @@ def solve_bcd_grid(
     lambda's reduced problem runs on its own VMEM-resident solve.  Returns a
     batched BCDResult (leading axis = lambda).  The lambda-search bracketing
     probe (`spca.search_lambda` with ``lam_grid_probe``) routes its multi-
-    lambda evaluations through here instead of solving one lambda at a time."""
+    lambda evaluations through here instead of solving one lambda at a time.
+
+    Superseded for whole searches by `solve_bcd_many` /
+    ``SPCAConfig.batch_evals``, which run mixed-size problems through the
+    batched kernel launch (`ops.bcd_solve_batched`) instead of vmapping the
+    XLA program over a shared Sigma; this stays as the lightweight probe
+    primitive and a parity reference."""
     Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
     if beta is None:
@@ -348,6 +361,82 @@ def solve_bcd_grid(
 
     res = jax.vmap(one)(lams)
     return res._replace(beta=float(beta))
+
+
+def _pad128(n: int) -> int:
+    return max(128, ((n + 127) // 128) * 128)
+
+
+def solve_bcd_many(
+    Sigmas,
+    lams,
+    *,
+    betas=None,
+    X0s=None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tol: float = 1e-7,
+    tau_iters: int = 80,
+    panel_rows: int = 0,
+    impl: str = "auto",
+) -> list[BCDResult]:
+    """Solve B independent problems of (possibly) different sizes in ONE
+    batched launch (`ops.bcd_solve_batched`).
+
+    ``Sigmas`` is a list of (n_b, n_b) reduced covariances, ``lams`` the
+    per-problem penalties, ``X0s`` optional warm starts (None entries cold-
+    start at the identity).  Problems are zero-padded to a common 128-lane
+    size with per-problem ``n_valid`` masks — the kernels/oracle only touch
+    the leading n_b coordinates, so each result equals its standalone
+    solve.  This is the launch-economics primitive behind the batched
+    lambda search and the batched deflation round: O(1) launches for a
+    whole bracket/grid or component set instead of O(B).
+    """
+    B = len(Sigmas)
+    if B == 0:
+        return []
+    Sigmas = [jnp.asarray(S) for S in Sigmas]
+    dtype = Sigmas[0].dtype
+    sizes = [int(S.shape[0]) for S in Sigmas]
+    n_pad = _pad128(max(sizes))
+    if betas is None:
+        betas = [None] * B
+    betas = [
+        1e-4 * float(jnp.trace(S)) / n if b is None else float(b)
+        for S, n, b in zip(Sigmas, sizes, betas)
+    ]
+    if X0s is None:
+        X0s = [None] * B
+    Sp = np.zeros((B, n_pad, n_pad), np.asarray(Sigmas[0]).dtype)
+    Xp = np.zeros((B, n_pad, n_pad), Sp.dtype)
+    for k, (S, n) in enumerate(zip(Sigmas, sizes)):
+        Sp[k, :n, :n] = np.asarray(S)
+        Xp[k, :n, :n] = np.eye(n) if X0s[k] is None else np.asarray(X0s[k])
+    from repro.kernels import ops as kernel_ops
+
+    X, _, sweeps, hist = kernel_ops.bcd_solve_batched(
+        jnp.asarray(Sp, dtype), jnp.asarray(lams, dtype),
+        jnp.asarray(betas, dtype), jnp.asarray(Xp, dtype),
+        jnp.asarray(sizes, jnp.int32), max_sweeps=max_sweeps,
+        qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
+        panel_rows=panel_rows, impl=impl,
+    )
+    out: list[BCDResult] = []
+    for k, n in enumerate(sizes):
+        Xk = X[k, :n, :n]
+        trX = jnp.trace(Xk)
+        Zk = Xk / trX
+        lam_k = jnp.asarray(lams[k], dtype)
+        out.append(BCDResult(
+            X=Xk,
+            Z=Zk,
+            obj=augmented_objective(Xk, Sigmas[k], lam_k, betas[k]),
+            phi=primal_value(Zk, Sigmas[k], lam_k),
+            history=hist[k],
+            sweeps=sweeps[k],
+            beta=betas[k],
+        ))
+    return out
 
 
 def leading_sparse_component(Z, *, rel_tol: float = 1e-2):

@@ -34,11 +34,14 @@ class PCResult:
     reduced_n: int           # problem size after safe elimination
     gap: float               # duality-gap certificate on the reduced problem
     sweeps: int = 0
-    # Reduced-problem state for lambda-search warm starts: the feature
-    # indices of Sigma_hat's rows, and (only when requested via
-    # ``keep_reduced``) the solver iterate X on that support.
+    # Reduced-problem state for lambda-search warm starts and the batched
+    # deflation re-polish: the feature indices of Sigma_hat's rows, and
+    # (only when requested via ``keep_reduced``) the solver iterate X plus
+    # the reduced covariance itself on that support — carrying Sigma_hat
+    # saves the re-polish K O(m n_hat^2) rebuild passes.
     reduced_support: np.ndarray | None = field(default=None, repr=False)
     X_reduced: np.ndarray | None = field(default=None, repr=False)
+    Sigma_reduced: np.ndarray | None = field(default=None, repr=False)
 
 
 @dataclass
@@ -59,6 +62,23 @@ class SPCAConfig:
     warm_start: bool = True      # carry X between lambda evaluations
     lam_grid_probe: int = 0      # >1: vmapped solve_bcd_grid bracketing probe
     grid_probe_max_n: int = 512  # skip the probe above this reduced size
+    # Tiled/batched fused-solver knobs (kernels/bcd_fused.py):
+    panel_rows: int = 0          # tiled-scheme Sigma panel height (0 = auto)
+    batch_evals: int = 0         # >1: lambda search runs rounds of this many
+    #                              evaluations as ONE batched launch each,
+    #                              replacing the per-eval bisection loop
+    batch_deflation: bool = False  # fit_components: re-polish all components
+    #                                in ONE batched launch at their accepted
+    #                                (lambda, support) pairs
+    # Supports are padded up to these sizes with the next-highest-variance
+    # screened-out features (safe by Thm 2.1: their loadings are zero in the
+    # optimum), so the solver sees a handful of distinct shapes instead of
+    # one per evaluation and jit retraces stop dominating the search.
+    support_bucketing: bool = True
+    support_buckets: tuple = (
+        16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536,
+        2048,
+    )
     # Out-of-core leg: chunk geometry + kernel backend when ``data`` is a
     # `repro.sparse.SparseCorpus` store handle (see repro.sparse.engine).
     chunk_nnz: int = 16_384      # CSR slots per fixed-shape chunk
@@ -104,7 +124,21 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None):
     return np.asarray(screen.variances), build
 
 
-def _support_at(v: np.ndarray, lam: float, max_reduced: int) -> np.ndarray:
+def _variance_order(v: np.ndarray) -> np.ndarray:
+    """Available features in stable variance-descending order (ties break
+    toward the lower index).  The prefix of length t is exactly the support
+    any Thm 2.1 screen of size t selects, which is what makes bucketed and
+    batched supports nested."""
+    avail = np.flatnonzero(np.isfinite(v) & (v > 0))
+    return avail[np.argsort(-v[avail], kind="stable")]
+
+
+def _buckets_of(cfg: "SPCAConfig"):
+    return cfg.support_buckets if cfg.support_bucketing else None
+
+
+def _support_at(v: np.ndarray, lam: float, max_reduced: int,
+                buckets=None) -> np.ndarray:
     """Surviving-feature indices at ``lam`` (Thm 2.1 screen on masked
     variances ``v``), with the solver-size guard applied.
 
@@ -116,8 +150,29 @@ def _support_at(v: np.ndarray, lam: float, max_reduced: int) -> np.ndarray:
     The max_reduced cut is a *heuristic* solver-size guard (recorded via
     reduced_n == max_reduced) — at the lambdas a small target cardinality
     commands it never triggers.
+
+    With ``buckets`` the raw support is topped up to the next bucket size
+    with the highest-variance *screened-out* features.  This is safe by the
+    same Thm 2.1 argument the grid probe relies on: a feature with variance
+    below lambda is absent from the optimum of the enlarged problem too, so
+    its loading comes back (numerically) zero and the solution embeds
+    identically — but the solver now sees one of a handful of shapes, so
+    jit retraces stop dominating warm-started searches.  Bucket sizes are
+    monotone in the raw size, so bucketed supports stay nested in lambda.
     """
-    return elimination.select_support(v, lam, max_reduced)
+    support = elimination.select_support(v, lam, max_reduced)
+    if buckets is None:
+        return support
+    k = support.size
+    target = next((int(b) for b in buckets if b >= k), k)
+    if max_reduced is not None:
+        target = min(target, max_reduced)
+    if target <= k:
+        return support
+    order = _variance_order(v)
+    if order.size <= k:
+        return support
+    return np.union1d(support, order[:min(target, order.size)])
 
 
 class ReducedCovarianceCache:
@@ -213,7 +268,7 @@ def solve_at_lambda(
     v = variances.copy()
     if active_mask is not None:
         v = np.where(active_mask, v, -np.inf)
-    support = _support_at(v, lam, cfg.max_reduced)
+    support = _support_at(v, lam, cfg.max_reduced, _buckets_of(cfg))
     Sigma_hat = cov_cache.get(support) if cov_cache is not None else build(support)
     X0 = None
     if warm is not None and cfg.warm_start:
@@ -229,6 +284,7 @@ def solve_at_lambda(
         X0=X0,
         qp_impl=cfg.qp_impl,
         solver_impl=cfg.solver_impl,
+        panel_rows=cfg.panel_rows,
     )
     x_red = bcd.leading_sparse_component(res.Z, rel_tol=cfg.support_rel_tol)
     gap = float(validate.kkt_gap(res.X, Sigma_hat, lam, res.beta)[0])
@@ -246,6 +302,7 @@ def solve_at_lambda(
         sweeps=int(res.sweeps),
         reduced_support=support,
         X_reduced=np.asarray(res.X) if keep_reduced else None,
+        Sigma_reduced=np.asarray(Sigma_hat) if keep_reduced else None,
     )
 
 
@@ -277,6 +334,32 @@ def _grid_probe_bracket(Sigma_base, lo, hi, target_card, cfg):
     return lo, hi
 
 
+def _card_better(cfg: SPCAConfig, target_card: int):
+    """Candidate ordering shared by the sequential and batched searches:
+    prefer cardinality in [target, target+slack], else closest, then higher
+    explained variance.  Works on anything with cardinality/variance
+    attributes (PCResult) or keys (the batched path's candidate dicts)."""
+    def key(c):
+        card = c.cardinality if hasattr(c, "cardinality") else c["cardinality"]
+        var = c.variance if hasattr(c, "variance") else c["variance"]
+        dist = (0 if target_card <= card <= target_card + cfg.card_slack
+                else abs(card - target_card))
+        return dist, -var
+
+    def better(a, b) -> bool:
+        return b is None or key(a) < key(b)
+    return better
+
+
+def _search_bracket(v: np.ndarray, target_card: int) -> tuple[float, float]:
+    """Initial (lo, hi) lambda bracket from the masked variance spectrum."""
+    vs = np.sort(v[np.isfinite(v) & (v > 0)])[::-1]
+    hi = float(vs[0]) * 0.999     # keeps >=1 feature
+    lo_rank = min(max(30 * target_card, 100), vs.size) - 1
+    lo = float(max(vs[lo_rank], 1e-12))
+    return lo, hi
+
+
 def search_lambda(
     data,
     target_card: int,
@@ -286,6 +369,7 @@ def search_lambda(
     active_mask: np.ndarray | None = None,
     stats=None,
     diagnostics: dict | None = None,
+    keep_reduced: bool = False,
 ) -> PCResult:
     """Bisection on lambda for a solution with cardinality ~ target_card.
 
@@ -297,62 +381,66 @@ def search_lambda(
     SPCAConfig): the reduced covariance is built once at the smallest
     lambda evaluated and sliced for every nested support
     (`ReducedCovarianceCache`); each evaluation warm-starts the solver from
-    the previous solution embedded into the new support; and with
-    ``lam_grid_probe > 1`` a single vmapped `solve_bcd_grid` call tightens
-    the bracket before bisection.  ``diagnostics``, when given, is filled
-    with the eval/build/warm counters.
+    the previous solution embedded into the new support; supports are
+    bucketed so the solver retraces once per bucket, not per evaluation;
+    and with ``lam_grid_probe > 1`` a single vmapped `solve_bcd_grid` call
+    tightens the bracket before bisection.
+
+    With ``cfg.batch_evals > 1`` the per-eval bisection loop is replaced
+    entirely: each round submits a whole geometric lambda grid as ONE
+    batched solve launch (`bcd.solve_bcd_many` -> `ops.bcd_solve_batched`)
+    on nested prefixes of the shared base support, so a full bracket search
+    costs O(rounds) launches instead of O(evals).  ``diagnostics``, when
+    given, is filled with the eval/build/warm/launch counters.
+    ``keep_reduced`` retains the winning solver iterate on the result (for
+    the batched deflation re-polish).
     """
     if cfg is None:
         cfg = SPCAConfig()
     if stats is None:
         stats = _as_stats(data, is_covariance, cfg.center, cfg)
+    if cfg.batch_evals > 1:
+        return _search_lambda_batched(
+            target_card, cfg=cfg, active_mask=active_mask, stats=stats,
+            diagnostics=diagnostics, keep_reduced=keep_reduced,
+        )
     variances, build = stats
     v = variances.copy()
     if active_mask is not None:
         v = np.where(active_mask, v, -np.inf)
-    vs = np.sort(v[np.isfinite(v) & (v > 0)])[::-1]
-    hi = float(vs[0]) * 0.999     # keeps >=1 feature
-    lo_rank = min(max(30 * target_card, 100), vs.size) - 1
-    lo = float(max(vs[lo_rank], 1e-12))
+    lo, hi = _search_bracket(v, target_card)
 
     cache: ReducedCovarianceCache | None = None
     if cfg.reuse_covariance:
         cache = ReducedCovarianceCache(build)
+    probe_launches = 0
     if cfg.lam_grid_probe > 1:
         # The probe solves on the support at the smallest bracketed lambda.
         # Check the size guard BEFORE building anything, and eager-seed the
         # cache only when the probe actually runs (every later evaluation is
         # nested inside its support); otherwise seeding stays lazy — the
         # first evaluation's support is the right-sized base.
-        probe_support = _support_at(v, lo, cfg.max_reduced)
+        probe_support = _support_at(v, lo, cfg.max_reduced, _buckets_of(cfg))
         if probe_support.size <= cfg.grid_probe_max_n:
             base = cache.get(probe_support) if cache is not None \
                 else build(probe_support)
             lo, hi = _grid_probe_bracket(base, lo, hi, target_card, cfg)
+            probe_launches = 1
 
     best: PCResult | None = None
     warm: tuple | None = None
     evals = 0
     warm_starts = 0
     total_sweeps = 0
-
-    def better(a: PCResult, b: PCResult | None) -> bool:
-        if b is None:
-            return True
-        da = (0 if target_card <= a.cardinality <= target_card + cfg.card_slack
-              else abs(a.cardinality - target_card))
-        db = (0 if target_card <= b.cardinality <= target_card + cfg.card_slack
-              else abs(b.cardinality - target_card))
-        if da != db:
-            return da < db
-        return a.variance > b.variance
+    better = _card_better(cfg, target_card)
 
     for _ in range(cfg.lam_search_evals):
         lam = float(np.sqrt(lo * hi))  # geometric bisection: variances span decades
         r = solve_at_lambda(
             data, lam, is_covariance=is_covariance, cfg=cfg,
             active_mask=active_mask, stats=stats,
-            cov_cache=cache, warm=warm, keep_reduced=cfg.warm_start,
+            cov_cache=cache, warm=warm,
+            keep_reduced=cfg.warm_start or keep_reduced,
         )
         evals += 1
         total_sweeps += r.sweeps
@@ -376,8 +464,207 @@ def search_lambda(
             total_sweeps=total_sweeps,
             cov_builds=cache.builds if cache is not None else evals,
             cov_slices=cache.slices if cache is not None else 0,
+            # one solver launch per evaluation, plus the probe's
+            solve_launches=evals + probe_launches,
+            batched=False,
         )
-    return replace(best, X_reduced=None)   # drop the O(n_hat^2) iterate
+    if keep_reduced:
+        return best
+    # drop the O(n_hat^2) reduced state
+    return replace(best, X_reduced=None, Sigma_reduced=None)
+
+
+def _search_lambda_batched(
+    target_card: int,
+    *,
+    cfg: SPCAConfig,
+    active_mask: np.ndarray | None,
+    stats,
+    diagnostics: dict | None,
+    keep_reduced: bool = False,
+) -> PCResult:
+    """Lambda search as O(rounds) batched launches instead of O(evals).
+
+    All evaluations of a round solve on nested *prefixes* of the shared
+    base support ordered by descending variance (Thm 2.1: the support at
+    any lambda >= lo is exactly the first t features of that order), so the
+    round is B independent (Sigma_prefix, lambda, X0) problems — one
+    `ops.bcd_solve_batched` launch.  The bracket then tightens from the B
+    cardinalities at once, which is why ceil(evals / batch_evals) rounds
+    match the bisection's resolution.
+    """
+    variances, build = stats
+    v = variances.copy()
+    if active_mask is not None:
+        v = np.where(active_mask, v, -np.inf)
+    lo, hi = _search_bracket(v, target_card)
+    n_features = variances.shape[0]
+
+    cache: ReducedCovarianceCache | None = None
+    if cfg.reuse_covariance:
+        cache = ReducedCovarianceCache(build)
+    base_support = _support_at(v, lo, cfg.max_reduced, _buckets_of(cfg))
+    Sigma_base = cache.get(base_support) if cache is not None \
+        else build(base_support)
+    # Variance-descending order turns every nested support into a prefix.
+    order = np.argsort(-v[base_support], kind="stable")
+    feat_perm = base_support[order]
+    Sigma_perm = np.asarray(Sigma_base)[np.ix_(order, order)]
+    dtype = np.asarray(Sigma_base).dtype
+
+    B = cfg.batch_evals
+    rounds = max(1, -(-cfg.lam_search_evals // B))
+    better = _card_better(cfg, target_card)
+    best: dict | None = None
+    warm: tuple | None = None     # (X on prefix, prefix length)
+    evals = launches = warm_starts = total_sweeps = 0
+
+    for _ in range(rounds):
+        lams = np.geomspace(lo, hi, B + 2)[1:-1]
+        sizes = [
+            _support_at(v, la, cfg.max_reduced, _buckets_of(cfg)).size
+            for la in lams
+        ]
+        sizes = [min(t, feat_perm.size) for t in sizes]
+        X0s = None
+        if cfg.warm_start and warm is not None:
+            Xw, tw = warm
+            X0s = []
+            for t in sizes:
+                m = min(t, tw)
+                X0 = np.eye(t, dtype=dtype)
+                X0[:m, :m] = Xw[:m, :m]
+                X0s.append(X0)
+            warm_starts += len(sizes)
+        solved = bcd.solve_bcd_many(
+            [Sigma_perm[:t, :t] for t in sizes], lams, X0s=X0s,
+            betas=None if cfg.beta is None else [cfg.beta] * len(sizes),
+            max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
+            tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
+            impl=_batched_impl(cfg.solver_impl),
+        )
+        launches += 1
+        evals += len(solved)
+        cards = []
+        for la, t, res in zip(lams, sizes, solved):
+            total_sweeps += int(res.sweeps)
+            x_red = np.asarray(bcd.leading_sparse_component(
+                res.Z, rel_tol=cfg.support_rel_tol))
+            card = int(np.count_nonzero(x_red))
+            cards.append(card)
+            cand = {
+                "lam": float(la), "t": int(t), "res": res, "x_red": x_red,
+                "cardinality": card,
+                "variance": float(x_red @ Sigma_perm[:t, :t] @ x_red),
+            }
+            if better(cand, best):
+                best = cand
+        if cfg.warm_start:
+            warm = (np.asarray(best["res"].X), best["t"])
+        if target_card <= best["cardinality"] <= target_card + cfg.card_slack:
+            break
+        # Tighten the bracket from the whole round at once.
+        too_dense = [la for la, c in zip(lams, cards)
+                     if c > target_card + cfg.card_slack]
+        too_sparse = [la for la, c in zip(lams, cards) if c < target_card]
+        new_lo = max(too_dense) if too_dense else lo
+        new_hi = min(too_sparse) if too_sparse else hi
+        if new_lo >= new_hi:
+            break
+        lo, hi = float(new_lo), float(new_hi)
+
+    assert best is not None
+    t = best["t"]
+    res = best["res"]
+    Sigma_b = jnp.asarray(Sigma_perm[:t, :t])
+    gap = float(validate.kkt_gap(res.X, Sigma_b, best["lam"], res.beta)[0])
+    x = np.zeros(n_features)
+    x[feat_perm[:t]] = best["x_red"]
+    nz = np.flatnonzero(x)
+    # Re-express the reduced state in sorted-index order so warm embedding
+    # and the deflation re-polish see the same conventions as the
+    # sequential path.
+    sort_idx = np.argsort(feat_perm[:t])
+    support_sorted = feat_perm[:t][sort_idx]
+    X_sorted = np.asarray(res.X)[np.ix_(sort_idx, sort_idx)]
+    Sigma_sorted = Sigma_perm[:t, :t][np.ix_(sort_idx, sort_idx)]
+    if diagnostics is not None:
+        diagnostics.update(
+            evals=evals,
+            warm_starts=warm_starts,
+            total_sweeps=total_sweeps,
+            cov_builds=cache.builds if cache is not None else 1,
+            cov_slices=cache.slices if cache is not None else 0,
+            solve_launches=launches,
+            batched=True,
+        )
+    return PCResult(
+        x=x,
+        support=nz,
+        lam=best["lam"],
+        variance=best["variance"],
+        cardinality=best["cardinality"],
+        reduced_n=t,
+        gap=gap,
+        sweeps=int(res.sweeps),
+        reduced_support=support_sorted,
+        X_reduced=X_sorted if keep_reduced else None,
+        Sigma_reduced=Sigma_sorted if keep_reduced else None,
+    )
+
+
+def _batched_impl(solver_impl: str) -> str:
+    """Map the SPCAConfig solver_impl selector onto the batched op's impl:
+    there is no separate while/fori XLA program for batches — the vmapped
+    masked oracle IS the jnp path — so 'jnp' and 'fused_ref' both force the
+    oracle, 'fused' forces the kernel, 'auto' stays auto."""
+    return {"jnp": "ref", "fused_ref": "ref", "fused": "pallas"}.get(
+        solver_impl, "auto")
+
+
+def _refine_components_batched(
+    results: list[PCResult], stats, cfg: SPCAConfig,
+) -> list[PCResult]:
+    """Re-polish all fitted components in ONE batched launch.
+
+    Each component's accepted (lambda, reduced support) pair is known from
+    its search, so the K deflation solves are K independent problems —
+    exactly the batch shape `ops.bcd_solve_batched` runs in a single
+    `pallas_call`.  Warm-started from each search's winning iterate, the
+    extra sweeps can only ascend, so the polish tightens objectives at one
+    launch of cost instead of K.
+    """
+    variances, build = stats
+    # Each search carried its Sigma_hat out (keep_reduced), so the polish
+    # normally costs zero extra data passes; build() is only the fallback.
+    Sigmas = [
+        r.Sigma_reduced if r.Sigma_reduced is not None
+        else build(r.reduced_support)
+        for r in results
+    ]
+    solved = bcd.solve_bcd_many(
+        Sigmas, [r.lam for r in results],
+        X0s=[r.X_reduced for r in results],
+        betas=None if cfg.beta is None else [cfg.beta] * len(results),
+        max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
+        tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
+        impl=_batched_impl(cfg.solver_impl),
+    )
+    out: list[PCResult] = []
+    for r, S, res in zip(results, Sigmas, solved):
+        x_red = np.asarray(bcd.leading_sparse_component(
+            res.Z, rel_tol=cfg.support_rel_tol))
+        gap = float(validate.kkt_gap(res.X, S, r.lam, res.beta)[0])
+        x = np.zeros(r.x.shape[0])
+        x[r.reduced_support] = x_red
+        nz = np.flatnonzero(x)
+        out.append(replace(
+            r, x=x, support=nz, cardinality=int(nz.size),
+            variance=float(x_red @ np.asarray(S) @ x_red), gap=gap,
+            sweeps=r.sweeps + int(res.sweeps), X_reduced=None,
+            Sigma_reduced=None,
+        ))
+    return out
 
 
 def fit_components(
@@ -388,6 +675,7 @@ def fit_components(
     is_covariance: bool = False,
     cfg: SPCAConfig | None = None,
     deflation: str = "remove",
+    diagnostics: dict | None = None,
 ) -> list[PCResult]:
     """Top-k sparse PCs.  deflation='remove' drops selected features from the
     dictionary between components (paper-style disjoint topics);
@@ -398,6 +686,11 @@ def fit_components(
     streams CSR chunks and supports deflation='remove' only (Hotelling
     deflation needs the full (n, n) covariance, which is exactly what an
     out-of-core corpus cannot hold).
+
+    With ``cfg.batch_deflation`` the K accepted components are re-polished
+    by ONE batched launch at their known (lambda, support) pairs after the
+    deflation loop.  ``diagnostics``, when given, collects the per-component
+    search counters and the total launch count.
     """
     if cfg is None:
         cfg = SPCAConfig()
@@ -406,17 +699,32 @@ def fit_components(
             "deflation='project' requires a dense (n, n) covariance; "
             "use deflation='remove' with a SparseCorpus store"
         )
+    per_comp: list[dict] = []
     results: list[PCResult] = []
     if deflation == "remove":
         stats = _as_stats(data, is_covariance, cfg.center, cfg)
         mask = np.ones(stats[0].shape[0], dtype=bool)
         for _ in range(n_components):
+            d: dict = {}
             r = search_lambda(
                 data, target_card, is_covariance=is_covariance, cfg=cfg,
-                active_mask=mask, stats=stats,
+                active_mask=mask, stats=stats, diagnostics=d,
+                keep_reduced=cfg.batch_deflation,
             )
+            per_comp.append(d)
             results.append(r)
             mask[r.support] = False
+        refine_launches = 0
+        if cfg.batch_deflation and results:
+            results = _refine_components_batched(results, stats, cfg)
+            refine_launches = 1
+        if diagnostics is not None:
+            diagnostics.update(
+                components=per_comp,
+                refine_launches=refine_launches,
+                solve_launches=refine_launches + sum(
+                    d.get("solve_launches", 0) for d in per_comp),
+            )
     elif deflation == "project":
         if not is_covariance:
             A = jnp.asarray(data)

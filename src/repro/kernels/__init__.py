@@ -5,20 +5,25 @@
   csr_stats.py — segmented per-column sum/sumsq from CSR chunks (O(nnz))
   csr_gram.py  — gather-Gram on the support from CSR chunks (O(nnz_S + n_hat^2))
   bcd_sweep.py — VMEM-resident box-QP coordinate descent (per-row legacy path)
-  bcd_fused.py — fused whole-solve BCD: one launch per solve (the hot path)
+  bcd_fused.py — fused whole-solve BCD, resident + tiled schemes with a
+                 batch grid dimension: one launch per solve OR per batch of
+                 solves (the hot path)
   project.py   — gather-matvec document->topic projection (serving hot path)
 
-ops.py holds the jit'd wrappers (interpret=True off-TPU), ref.py the
-pure-jnp oracles every kernel is tested against.
+ops.py holds the jit'd wrappers (interpret=True off-TPU) plus the
+`plan_fused_solve` tile-budget computation; ref.py the pure-jnp oracles
+every kernel is tested against.
 """
 from . import ops, ref
 from .ops import (
-    bcd_solve, column_stats, column_variances, csr_column_stats, csr_gram,
-    fused_solve_fits, gram, qp_sweeps, sparse_project,
+    SolvePlan, bcd_solve, bcd_solve_batched, column_stats, column_variances,
+    csr_column_stats, csr_gram, fused_solve_fits, gram, plan_fused_solve,
+    qp_sweeps, sparse_project,
 )
 
 __all__ = [
-    "ops", "ref", "bcd_solve", "column_stats", "column_variances",
-    "csr_column_stats", "csr_gram", "fused_solve_fits", "gram", "qp_sweeps",
+    "ops", "ref", "SolvePlan", "bcd_solve", "bcd_solve_batched",
+    "column_stats", "column_variances", "csr_column_stats", "csr_gram",
+    "fused_solve_fits", "gram", "plan_fused_solve", "qp_sweeps",
     "sparse_project",
 ]

@@ -1,29 +1,47 @@
-r"""Pallas TPU kernel: fused VMEM-resident whole-solve BCD (Algorithm 1).
+r"""Pallas TPU kernels: fused whole-solve BCD (Algorithm 1), resident + tiled.
 
-This is the end state of the per-row -> fused-sweep migration (see
-"Solver kernel architecture" in ROADMAP.md).  The legacy path
+This is the end state of the per-row -> fused-sweep -> tiled/batched
+migration (see "Solver kernel architecture" in ROADMAP.md).  The legacy path
 (`core.bcd.row_update` + `kernels.bcd_sweep.qp_sweep_pallas`) launches one
-`pallas_call` per row/column update — n launches per sweep, O(K n) per
-solve — re-padding the full n_hat x n_hat matrix and round-tripping X
-through HBM between every launch.  After safe feature elimination the
-reduced Sigma_hat is small (n_hat <= 768 after 128-lane padding keeps the
-~4 n_pad^2 f32 words of resident state inside a 12 MB budget), which
-is exactly the regime the paper's O(K n^3) complexity claim lives in: the
-*whole solve* fits a single core's ~16 MB VMEM.
-
-This kernel therefore executes the entire Algorithm 1 in ONE `pallas_call`:
+`pallas_call` per row/column update; PR 2 fused the entire solve into ONE
+launch with Sigma and X VMEM-resident, which capped the reduced size at
+``4 n_pad^2`` words of VMEM (n_hat <= 768 in f32).  This module executes the
+same Algorithm 1
 
   while |F(X_k) - F(X_{k-1})| > tol (1 + |F|) and k < max_sweeps:   # on-chip
-      for j in 0..n_hat:                                # row/column updates
-          Y   = X with row/col j masked to zero         # VMEM elementwise
+      for j in 0..n_valid:                              # row/column updates
+          Y   = X with row/col j masked to zero
           s   = Sigma[:, j] masked,  c = Sigma_jj - lam - Tr Y
           u   <- box-QP coordinate descent on (11) via closed form (13)
           tau <- branch-free bisection on the monotone derivative of (12)
           X   <- Y + (Yu/tau) e_j^T + e_j (Yu/tau)^T + (c + tau) e_j e_j^T
 
-so a full `solve_bcd` is O(1) kernel launches instead of O(K n_hat): Sigma
-and X stay VMEM-resident for the whole solve, and every Y-column load in
-the inner coordinate loop is a VMEM->VREG move.
+under two execution schemes selected by `ops.plan_fused_solve`:
+
+* **resident** — Sigma and X both live in VMEM for the whole solve (the PR-2
+  kernel).  Fastest when ``4 n_pad^2`` words fit the budget (n_hat <= 768).
+* **tiled** — Sigma (and X0) stay in HBM; only X is VMEM-resident.  Sigma
+  streams through VMEM in 128-aligned row-panels via double-buffered async
+  copies that overlap the box-QP coordinate descent, so the one-launch solve
+  works for n_hat in the thousands (~1664 in f32) instead of 768.  The row
+  update exploits the symmetry BCD preserves (row j and column j are written
+  identically), so Y-columns in the coordinate loop are *row* loads from the
+  resident X — contiguous lanes, never a strided VMEM walk — and the write
+  back touches exactly row j + column j instead of rebuilding the matrix.
+  Per row update the kernel reads one Sigma row out of the current panel;
+  panel p+1 is DMA'd while panel p's R row updates run, and the per-sweep
+  objective is accumulated by one more panel pass at sweep end.
+
+Both kernels carry a grid **batch dimension**: grid=(B,) runs B independent
+(Sigma, lam, X0, n_valid) problems in ONE `pallas_call` — the lambda-grid
+bracket of a search and the deflation round of a multi-component fit are
+exactly such batches (supports nested / known up front), so the driver
+collapses O(grid * K) launches per fit into O(1).
+
+Padding: shapes are padded to 128 lanes; per-problem ``n_valid`` (< n_pad)
+masks bucketed supports.  Padded rows/cols of Sigma/X0 must be zero; both
+loops run only to n_valid, so padded coordinates never contribute to
+w = Y u, the trace, or the objective.
 
 The in-kernel early-exit criterion uses the barrier-free objective
 
@@ -35,14 +53,11 @@ stopping test).  beta still enters the tau sub-problem exactly as in the
 host solver, so the *iterates* match `core.bcd` bit-for-bit-modulo-padding;
 only the stopping rule reads a different (equally monotone) functional.
 
-Padding: shapes are padded to 128 lanes.  Padded rows/cols of Sigma/X0 are
-zero and both loops run only to n_valid, so padded coordinates never
-contribute to w = Y u, the trace, or the objective.
-
 The coordinate recursion is inherently sequential (each eta depends on the
-w produced by the previous coordinate) so there is no grid parallelism —
-parallelism lives one level up (vmapped lambda-grid / deflation solves,
-see `core.bcd.solve_bcd_grid`).  Oracle: `ref.bcd_solve_ref`.
+w produced by the previous coordinate) so there is no intra-problem grid
+parallelism — parallelism lives in the batch dimension.  Oracles:
+`ref.bcd_solve_ref` (unpadded), `ref.bcd_solve_masked_ref` (padded +
+n_valid, the semantics both kernels implement), `ref.bcd_solve_batched_ref`.
 """
 from __future__ import annotations
 
@@ -51,13 +66,58 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _bcd_solve_kernel(
+def _pad128(n: int) -> int:
+    return max(128, ((n + 127) // 128) * 128)
+
+
+def _solve_tau(R2, c, beta, tau_iters):
+    """min_{tau>0} R2/tau - beta*log(tau) + (c + tau)^2 / 2 — bisection on
+    the strictly increasing derivative (branch-free, shared by both
+    kernels; mirrors `core.bcd.solve_tau`)."""
+    hi = jnp.maximum(1.0, -c) + jnp.sqrt(jnp.maximum(R2, 0.0)) + beta + 1.0
+    lo = jnp.minimum(beta / (beta + jnp.maximum(-c, 0.0) + 1.0), hi) * 1e-12
+
+    def bisect(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        g = mid + c - R2 / (mid * mid) - beta / mid
+        lo = jnp.where(g < 0, mid, lo)
+        hi = jnp.where(g < 0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, tau_iters, bisect, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def _coord_update(i, u, w, col, s, lam, j):
+    """One closed-form (13) coordinate update given Y's column i (``col``)."""
+    y1 = col[i]
+    ui = u[i]
+    g = w[i] - y1 * ui                          # \hat y^T \hat u
+    lo = s[i] - lam
+    hi = s[i] + lam
+    eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+    eta_zero = jnp.where(g > 0, lo, hi)
+    eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+    eta = jnp.where(i == j, ui, eta)            # coordinate j is pinned
+    w = w + col * (eta - ui)
+    u = jax.lax.dynamic_update_slice(u, eta[None], (i,))
+    return u, w
+
+
+# ---------------------------------------------------------------------------
+# Resident scheme: Sigma and X VMEM-resident (n_hat <= 768 in f32).
+# ---------------------------------------------------------------------------
+
+
+def _bcd_resident_kernel(
     sig_ref, x0_ref, scal_ref, x_ref, hist_ref, meta_ref,
     *, n_pad, hist_pad, max_sweeps, qp_sweeps, tau_iters,
 ):
-    Sigma = sig_ref[...]
+    Sigma = sig_ref[0]
     dtype = Sigma.dtype
     lam = scal_ref[0, 0]
     beta = scal_ref[0, 1]
@@ -72,33 +132,7 @@ def _bcd_solve_kernel(
     def coord_step(i, carry, Y, s, j):
         u, w = carry
         col = jax.lax.dynamic_slice(Y, (jnp.int32(0), i), (n_pad, 1))[:, 0]
-        y1 = col[i]
-        ui = u[i]
-        g = w[i] - y1 * ui                          # \hat y^T \hat u
-        lo = s[i] - lam
-        hi = s[i] + lam
-        eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
-        eta_zero = jnp.where(g > 0, lo, hi)
-        eta = jnp.where(y1 > 0, eta_pos, eta_zero)
-        eta = jnp.where(i == j, ui, eta)            # coordinate j is pinned
-        w = w + col * (eta - ui)
-        u = jax.lax.dynamic_update_slice(u, eta[None], (i,))
-        return u, w
-
-    def solve_tau(R2, c):
-        hi = jnp.maximum(1.0, -c) + jnp.sqrt(jnp.maximum(R2, 0.0)) + beta + 1.0
-        lo = jnp.minimum(beta / (beta + jnp.maximum(-c, 0.0) + 1.0), hi) * 1e-12
-
-        def bisect(_, bounds):
-            lo, hi = bounds
-            mid = 0.5 * (lo + hi)
-            g = mid + c - R2 / (mid * mid) - beta / mid
-            lo = jnp.where(g < 0, mid, lo)
-            hi = jnp.where(g < 0, hi, mid)
-            return lo, hi
-
-        lo, hi = jax.lax.fori_loop(0, tau_iters, bisect, (lo, hi))
-        return 0.5 * (lo + hi)
+        return _coord_update(i, u, w, col, s, lam, j)
 
     def row_update(j, X):
         col = jax.lax.dynamic_slice(Sigma, (jnp.int32(0), j), (n_pad, 1))[:, 0]
@@ -116,7 +150,7 @@ def _bcd_solve_kernel(
             )
 
         u, w = jax.lax.fori_loop(0, qp_sweeps, qp_sweep, (s, Y @ s))
-        tau = solve_tau(jnp.dot(u, w), c)
+        tau = _solve_tau(jnp.dot(u, w), c, beta, tau_iters)
 
         y = w / tau                                 # zero at j and in padding
         ejf = ((idx == j) & (idx < n_valid)).astype(dtype)
@@ -141,7 +175,7 @@ def _bcd_solve_kernel(
 
     minus_inf = jnp.array(-jnp.inf, dtype)
     state0 = (
-        x0_ref[...],
+        x0_ref[0],
         jnp.full((hist_pad,), jnp.nan, dtype),
         minus_inf,
         minus_inf,
@@ -149,67 +183,318 @@ def _bcd_solve_kernel(
         jnp.array(False),
     )
     X, hist, _, obj, k, _ = jax.lax.while_loop(cond, body, state0)
-    x_ref[...] = X
+    x_ref[0] = X
     hist_ref[0, :] = hist
     meta_ref[0, 0] = obj
     meta_ref[0, 1] = k.astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# Tiled scheme: X VMEM-resident, Sigma streamed from HBM in row-panels.
+# ---------------------------------------------------------------------------
+
+
+def _bcd_tiled_kernel(
+    scal_ref, sig_hbm, x0_hbm, x_ref, hist_ref, meta_ref, buf, sem, xsem,
+    *, n_pad, panel_rows, hist_pad, max_sweeps, qp_sweeps, tau_iters,
+):
+    b = pl.program_id(0)
+    R = panel_rows
+    n_panels = n_pad // R
+    lam = scal_ref[0, 0]
+    beta = scal_ref[0, 1]
+    n_valid = scal_ref[0, 2].astype(jnp.int32)
+    tol = scal_ref[0, 3]
+    dtype = lam.dtype
+
+    # X0: HBM -> resident VMEM block, one whole-matrix DMA.
+    cp = pltpu.make_async_copy(x0_hbm.at[b], x_ref.at[0], xsem)
+    cp.start()
+    cp.wait()
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)[:, 0]
+    pri = jax.lax.broadcasted_iota(jnp.int32, (R, n_pad), 0)
+    pci = jax.lax.broadcasted_iota(jnp.int32, (R, n_pad), 1)
+
+    def get_dma(slot, p):
+        return pltpu.make_async_copy(
+            sig_hbm.at[b, pl.ds(p * R, R), :], buf.at[slot], sem.at[slot]
+        )
+
+    def trace_of_x():
+        """Tr X from the resident block, one R-row panel at a time (never
+        materialises an n_pad^2 temporary)."""
+        def body(p, acc):
+            rows = x_ref[0, pl.ds(p * R, R), :]
+            dmask = (pci == p * R + pri).astype(dtype)
+            return acc + jnp.sum(rows * dmask)
+        return jax.lax.fori_loop(0, n_panels, body, jnp.array(0.0, dtype))
+
+    def matvec(s):
+        """X @ s via panel row-blocks of the resident X."""
+        def body(p, w):
+            rows = x_ref[0, pl.ds(p * R, R), :]
+            return jax.lax.dynamic_update_slice(w, rows @ s, (p * R,))
+        return jax.lax.fori_loop(0, n_panels, body, jnp.zeros((n_pad,), dtype))
+
+    def coord_step(i, carry, mf, s, j):
+        u, w = carry
+        # BCD preserves symmetry (row j and col j written identically), so
+        # Y's column i is X's ROW i masked — a contiguous lane load.
+        col = x_ref[0, pl.ds(i, 1), :][0] * mf
+        return _coord_update(i, u, w, col, s, lam, j)
+
+    def row_update(r, tr, p):
+        j = p * R + r
+        srow = buf[p % 2, pl.ds(r, 1), :][0]        # Sigma row j, current panel
+        mf = ((idx != j) & (idx < n_valid)).astype(dtype)
+        s = srow * mf
+        xjj = x_ref[0, pl.ds(j, 1), :][0, j]
+        t = tr - xjj                                # Tr Y = Tr X - X_jj
+        c = srow[j] - lam - t
+
+        def qp_sweep(_, carry):
+            return jax.lax.fori_loop(
+                0, n_valid,
+                functools.partial(coord_step, mf=mf, s=s, j=j), carry,
+            )
+
+        # w0 = Y @ s = mf o (X @ s): s is pre-masked, so column j and the
+        # padding never contribute; masking the product removes row j.
+        u, w = jax.lax.fori_loop(0, qp_sweeps, qp_sweep, (s, matvec(s) * mf))
+        tau = _solve_tau(jnp.dot(u, w), c, beta, tau_iters)
+
+        # X differs from Y + outer products ONLY in row j / column j.
+        ejf = ((idx == j) & (idx < n_valid)).astype(dtype)
+        newrow = w / tau + (c + tau) * ejf
+        x_ref[0, pl.ds(j, 1), :] = newrow[None, :]
+        x_ref[0, :, pl.ds(j, 1)] = newrow[:, None]
+        return t + (c + tau)                        # updated Tr X
+
+    def sweep(tr):
+        get_dma(0, 0).start()
+
+        def panel_body(p, tr):
+            @pl.when(p + 1 < n_panels)
+            def _():
+                get_dma((p + 1) % 2, p + 1).start()
+            get_dma(p % 2, p).wait()
+            rows_here = jnp.clip(n_valid - p * R, 0, R)
+            return jax.lax.fori_loop(
+                0, rows_here, functools.partial(row_update, p=p), tr
+            )
+
+        return jax.lax.fori_loop(0, n_panels, panel_body, tr)
+
+    def partial_obj(tr):
+        """F(X) accumulated panel-wise: one more Sigma pass per sweep."""
+        get_dma(0, 0).start()
+
+        def body(p, accs):
+            sx, l1 = accs
+            @pl.when(p + 1 < n_panels)
+            def _():
+                get_dma((p + 1) % 2, p + 1).start()
+            get_dma(p % 2, p).wait()
+            xrows = x_ref[0, pl.ds(p * R, R), :]
+            sx = sx + jnp.sum(buf[p % 2] * xrows)
+            l1 = l1 + jnp.sum(jnp.abs(xrows))
+            return sx, l1
+
+        zero = jnp.array(0.0, dtype)
+        sx, l1 = jax.lax.fori_loop(0, n_panels, body, (zero, zero))
+        return sx - lam * l1 - 0.5 * tr * tr
+
+    def cond(state):
+        _, _, _, _, k, done = state
+        return jnp.logical_not(done) & (k < max_sweeps)
+
+    def body(state):
+        tr, hist, prev, _, k, _ = state
+        tr = sweep(tr)
+        obj = partial_obj(tr)
+        hist = jax.lax.dynamic_update_slice(hist, obj[None], (k,))
+        done = jnp.abs(obj - prev) <= tol * (1.0 + jnp.abs(obj))
+        return tr, hist, obj, obj, k + 1, done
+
+    minus_inf = jnp.array(-jnp.inf, dtype)
+    state0 = (
+        trace_of_x(),
+        jnp.full((hist_pad,), jnp.nan, dtype),
+        minus_inf,
+        minus_inf,
+        jnp.array(0, jnp.int32),
+        jnp.array(False),
+    )
+    _, hist, _, obj, k, _ = jax.lax.while_loop(cond, body, state0)
+    hist_ref[0, :] = hist
+    meta_ref[0, 0] = obj
+    meta_ref[0, 1] = k.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Launch wrappers.
+# ---------------------------------------------------------------------------
+
+
 @functools.partial(
-    jax.jit, static_argnames=("max_sweeps", "qp_sweeps", "tau_iters", "interpret")
+    jax.jit,
+    static_argnames=(
+        "max_sweeps", "qp_sweeps", "tau_iters", "scheme", "panel_rows",
+        "interpret",
+    ),
 )
+def _launch(
+    Sigma3, X03, scal,
+    *, max_sweeps, qp_sweeps, tau_iters, scheme, panel_rows, interpret,
+):
+    """One `pallas_call` over grid=(B,): B padded problems, either scheme.
+
+    ``Sigma3``/``X03`` are (B, n_pad, n_pad) with zeroed padding; ``scal``
+    is (B, 4) rows of [lam, beta, n_valid, tol].
+    """
+    B, n_pad, _ = Sigma3.shape
+    dtype = Sigma3.dtype
+    hist_pad = max(128, ((max_sweeps + 127) // 128) * 128)
+    out_specs = [
+        pl.BlockSpec((1, n_pad, n_pad), lambda b: (b, 0, 0)),
+        pl.BlockSpec((1, hist_pad), lambda b: (b, 0)),
+        pl.BlockSpec((1, 2), lambda b: (b, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, n_pad, n_pad), dtype),
+        jax.ShapeDtypeStruct((B, hist_pad), dtype),
+        jax.ShapeDtypeStruct((B, 2), dtype),
+    ]
+    if scheme == "tiled":
+        if n_pad % panel_rows:
+            raise ValueError(f"{panel_rows=} must divide {n_pad=}")
+        kern = functools.partial(
+            _bcd_tiled_kernel, n_pad=n_pad, panel_rows=panel_rows,
+            hist_pad=hist_pad, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+            tau_iters=tau_iters,
+        )
+        X, hist, meta = pl.pallas_call(
+            kern,
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((1, 4), lambda b: (b, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),   # Sigma stays in HBM
+                pl.BlockSpec(memory_space=pltpu.ANY),   # X0 stays in HBM
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((2, panel_rows, n_pad), dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA,
+            ],
+            interpret=interpret,
+        )(scal, Sigma3, X03)
+    elif scheme == "resident":
+        kern = functools.partial(
+            _bcd_resident_kernel, n_pad=n_pad, hist_pad=hist_pad,
+            max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+        )
+        X, hist, meta = pl.pallas_call(
+            kern,
+            grid=(B,),
+            in_specs=[
+                pl.BlockSpec((1, n_pad, n_pad), lambda b: (b, 0, 0)),
+                pl.BlockSpec((1, n_pad, n_pad), lambda b: (b, 0, 0)),
+                pl.BlockSpec((1, 4), lambda b: (b, 0)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(Sigma3, X03, scal)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return X, hist, meta
+
+
+def _pad_stack(Sigma3, X03, n_pad):
+    p = n_pad - Sigma3.shape[-1]
+    if p:
+        Sigma3 = jnp.pad(Sigma3, ((0, 0), (0, p), (0, p)))
+        X03 = jnp.pad(X03, ((0, 0), (0, p), (0, p)))
+    return Sigma3, X03
+
+
 def bcd_solve_pallas(
     Sigma, lam, beta, X0, tol,
     *, max_sweeps: int = 20, qp_sweeps: int = 4, tau_iters: int = 80,
-    interpret: bool = False,
+    n_valid: int | None = None, scheme: str = "resident",
+    panel_rows: int = 128, interpret: bool = False,
 ):
     """Whole-solve fused BCD: ONE `pallas_call` for all sweeps of Algorithm 1.
 
     Returns ``(X, obj, sweeps, history)`` where ``obj`` is the barrier-free
     objective F(X) at exit, ``sweeps`` the number of sweeps executed, and
     ``history`` the (max_sweeps,) nan-padded per-sweep F(X) trace.
+
+    ``scheme='resident'`` keeps Sigma+X in VMEM (n_hat <= 768 in f32);
+    ``scheme='tiled'`` keeps only X resident and streams Sigma from HBM in
+    ``panel_rows``-row panels (n_hat up to ~1664).  ``n_valid`` (default n)
+    restricts the solve to the leading principal submatrix — the bucketed-
+    support contract of `ops.bcd_solve`.
     """
+    Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
-    n_pad = max(128, ((n + 127) // 128) * 128)
-    hist_pad = max(128, ((max_sweeps + 127) // 128) * 128)
-    p = n_pad - n
-    dtype = jnp.asarray(Sigma).dtype
-    Sigma = jnp.asarray(Sigma, dtype)
-    X0 = jnp.asarray(X0, dtype)
-    if p:
-        Sigma = jnp.pad(Sigma, ((0, p), (0, p)))
-        X0 = jnp.pad(X0, ((0, p), (0, p)))
+    dtype = Sigma.dtype
+    n_pad = _pad128(n)
+    Sigma3, X03 = _pad_stack(
+        Sigma[None].astype(dtype), jnp.asarray(X0, dtype)[None], n_pad
+    )
+    nv = n if n_valid is None else int(n_valid)
     scal = jnp.stack([
         jnp.asarray(lam, dtype), jnp.asarray(beta, dtype),
-        jnp.asarray(n, dtype), jnp.asarray(tol, dtype),
+        jnp.asarray(nv, dtype), jnp.asarray(tol, dtype),
     ])[None, :]
-    kern = functools.partial(
-        _bcd_solve_kernel, n_pad=n_pad, hist_pad=hist_pad,
-        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
-    )
-    X, hist, meta = pl.pallas_call(
-        kern,
-        grid=(1,),
-        in_specs=[
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, hist_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_pad, n_pad), dtype),
-            jax.ShapeDtypeStruct((1, hist_pad), dtype),
-            jax.ShapeDtypeStruct((1, 2), dtype),
-        ],
+    X, hist, meta = _launch(
+        Sigma3, X03, scal, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+        tau_iters=tau_iters, scheme=scheme, panel_rows=panel_rows,
         interpret=interpret,
-    )(Sigma, X0, scal)
+    )
     return (
-        X[:n, :n],
+        X[0, :n, :n],
         meta[0, 0],
         meta[0, 1].astype(jnp.int32),
         hist[0, :max_sweeps],
+    )
+
+
+def bcd_solve_batched_pallas(
+    Sigmas, lams, betas, X0s, tol, n_valids,
+    *, max_sweeps: int = 20, qp_sweeps: int = 4, tau_iters: int = 80,
+    scheme: str = "resident", panel_rows: int = 128, interpret: bool = False,
+):
+    """B independent solves in ONE `pallas_call` (grid batch dimension).
+
+    ``Sigmas``/``X0s`` are (B, n, n) with per-problem supports occupying the
+    leading ``n_valids[b]`` coordinates and zeros beyond; ``lams``/``betas``/
+    ``n_valids`` are (B,).  Returns ``(X (B,n,n), obj (B,), sweeps (B,),
+    history (B, max_sweeps))``.
+    """
+    Sigmas = jnp.asarray(Sigmas)
+    B, n, _ = Sigmas.shape
+    dtype = Sigmas.dtype
+    n_pad = _pad128(n)
+    Sigma3, X03 = _pad_stack(Sigmas, jnp.asarray(X0s, dtype), n_pad)
+    scal = jnp.stack([
+        jnp.asarray(lams, dtype),
+        jnp.broadcast_to(jnp.asarray(betas, dtype), (B,)),
+        jnp.asarray(n_valids, dtype),
+        jnp.broadcast_to(jnp.asarray(tol, dtype), (B,)),
+    ], axis=1)
+    X, hist, meta = _launch(
+        Sigma3, X03, scal, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+        tau_iters=tau_iters, scheme=scheme, panel_rows=panel_rows,
+        interpret=interpret,
+    )
+    return (
+        X[:, :n, :n],
+        meta[:, 0],
+        meta[:, 1].astype(jnp.int32),
+        hist[:, :max_sweeps],
     )

@@ -15,8 +15,10 @@ import jax.numpy as jnp
 
 import functools
 
+from dataclasses import dataclass
+
 from . import ref
-from .bcd_fused import bcd_solve_pallas
+from .bcd_fused import bcd_solve_batched_pallas, bcd_solve_pallas
 from .bcd_sweep import qp_sweep_pallas
 from .csr_gram import csr_gram_pallas
 from .csr_stats import csr_column_stats_pallas
@@ -29,22 +31,75 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-# VMEM the fused solver may claim for its resident state: Sigma + X in/out
-# plus loop temporaries (Y, the mask outer products) all live on-chip at
-# once.  ~4 n_pad^2 words against a ~16 MB/core budget with headroom for
-# the compiler's double-buffering.
-_FUSED_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# VMEM budgets for the two fused-solve execution schemes, against a ~16 MB/
+# core physical budget.
+#
+# resident: Sigma + X in/out blocks plus loop temporaries (Y, the mask outer
+# products) all live on-chip at once — ~4 n_pad^2 words, with headroom for
+# the compiler's double-buffering.  Caps n_hat at 768 in f32.
+_RESIDENT_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# tiled: only X is resident (n_pad^2); Sigma streams through two R x n_pad
+# panel buffers, and the row-update/objective passes touch at most two more
+# panel-sized temporaries plus a handful of n_pad vectors.  The kernel does
+# its own double-buffering, so the budget runs closer to the physical limit.
+# Caps n_hat at ~1664 in f32 (2048 falls back to the XLA program, which
+# handles HBM spilling itself).
+_TILED_VMEM_BUDGET_BYTES = 15 * 1024 * 1024
+_PANEL_ROW_CHOICES = (512, 256, 128)    # 128-aligned Sigma panel heights
 
 
-def fused_solve_fits(n: int, itemsize: int = 4) -> bool:
-    """Whether the whole-solve kernel's resident state fits the VMEM budget
-    at reduced size ``n`` (post-elimination n_hat, pre-padding)."""
+@dataclass(frozen=True)
+class SolvePlan:
+    """How one `pallas_call` executes a (batch of) whole solve(s)."""
+
+    scheme: str         # 'resident' | 'tiled'
+    n_pad: int          # 128-lane padded problem size
+    panel_rows: int     # Sigma panel height (0 for resident)
+    vmem_bytes: int     # accounted resident state under the scheme
+
+
+def plan_fused_solve(n: int, itemsize: int = 4, batch: int = 1
+                     ) -> SolvePlan | None:
+    """Tile-budget computation for the fused solver at reduced size ``n``
+    (post-elimination n_hat, pre-padding): pick the cheapest execution
+    scheme whose accounted VMEM state fits, or ``None`` when no one-launch
+    scheme does (the driver then falls back to the XLA program).
+
+    With ``batch > 1`` the grid pipelines the next problem's blocks, so the
+    per-step accounting doubles the revolving buffers (conservatively).
+    """
     n_pad = max(128, ((n + 127) // 128) * 128)
-    return 4 * n_pad * n_pad * itemsize <= _FUSED_VMEM_BUDGET_BYTES
+    x_mult = 1 if batch == 1 else 2
+    # resident blocks: Sigma in + X0 in + X out (each revolving under a
+    # batch grid) plus the Y temporary of the row update.
+    resident = (3 * x_mult + 1) * n_pad * n_pad * itemsize
+    if resident <= _RESIDENT_VMEM_BUDGET_BYTES:
+        return SolvePlan("resident", n_pad, 0, resident)
+    for R in _PANEL_ROW_CHOICES:
+        if n_pad % R:
+            continue
+        words = x_mult * n_pad * n_pad + 4 * R * n_pad + 16 * n_pad
+        if words * itemsize <= _TILED_VMEM_BUDGET_BYTES:
+            return SolvePlan("tiled", n_pad, R, words * itemsize)
+    return None
+
+
+def fused_solve_fits(n: int, itemsize: int = 4, batch: int = 1) -> bool:
+    """Whether ANY one-launch scheme (resident or tiled) fits the VMEM
+    budget at reduced size ``n`` — see `plan_fused_solve` for which."""
+    return plan_fused_solve(n, itemsize, batch) is not None
 
 
 _bcd_solve_ref_jit = jax.jit(
     ref.bcd_solve_ref, static_argnames=("max_sweeps", "qp_sweeps", "tau_iters")
+)
+_bcd_solve_masked_ref_jit = jax.jit(
+    ref.bcd_solve_masked_ref,
+    static_argnames=("max_sweeps", "qp_sweeps", "tau_iters"),
+)
+_bcd_solve_batched_ref_jit = jax.jit(
+    ref.bcd_solve_batched_ref,
+    static_argnames=("max_sweeps", "qp_sweeps", "tau_iters"),
 )
 
 
@@ -109,34 +164,107 @@ def csr_gram(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
     )
 
 
+def _resolve_scheme(scheme: str, n: int, itemsize: int, batch: int):
+    """Map scheme='auto' to a concrete (scheme, panel_rows) pair via the
+    tile-budget plan; forced schemes get a default panel height."""
+    if scheme == "auto":
+        plan = plan_fused_solve(n, itemsize, batch)
+        if plan is None:
+            return None
+        return plan.scheme, (plan.panel_rows or 128)
+    return scheme, 128
+
+
 def bcd_solve(Sigma, lam, beta, X0=None, *, max_sweeps: int = 20,
               qp_sweeps: int = 4, tol: float = 1e-7, tau_iters: int = 80,
-              impl: str = "auto"):
+              n_valid: int | None = None, impl: str = "auto",
+              scheme: str = "auto", panel_rows: int = 0):
     """Whole-solve fused BCD (Algorithm 1) — ONE kernel launch per solve.
 
-    ``auto`` selects the Pallas kernel on TPU when the resident state fits
-    the VMEM budget (`fused_solve_fits`), else the jnp oracle.  Returns
-    ``(X, obj, sweeps, history)``; ``obj``/``history`` are the barrier-free
-    objective used for the in-kernel early exit (see `bcd_solve` module doc).
+    ``impl='auto'`` selects a Pallas kernel on TPU when some one-launch
+    scheme fits the VMEM budget (`plan_fused_solve`), else the jnp oracle.
+    ``scheme`` picks the kernel ('auto' | 'resident' | 'tiled') and
+    ``panel_rows`` (0 = auto) the tiled Sigma panel height.  ``n_valid``
+    restricts the solve to the leading principal submatrix of a zero-padded
+    problem (the bucketed-support contract).  Returns ``(X, obj, sweeps,
+    history)``; ``obj``/``history`` are the barrier-free objective used for
+    the in-kernel early exit (see `bcd_solve` module doc).
     """
     Sigma = jnp.asarray(Sigma)
     n = Sigma.shape[0]
     if X0 is None:
         X0 = jnp.eye(n, dtype=Sigma.dtype)
+        if n_valid is not None and n_valid < n:
+            X0 = X0 * (jnp.arange(n) < n_valid).astype(Sigma.dtype)
     lam = jnp.asarray(lam, Sigma.dtype)
     beta = jnp.asarray(beta, Sigma.dtype)
     tol = jnp.asarray(tol, Sigma.dtype)
-    use_pallas = impl == "pallas" or (
-        impl == "auto" and _on_tpu() and fused_solve_fits(n, Sigma.dtype.itemsize)
-    )
+    resolved = _resolve_scheme(scheme, n, Sigma.dtype.itemsize, 1)
+    if impl == "pallas" and resolved is None:
+        resolved = ("tiled", 128)       # forced: caller owns the VMEM risk
+    # auto never hands f64 to the kernel: Mosaic cannot lower it
+    use_pallas = (impl == "pallas" or (
+        impl == "auto" and _on_tpu() and Sigma.dtype.itemsize <= 4
+    )) and resolved is not None
     if not use_pallas:
-        return _bcd_solve_ref_jit(
-            Sigma, lam, beta, X0, tol,
+        if n_valid is None:
+            return _bcd_solve_ref_jit(
+                Sigma, lam, beta, X0, tol,
+                max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+                tau_iters=tau_iters,
+            )
+        return _bcd_solve_masked_ref_jit(
+            Sigma, lam, beta, X0, tol, n_valid,
             max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
         )
+    kscheme, kpanel = resolved
     return bcd_solve_pallas(
         Sigma, lam, beta, X0, tol,
         max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+        n_valid=n_valid, scheme=kscheme, panel_rows=panel_rows or kpanel,
+        interpret=not _on_tpu(),
+    )
+
+
+def bcd_solve_batched(Sigmas, lams, betas, X0s, n_valids, *,
+                      max_sweeps: int = 20, qp_sweeps: int = 4,
+                      tol: float = 1e-7, tau_iters: int = 80,
+                      impl: str = "auto", scheme: str = "auto",
+                      panel_rows: int = 0):
+    """B independent whole solves in ONE launch (grid batch dimension).
+
+    ``Sigmas``/``X0s`` are (B, n, n) zero-padded problems occupying their
+    leading ``n_valids[b]`` coordinates.  On TPU this is a single
+    `pallas_call` over grid=(B,); off-TPU it is the vmapped masked oracle —
+    one XLA dispatch either way, which is the whole point: a lambda
+    bracket/grid or a deflation round costs O(1) launches instead of O(B).
+    Returns ``(X (B,n,n), obj (B,), sweeps (B,), history (B, max_sweeps))``.
+    """
+    Sigmas = jnp.asarray(Sigmas)
+    B, n, _ = Sigmas.shape
+    dtype = Sigmas.dtype
+    lams = jnp.asarray(lams, dtype)
+    betas = jnp.broadcast_to(jnp.asarray(betas, dtype), (B,))
+    n_valids = jnp.asarray(n_valids, jnp.int32)
+    X0s = jnp.asarray(X0s, dtype)
+    tol = jnp.asarray(tol, dtype)
+    resolved = _resolve_scheme(scheme, n, dtype.itemsize, B)
+    if impl == "pallas" and resolved is None:
+        resolved = ("tiled", 128)       # forced: caller owns the VMEM risk
+    # auto never hands f64 to the kernel: Mosaic cannot lower it
+    use_pallas = (impl == "pallas" or (
+        impl == "auto" and _on_tpu() and dtype.itemsize <= 4
+    )) and resolved is not None
+    if not use_pallas:
+        return _bcd_solve_batched_ref_jit(
+            Sigmas, lams, betas, X0s, tol, n_valids,
+            max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+        )
+    kscheme, kpanel = resolved
+    return bcd_solve_batched_pallas(
+        Sigmas, lams, betas, X0s, tol, n_valids,
+        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+        scheme=kscheme, panel_rows=panel_rows or kpanel,
         interpret=not _on_tpu(),
     )
 

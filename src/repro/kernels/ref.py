@@ -5,6 +5,8 @@ Each function is the semantic ground truth the kernels are tested against
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -141,6 +143,123 @@ def bcd_solve_ref(
     )
     X, hist, _, obj, k, _ = jax.lax.while_loop(cond, body, state0)
     return X, obj, k, hist
+
+
+def bcd_solve_masked_ref(
+    Sigma, lam, beta, X0, tol, n_valid,
+    *, max_sweeps: int = 20, qp_sweeps: int = 4, tau_iters: int = 80,
+):
+    """Padded/masked whole-solve BCD oracle — the semantics of BOTH fused
+    kernel schemes (`bcd_fused`): the problem occupies the leading
+    ``n_valid`` coordinates of a zero-padded (n, n) ``Sigma``/``X0`` and
+    coordinates at or beyond ``n_valid`` are frozen at zero.  ``n_valid``
+    may be traced, so this vmaps cleanly into the batched oracle.  With
+    ``n_valid == n`` it reduces exactly to `bcd_solve_ref`.
+    """
+    n = Sigma.shape[0]
+    dtype = Sigma.dtype
+    idx = jnp.arange(n)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+
+    def solve_tau(R2, c):
+        hi = jnp.maximum(1.0, -c) + jnp.sqrt(jnp.maximum(R2, 0.0)) + beta + 1.0
+        lo = jnp.minimum(beta / (beta + jnp.maximum(-c, 0.0) + 1.0), hi) * 1e-12
+
+        def bisect(_, bounds):
+            lo, hi = bounds
+            mid = 0.5 * (lo + hi)
+            g = mid + c - R2 / (mid * mid) - beta / mid
+            lo = jnp.where(g < 0, mid, lo)
+            hi = jnp.where(g < 0, hi, mid)
+            return lo, hi
+
+        lo, hi = jax.lax.fori_loop(0, tau_iters, bisect, (lo, hi))
+        return 0.5 * (lo + hi)
+
+    def coord(i, carry, Y, s, j):
+        u, w = carry
+        y1 = Y[i, i]
+        ui = u[i]
+        g = w[i] - y1 * ui
+        lo = s[i] - lam
+        hi = s[i] + lam
+        eta_pos = jnp.clip(-g / jnp.where(y1 > 0, y1, 1.0), lo, hi)
+        eta_zero = jnp.where(g > 0, lo, hi)
+        eta = jnp.where(y1 > 0, eta_pos, eta_zero)
+        # pinned at j, frozen beyond n_valid (the kernels reach the same
+        # state by bounding their loops at n_valid; the oracle keeps STATIC
+        # bounds + freeze guards because XLA-on-CPU pays dearly for
+        # traced-bound while-loops under vmap)
+        eta = jnp.where((i == j) | (i >= n_valid), ui, eta)
+        w = w + Y[:, i] * (eta - ui)
+        u = u.at[i].set(eta)
+        return u, w
+
+    def row_update(j, X):
+        mf = ((idx != j) & (idx < n_valid)).astype(dtype)
+        Y = X * mf[:, None] * mf[None, :]
+        s = Sigma[:, j] * mf
+        t = jnp.trace(X) - X[j, j]
+        c = Sigma[j, j] - lam - t
+
+        def sweep(_, carry):
+            return jax.lax.fori_loop(
+                0, n, functools.partial(coord, Y=Y, s=s, j=j), carry
+            )
+
+        u, w = jax.lax.fori_loop(0, qp_sweeps, sweep, (s, Y @ s))
+        tau = solve_tau(jnp.dot(u, w), c)
+        y = w / tau
+        ejf = ((idx == j) & (idx < n_valid)).astype(dtype)
+        Xn = Y + y[:, None] * ejf[None, :] + ejf[:, None] * y[None, :]
+        Xn = Xn + (c + tau) * ejf[:, None] * ejf[None, :]
+        # rows beyond n_valid are not variables: their update is a no-op
+        return jnp.where(j < n_valid, Xn, X)
+
+    def partial_obj(X):
+        tr = jnp.trace(X)
+        return jnp.sum(Sigma * X) - lam * jnp.sum(jnp.abs(X)) - 0.5 * tr * tr
+
+    def cond(state):
+        _, _, _, _, k, done = state
+        return jnp.logical_not(done) & (k < max_sweeps)
+
+    def body(state):
+        X, hist, prev, _, k, _ = state
+        X = jax.lax.fori_loop(0, n, row_update, X)
+        obj = partial_obj(X)
+        hist = jax.lax.dynamic_update_slice(hist, obj[None], (k,))
+        done = jnp.abs(obj - prev) <= tol * (1.0 + jnp.abs(obj))
+        return X, hist, obj, obj, k + 1, done
+
+    minus_inf = jnp.array(-jnp.inf, dtype)
+    state0 = (
+        X0,
+        jnp.full((max_sweeps,), jnp.nan, dtype),
+        minus_inf,
+        minus_inf,
+        jnp.array(0, jnp.int32),
+        jnp.array(False),
+    )
+    X, hist, _, obj, k, _ = jax.lax.while_loop(cond, body, state0)
+    return X, obj, k, hist
+
+
+def bcd_solve_batched_ref(
+    Sigmas, lams, betas, X0s, tol, n_valids,
+    *, max_sweeps: int = 20, qp_sweeps: int = 4, tau_iters: int = 80,
+):
+    """vmap of the masked oracle over the batch axis — the ground truth of
+    the batched kernel launch (`bcd_fused.bcd_solve_batched_pallas`) and the
+    off-TPU production path of `ops.bcd_solve_batched`: ONE XLA dispatch for
+    B solves."""
+    solve = functools.partial(
+        bcd_solve_masked_ref, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+        tau_iters=tau_iters,
+    )
+    return jax.vmap(solve, in_axes=(0, 0, 0, 0, None, 0))(
+        Sigmas, lams, betas, X0s, tol, n_valids
+    )
 
 
 def qp_sweep_ref(Y, s, lam, u0, j, sweeps: int):

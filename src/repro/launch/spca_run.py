@@ -50,6 +50,9 @@ def main():
                     help="where to write the CSR store (default: temp dir)")
     ap.add_argument("--chunk-nnz", type=int, default=16_384)
     ap.add_argument("--chunk-rows", type=int, default=512)
+    ap.add_argument("--batch-evals", type=int, default=0,
+                    help=">1: run each lambda-search round as ONE batched "
+                         "solve launch of this many evaluations")
     args = ap.parse_args()
 
     exp = NYTIMES if args.corpus == "nytimes" else PUBMED
@@ -63,7 +66,8 @@ def main():
     print(f"  nnz={corpus.nnz} ({time.time() - t0:.1f}s)")
 
     cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8,
-                     chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows)
+                     chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows,
+                     batch_evals=args.batch_evals)
 
     if args.streaming:
         from repro.sparse import write_corpus
@@ -93,16 +97,23 @@ def main():
             return jnp.asarray((A.T @ A) / corpus.n_docs)
 
     mask = np.ones(n_words, bool)
+    total_launches = 0
     for c in range(args.components):
         t0 = time.time()
+        diag = {}
         r = search_lambda(None, args.target_card, cfg=cfg,
-                          active_mask=mask, stats=(np.asarray(var), build))
+                          active_mask=mask, stats=(np.asarray(var), build),
+                          diagnostics=diag)
+        total_launches += diag["solve_launches"]
         words = [corpus.vocab[i] for i in r.support]
         print(f"PC{c + 1}: card={r.cardinality} n_hat={r.reduced_n} "
               f"lam={r.lam:.3f} var={r.variance:.2f} gap={r.gap:.1e} "
+              f"launches={diag['solve_launches']} evals={diag['evals']} "
               f"({time.time() - t0:.1f}s)")
         print("   " + ", ".join(words))
         mask[r.support] = False
+    print(f"total: {total_launches} solve launch(es) across "
+          f"{args.components} components")
 
 
 if __name__ == "__main__":
