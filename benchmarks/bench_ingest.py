@@ -3,12 +3,20 @@
 The out-of-core claim in numbers: the dense streaming leg reads every one
 of the m*n elements per pass while the CSR leg touches only the nnz
 (>99% sparsity on text), so chunked sparse ingest should win by roughly
-the density factor on the memory-bound screen.  Reported per leg:
+the density factor on the memory-bound screen.  The CSR legs time the
+PR-5 production pipeline — cached chunk plan, megabatch packing into
+reusable buffers, depth-2 async prefetch, ONE kernel dispatch per
+megabatch.  Reported per leg:
 
   us_per_call — one full pass over the corpus
-  derived     — effective MB/s of *logical* dense traffic (m*n*4 bytes for
-                the dense leg, nnz*8 for the sparse leg), us/chunk, and
-                the chunk count
+  derived     — entry throughput (Mnnz/s) for the sparse legs, effective
+                MB/s of *logical* dense traffic, us/chunk, chunk and
+                launch counts
+
+``ingest_fit3_passes_*`` demonstrates the pass economics end-to-end: a
+3-component streaming fit makes 1 + 1 corpus passes (screen + ONE shared
+union-support Gram) instead of the pre-PR-5 1 + K, with one ingest
+dispatch per pass-megabatch (`fit_components` diagnostics counters).
 
 ``run_smoke`` is the --quick row: one small corpus, screen legs only.
 """
@@ -19,9 +27,13 @@ import time
 
 import numpy as np
 
+from repro.core import SPCAConfig, fit_components
 from repro.data import make_corpus
 from repro.data.bow import StreamingGram, StreamingStats
 from repro.sparse import write_corpus
+from repro.sparse.engine import (
+    sparse_feature_variances, sparse_reduced_covariance,
+)
 
 
 def _bench_pass(fn, reps: int = 3) -> float:
@@ -33,10 +45,11 @@ def _bench_pass(fn, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
-              tag, gram_support=None):
+def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, megabatch,
+              batch_docs, tag, gram_support=None):
     m, n = corpus.n_docs, corpus.n_words
     rows = []
+    geometry = dict(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows)
 
     def dense_screen():
         acc = StreamingStats(n)
@@ -45,14 +58,12 @@ def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
         return acc.finalize()
 
     def sparse_screen():
-        acc = StreamingStats(n)
-        for c in store.iter_chunks(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows):
-            acc.update_csr(c)
-        return acc.finalize()
+        return sparse_feature_variances(
+            store, megabatch=megabatch, **geometry
+        )
 
-    n_chunks = sum(
-        1 for _ in store.iter_chunks(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows)
-    )
+    n_chunks = store.n_chunks(**geometry)
+    n_launches = -(-n_chunks // megabatch)
     dense_bytes = m * n * 4
     sparse_bytes = store.nnz * 8
     t_d = _bench_pass(dense_screen)
@@ -66,9 +77,11 @@ def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
         "name": f"ingest_screen_csr_{tag}",
         "us_per_call": t_s * 1e6,
         "derived": (
+            f"{store.nnz / t_s / 1e6:.1f}Mnnz/s "
             f"touched={sparse_bytes / t_s / 1e6:.0f}MB/s "
             f"{t_s / n_chunks * 1e6:.0f}us/chunk chunks={n_chunks} "
-            f"nnz={store.nnz} speedup={t_d / t_s:.2f}x"
+            f"launches={n_launches} nnz={store.nnz} "
+            f"speedup={t_d / t_s:.2f}x"
         ),
     })
 
@@ -82,11 +95,9 @@ def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
             return acc.finalize()
 
         def sparse_gram():
-            acc = StreamingGram(support, chunk_rows=chunk_rows)
-            for c in store.iter_chunks(chunk_nnz=chunk_nnz,
-                                       chunk_rows=chunk_rows):
-                acc.update_csr(c)
-            return acc.finalize()
+            return sparse_reduced_covariance(
+                store, support, megabatch=megabatch, **geometry
+            )
 
         t_dg = _bench_pass(dense_gram)
         t_sg = _bench_pass(sparse_gram)
@@ -100,11 +111,37 @@ def _rows_for(corpus, store, *, chunk_nnz, chunk_rows, batch_docs,
             "name": f"ingest_gram_csr_{tag}",
             "us_per_call": t_sg * 1e6,
             "derived": (
-                f"n_hat={support.size} {t_sg / n_chunks * 1e6:.0f}us/chunk "
-                f"speedup={t_dg / t_sg:.2f}x"
+                f"n_hat={support.size} {store.nnz / t_sg / 1e6:.1f}Mnnz/s "
+                f"{t_sg / n_chunks * 1e6:.0f}us/chunk "
+                f"launches={n_launches} speedup={t_dg / t_sg:.2f}x"
             ),
         })
     return rows
+
+
+def _fit_passes_row(store, *, chunk_nnz, chunk_rows, megabatch, tag):
+    """The 1+1-pass K-component fit, via the driver's diagnostics."""
+    K = 3
+    cfg = SPCAConfig(max_sweeps=6, lam_search_evals=6,
+                     chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+                     megabatch_chunks=megabatch)
+    diag: dict = {}
+    t0 = time.perf_counter()
+    fit_components(store, K, target_card=4, cfg=cfg, diagnostics=diag)
+    t = time.perf_counter() - t0
+    ingest = diag.get("ingest", {})
+    return {
+        "name": f"ingest_fit3_passes_{tag}",
+        "us_per_call": t * 1e6,
+        "derived": (
+            f"corpus_passes={diag.get('corpus_passes')} (old=1+K={1 + K}) "
+            f"cov_builds={diag.get('cov_builds')} "
+            f"cov_slices={diag.get('cov_slices')} "
+            f"screen_launches={ingest.get('screen_launches')} "
+            f"gram_launches={ingest.get('gram_launches')} "
+            f"chunks={ingest.get('chunks')}"
+        ),
+    }
 
 
 def run(n_docs: int = 4000, n_words: int = 20_000):
@@ -115,11 +152,16 @@ def run(n_docs: int = 4000, n_words: int = 20_000):
     support = np.sort(np.argsort(var)[::-1][:256])
     with tempfile.TemporaryDirectory() as d:
         store = write_corpus(corpus, d, shard_nnz=1 << 20)
-        return _rows_for(
-            corpus, store, chunk_nnz=16_384, chunk_rows=512,
+        rows = _rows_for(
+            corpus, store, chunk_nnz=16_384, chunk_rows=512, megabatch=8,
             batch_docs=512, tag=f"{n_docs}x{n_words}",
             gram_support=support,
         )
+        rows.append(_fit_passes_row(
+            store, chunk_nnz=16_384, chunk_rows=512, megabatch=8,
+            tag=f"{n_docs}x{n_words}",
+        ))
+        return rows
 
 
 def run_smoke(n_docs: int = 600, n_words: int = 3_000):
@@ -128,6 +170,6 @@ def run_smoke(n_docs: int = 600, n_words: int = 3_000):
     with tempfile.TemporaryDirectory() as d:
         store = write_corpus(corpus, d, shard_nnz=1 << 18)
         return _rows_for(
-            corpus, store, chunk_nnz=4_096, chunk_rows=256,
+            corpus, store, chunk_nnz=4_096, chunk_rows=256, megabatch=8,
             batch_docs=256, tag="smoke",
         )

@@ -11,6 +11,8 @@ from benchmarks._util import timeit as _timeit
 from repro.kernels import ops, ref
 from repro.kernels.bcd_fused import bcd_solve_batched_pallas, bcd_solve_pallas
 from repro.kernels.bcd_sweep import qp_sweep_pallas
+from repro.kernels.csr_gram import csr_gram_batched_pallas
+from repro.kernels.csr_stats import csr_column_stats_pallas
 from repro.kernels.gram import gram_pallas
 from repro.kernels.variance import column_stats_pallas
 
@@ -149,6 +151,60 @@ def run():
             f"launches_batched=1 launches_sequential={B} "
             f"sequential_us={ts * 1e6:.1f} speedup={ts / max(tb, 1e-12):.2f}x "
             f"interp_vs_seq_maxdiff={d:.2e}"
+        ),
+    })
+
+    # CSR ingest kernels (PR 5): one megabatch of C chunks reduced in ONE
+    # dispatch.  The timed quantity is the off-TPU production backend (the
+    # ops host path — bincount screen / spgemm Gram); interpret-mode parity
+    # of the vectorized grid=(C,) Pallas kernels is reported alongside on a
+    # small slice (the interpreter is far too slow to time).
+    C, E, ncols = 8, 16_384, 20_000
+    mv = rng.normal(size=(C, E)).astype(np.float32)
+    mc = rng.integers(0, ncols, (C, E)).astype(np.int32)
+    t = _timeit(lambda v, c: ops.csr_column_stats(v, c, n=ncols), mv, mc)
+    sp, ssp = csr_column_stats_pallas(
+        jnp.asarray(mv[:2, :1024]), jnp.asarray(mc[:2, :1024]), ncols,
+        interpret=True,
+    )
+    sr, ssr = ref.csr_column_stats_batched_ref(
+        jnp.asarray(mv[:2, :1024]), jnp.asarray(mc[:2, :1024]), ncols
+    )
+    d = float(jnp.max(jnp.abs(ssp - ssr)))
+    rows.append({
+        "name": f"kernel_csr_stats_C{C}xE{E}",
+        "us_per_call": t * 1e6,
+        "derived": (
+            f"{C * E / t / 1e6:.1f}Mnnz/s launches=1 n={ncols} "
+            f"interp_vs_ref_maxdiff={d:.2e}"
+        ),
+    })
+
+    n_hat, R = 256, 512
+    # entries mostly off-support (the post-elimination regime): the gather
+    # Gram touches only the surviving ~n_hat columns of the vocabulary
+    ml = np.where(mc < n_hat, mc, n_hat).astype(np.int32)
+    ms = rng.integers(0, R, (C, E)).astype(np.int32)
+    t = _timeit(
+        lambda v, l, s: ops.csr_gram_batched(v, l, s, n_rows=R, n_hat=n_hat),
+        mv, ml, ms,
+    )
+    Gp = csr_gram_batched_pallas(
+        jnp.asarray(mv[:2, :1024]), jnp.asarray(ml[:2, :1024]),
+        jnp.asarray(ms[:2, :1024] % 16), 16, n_hat, interpret=True,
+    )
+    Gr = ref.csr_gram_batched_ref(
+        jnp.asarray(mv[:2, :1024]), jnp.asarray(ml[:2, :1024]),
+        jnp.asarray(ms[:2, :1024] % 16), 16, n_hat,
+    )
+    d = float(jnp.max(jnp.abs(Gp - Gr)))
+    rows.append({
+        "name": f"kernel_csr_gram_C{C}xE{E}_n{n_hat}",
+        "us_per_call": t * 1e6,
+        "derived": (
+            f"{C * E / t / 1e6:.1f}Mnnz/s launches=1 R={R} "
+            f"nnz_S={int((ml < n_hat).sum())} "
+            f"interp_vs_ref_maxdiff={d:.2e}"
         ),
     })
     return rows

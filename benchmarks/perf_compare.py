@@ -20,9 +20,12 @@ import json
 import sys
 
 # Rows gated by `run.py --check`: the kernel-layer benches are stable
-# compiled-code timings; the corpus/driver rows wobble with host load and
-# would make a 20% gate flaky.
-GATED_PREFIXES = ("kernel_",)
+# compiled-code timings, and since PR 5 the ingest rows time the
+# megabatched streaming passes (host loop + backend reduction), whose
+# pipeline regressions are exactly what the gate must catch; the
+# solver/driver rows wobble with host load and would make a 20% gate
+# flaky.
+GATED_PREFIXES = ("kernel_", "ingest_")
 DEFAULT_THRESHOLD = 0.20
 
 
@@ -54,7 +57,7 @@ def print_bench_report(baseline: dict, fresh: dict,
     gated = [n for n in sorted(fresh)
              if n.startswith(GATED_PREFIXES) and n in baseline
              and float(baseline[n]) > 0.0]
-    print(f"perf gate: {len(gated)} kernel row(s) compared, "
+    print(f"perf gate: {len(gated)} kernel/ingest row(s) compared, "
           f"{len(regressions)} regression(s) over "
           f"{DEFAULT_THRESHOLD:.0%}")
     for n in gated:

@@ -84,15 +84,20 @@ class SPCAConfig:
     chunk_nnz: int = 16_384      # CSR slots per fixed-shape chunk
     chunk_rows: int = 512        # row capacity per chunk (Gram scratch height)
     csr_impl: str = "auto"       # 'auto' | 'ref' | 'pallas' for the CSR kernels
+    megabatch_chunks: int = 8    # chunks per ingest launch (grid=(C,) batch)
+    ingest_prefetch: int = 2     # chunk-prefetch queue depth (0 = synchronous)
 
 
-def _as_stats(data, is_covariance: bool, center: bool, cfg=None):
+def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
+              counters: dict | None = None):
     """Normalise input to (variances, reduced-covariance builder).
 
     Accepts a dense (m, n) data matrix, an (n, n) covariance
     (``is_covariance=True``), or an out-of-core `SparseCorpus` store
     handle (duck-typed on ``iter_chunks``), whose two streaming passes run
     through the CSR kernels and never materialise an (m, n) array.
+    ``counters``, when given with a store handle, collects the ingest
+    pass/launch tallies (see `repro.sparse.engine`).
     """
     if hasattr(data, "iter_chunks"):
         from repro.sparse import engine
@@ -101,6 +106,9 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None):
         return engine.sparse_stats(
             data, center=center, impl=cfg.csr_impl,
             chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
+            megabatch=cfg.megabatch_chunks,
+            prefetch_depth=cfg.ingest_prefetch,
+            counters=counters,
         )
     if is_covariance:
         Sigma = jnp.asarray(data)
@@ -351,12 +359,18 @@ def _card_better(cfg: SPCAConfig, target_card: int):
     return better
 
 
+def _bracket_depth(target_card: int, size: int) -> int:
+    """Variance rank the bracket's lo threshold is pinned at — shared by
+    `_search_bracket` and `_union_base_support` so the union-support
+    bound can never drift from the bracket heuristic it covers."""
+    return min(max(30 * target_card, 100), size)
+
+
 def _search_bracket(v: np.ndarray, target_card: int) -> tuple[float, float]:
     """Initial (lo, hi) lambda bracket from the masked variance spectrum."""
     vs = np.sort(v[np.isfinite(v) & (v > 0)])[::-1]
     hi = float(vs[0]) * 0.999     # keeps >=1 feature
-    lo_rank = min(max(30 * target_card, 100), vs.size) - 1
-    lo = float(max(vs[lo_rank], 1e-12))
+    lo = float(max(vs[_bracket_depth(target_card, vs.size) - 1], 1e-12))
     return lo, hi
 
 
@@ -370,6 +384,7 @@ def search_lambda(
     stats=None,
     diagnostics: dict | None = None,
     keep_reduced: bool = False,
+    cov_cache: ReducedCovarianceCache | None = None,
 ) -> PCResult:
     """Bisection on lambda for a solution with cardinality ~ target_card.
 
@@ -393,7 +408,11 @@ def search_lambda(
     costs O(rounds) launches instead of O(evals).  ``diagnostics``, when
     given, is filled with the eval/build/warm/launch counters.
     ``keep_reduced`` retains the winning solver iterate on the result (for
-    the batched deflation re-polish).
+    the batched deflation re-polish).  ``cov_cache`` injects a covariance
+    cache shared ACROSS searches (`fit_components` seeds one on the union
+    support so K deflated searches share ONE reduced-Gram build — on an
+    out-of-core store that is one corpus pass for all K components);
+    diagnostics then report this search's build/slice deltas.
     """
     if cfg is None:
         cfg = SPCAConfig()
@@ -403,6 +422,7 @@ def search_lambda(
         return _search_lambda_batched(
             target_card, cfg=cfg, active_mask=active_mask, stats=stats,
             diagnostics=diagnostics, keep_reduced=keep_reduced,
+            cov_cache=cov_cache,
         )
     variances, build = stats
     v = variances.copy()
@@ -410,9 +430,11 @@ def search_lambda(
         v = np.where(active_mask, v, -np.inf)
     lo, hi = _search_bracket(v, target_card)
 
-    cache: ReducedCovarianceCache | None = None
-    if cfg.reuse_covariance:
+    cache = cov_cache
+    if cache is None and cfg.reuse_covariance:
         cache = ReducedCovarianceCache(build)
+    builds0 = cache.builds if cache is not None else 0
+    slices0 = cache.slices if cache is not None else 0
     probe_launches = 0
     if cfg.lam_grid_probe > 1:
         # The probe solves on the support at the smallest bracketed lambda.
@@ -462,8 +484,8 @@ def search_lambda(
             evals=evals,
             warm_starts=warm_starts,
             total_sweeps=total_sweeps,
-            cov_builds=cache.builds if cache is not None else evals,
-            cov_slices=cache.slices if cache is not None else 0,
+            cov_builds=cache.builds - builds0 if cache is not None else evals,
+            cov_slices=cache.slices - slices0 if cache is not None else 0,
             # one solver launch per evaluation, plus the probe's
             solve_launches=evals + probe_launches,
             batched=False,
@@ -482,6 +504,7 @@ def _search_lambda_batched(
     stats,
     diagnostics: dict | None,
     keep_reduced: bool = False,
+    cov_cache: ReducedCovarianceCache | None = None,
 ) -> PCResult:
     """Lambda search as O(rounds) batched launches instead of O(evals).
 
@@ -500,9 +523,11 @@ def _search_lambda_batched(
     lo, hi = _search_bracket(v, target_card)
     n_features = variances.shape[0]
 
-    cache: ReducedCovarianceCache | None = None
-    if cfg.reuse_covariance:
+    cache = cov_cache
+    if cache is None and cfg.reuse_covariance:
         cache = ReducedCovarianceCache(build)
+    builds0 = cache.builds if cache is not None else 0
+    slices0 = cache.slices if cache is not None else 0
     base_support = _support_at(v, lo, cfg.max_reduced, _buckets_of(cfg))
     Sigma_base = cache.get(base_support) if cache is not None \
         else build(base_support)
@@ -593,8 +618,8 @@ def _search_lambda_batched(
             evals=evals,
             warm_starts=warm_starts,
             total_sweeps=total_sweeps,
-            cov_builds=cache.builds if cache is not None else 1,
-            cov_slices=cache.slices if cache is not None else 0,
+            cov_builds=cache.builds - builds0 if cache is not None else 1,
+            cov_slices=cache.slices - slices0 if cache is not None else 0,
             solve_launches=launches,
             batched=True,
         )
@@ -620,6 +645,48 @@ def _batched_impl(solver_impl: str) -> str:
     oracle, 'fused' forces the kernel, 'auto' stays auto."""
     return {"jnp": "ref", "fused_ref": "ref", "fused": "pallas"}.get(
         solver_impl, "auto")
+
+
+def _union_base_support(v: np.ndarray, target_card: int, n_components: int,
+                        cfg: SPCAConfig) -> np.ndarray:
+    """The maximal support a K-component deflated fit can request — the
+    seed of the cross-component covariance cache.
+
+    Every search bisects inside its bracket, so every screen it takes is at
+    some ``lam >= lo`` and selects roughly ``lo_rank`` features
+    (`_search_bracket` pins ``lo`` at that variance rank, the
+    ``max_reduced`` guard caps the count), topped up to at most the next
+    bucket size.  Deflation only MASKS features, so component k's screen —
+    ranked on the masked spectrum — lives within the global variance
+    order shifted by however many features earlier components consumed:
+    at most ``(K-1) * (target_card + card_slack)`` when every component
+    accepts within slack.  The union of all K searches' supports is
+    therefore a prefix of the global variance order of that combined
+    length — EXTENDED through any variance ties at the cut (Thm 2.1's
+    `select_support` is a non-strict ``v >= lam`` cut, so a tie block at
+    the threshold enters a screen wholesale).  ONE reduced-Gram build
+    there serves every evaluation of every search via principal-submatrix
+    slices.  A component that overshoots the slack (or a pathological tie
+    plateau wider than ``max_reduced``) escapes the prefix and the cache
+    falls back to a rebuild — correctness never depends on this bound,
+    only the 1-build pass economics do.
+    """
+    order = _variance_order(v)
+    if order.size == 0:
+        return order
+    vs = v[order]                      # descending
+    removed = max(0, n_components - 1) * (target_card + cfg.card_slack)
+    raw = min(_bracket_depth(target_card, order.size) + 1, cfg.max_reduced)
+    buckets = _buckets_of(cfg)
+    if buckets is not None:
+        raw = min(next((int(b) for b in buckets if b >= raw), raw),
+                  cfg.max_reduced)
+    depth = min(order.size, raw + removed)
+    # extend through the tie block at the threshold variance
+    tie_hi = int(np.searchsorted(-vs, -vs[depth - 1], side="right"))
+    depth = min(max(depth, tie_hi),
+                min(order.size, cfg.max_reduced + removed))
+    return np.sort(order[:depth])
 
 
 def _refine_components_batched(
@@ -676,6 +743,7 @@ def fit_components(
     cfg: SPCAConfig | None = None,
     deflation: str = "remove",
     diagnostics: dict | None = None,
+    stats=None,
 ) -> list[PCResult]:
     """Top-k sparse PCs.  deflation='remove' drops selected features from the
     dictionary between components (paper-style disjoint topics);
@@ -690,7 +758,12 @@ def fit_components(
     With ``cfg.batch_deflation`` the K accepted components are re-polished
     by ONE batched launch at their known (lambda, support) pairs after the
     deflation loop.  ``diagnostics``, when given, collects the per-component
-    search counters and the total launch count.
+    search counters, the total launch count, and the pass economics: the
+    K searches share ONE covariance cache seeded on the union support
+    (`_union_base_support`), so the whole fit normally costs ONE
+    reduced-Gram build — for an out-of-core store that is 2 corpus passes
+    total (``corpus_passes``: screen + shared Gram) instead of 1 + K, with
+    the per-pass ingest launch tally under ``ingest``.
     """
     if cfg is None:
         cfg = SPCAConfig()
@@ -702,14 +775,32 @@ def fit_components(
     per_comp: list[dict] = []
     results: list[PCResult] = []
     if deflation == "remove":
-        stats = _as_stats(data, is_covariance, cfg.center, cfg)
+        # ``stats`` (a precomputed (variances, build) pair, as accepted by
+        # `search_lambda`) skips the screen pass — launchers that already
+        # streamed it pass theirs in; their own counters then keep the
+        # ingest tally.
+        ingest: dict = {}
+        if stats is None:
+            stats = _as_stats(data, is_covariance, cfg.center, cfg,
+                              counters=ingest)
         mask = np.ones(stats[0].shape[0], dtype=bool)
+        cache: ReducedCovarianceCache | None = None
+        if cfg.reuse_covariance:
+            # Cross-component cache: deflation only masks features, so one
+            # eager build on the union support serves every search below
+            # via principal-submatrix slices — on a store handle this is
+            # the fit's ONE Gram pass.
+            cache = ReducedCovarianceCache(stats[1])
+            base = _union_base_support(stats[0], target_card, n_components,
+                                       cfg)
+            if base.size:
+                cache.get(base)
         for _ in range(n_components):
             d: dict = {}
             r = search_lambda(
                 data, target_card, is_covariance=is_covariance, cfg=cfg,
                 active_mask=mask, stats=stats, diagnostics=d,
-                keep_reduced=cfg.batch_deflation,
+                keep_reduced=cfg.batch_deflation, cov_cache=cache,
             )
             per_comp.append(d)
             results.append(r)
@@ -724,8 +815,23 @@ def fit_components(
                 refine_launches=refine_launches,
                 solve_launches=refine_launches + sum(
                     d.get("solve_launches", 0) for d in per_comp),
+                cov_builds=cache.builds if cache is not None else sum(
+                    d.get("cov_builds", 0) for d in per_comp),
+                cov_slices=cache.slices if cache is not None else 0,
             )
+            if ingest:
+                diagnostics.update(
+                    ingest=dict(ingest),
+                    corpus_passes=ingest.get("screen_passes", 0)
+                    + ingest.get("gram_passes", 0),
+                )
     elif deflation == "project":
+        if stats is not None:
+            raise ValueError(
+                "stats= is only usable with deflation='remove': Hotelling "
+                "deflation mutates the full (n, n) covariance, which a "
+                "(variances, build) pair cannot express"
+            )
         if not is_covariance:
             A = jnp.asarray(data)
             if cfg.center:

@@ -10,18 +10,25 @@ pipeline legs are streaming, single-pass, batch-at-a-time:
 Each accumulator has two input legs sharing one accumulator state (the
 `StreamingAccumulator` protocol, so the legs cannot drift apart):
 
-  update(block)      — dense row blocks (what `Corpus.batches` yields),
-                       routed through the dense Pallas kernels;
-  update_csr(chunk)  — fixed-shape padded `CSRChunk`s from the sharded
-                       store (`repro.sparse.store`), routed through the
-                       CSR Pallas kernels — O(nnz), never densifying.
+  update(block)           — dense row blocks (what `Corpus.batches`
+                            yields), routed through the dense Pallas
+                            kernels;
+  update_csr(chunk)       — fixed-shape padded `CSRChunk`s from the
+                            sharded store (`repro.sparse.store`), routed
+                            through the CSR Pallas kernels — O(nnz),
+                            never densifying;
+  update_csr_batch(mb)    — a `CSRMegaBatch` of C chunks folded in with
+                            ONE kernel dispatch (the PR-5 ingestion hot
+                            path: O(passes/C) launches per pass).
 
-Both are trivially mergeable across hosts/pods — `merge` on the host,
-or a single psum at finalise time (see core.distributed), or
+Both accumulators are trivially mergeable across hosts/pods — `merge`
+(device-side for the Gram: jnp adds, one host transfer at finalize), or a
+single psum at finalise time (see core.distributed), or
 `core.elimination.combine_screens` on finalized Screens.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,6 +53,11 @@ class StreamingAccumulator:
 
     def update_csr(self, chunk) -> "StreamingAccumulator":
         """Fold in a `repro.sparse.store.CSRChunk` (fixed-shape, padded)."""
+        raise NotImplementedError
+
+    def update_csr_batch(self, mb) -> "StreamingAccumulator":
+        """Fold in a `repro.sparse.store.CSRMegaBatch` of C chunks with a
+        single kernel dispatch."""
         raise NotImplementedError
 
     def merge(self, other: "StreamingAccumulator") -> "StreamingAccumulator":
@@ -84,12 +96,22 @@ class StreamingStats(StreamingAccumulator):
 
     def update_csr(self, chunk) -> "StreamingStats":
         s, ss = ops.csr_column_stats(
-            jnp.asarray(chunk.values), jnp.asarray(chunk.col_ids),
-            n=self.n, impl=self.impl,
+            chunk.values, chunk.col_ids, n=self.n, impl=self.impl,
+            nnz=chunk.nnz,
         )
         self.sum += np.asarray(s, np.float64)
         self.sumsq += np.asarray(ss, np.float64)
         self.count += chunk.n_rows   # empty rows count, padded slots don't
+        return self
+
+    def update_csr_batch(self, mb) -> "StreamingStats":
+        """C chunks -> ONE kernel dispatch (and one host f64 fold)."""
+        s, ss = ops.csr_column_stats(
+            mb.values, mb.col_ids, n=self.n, impl=self.impl, nnz=mb.nnz,
+        )
+        self.sum += np.asarray(s, np.float64)
+        self.sumsq += np.asarray(ss, np.float64)
+        self.count += int(np.sum(mb.n_rows))
         return self
 
     def _check_mergeable(self, other) -> None:
@@ -110,64 +132,124 @@ class StreamingStats(StreamingAccumulator):
 
 
 class StreamingGram(StreamingAccumulator):
-    """One-pass reduced gram accumulator over the surviving columns."""
+    """One-pass reduced gram accumulator over the surviving columns.
 
-    _acc_fields = ("g",)
+    The summed state ``g`` is a DEVICE array: every update and every
+    `merge` is a jnp add, so a pass never round-trips the (k, k) gram
+    through host memory per chunk — the single host transfer happens in
+    `finalize`, mirroring `combine_screens`' device-side moment merge.
+    Under x64 the accumulator is f64 (matching the old host fold); when
+    x64 is off it is f32 with Neumaier compensation (``_err`` carries the
+    rounding loss of every add), so the error bound stays independent of
+    the chunk count either way.
+    """
 
     def __init__(self, support: np.ndarray, *, impl: str = "auto",
-                 chunk_rows: int = 512):
+                 chunk_rows: int = 512, acc_dtype=None):
         self.support = np.asarray(support)
         k = self.support.size
-        self.g = np.zeros((k, k), np.float64)
+        dtype = jax.dtypes.canonicalize_dtype(
+            np.float64 if acc_dtype is None else acc_dtype
+        )
+        self.g = jnp.zeros((k, k), dtype)
+        self._err = jnp.zeros((k, k), dtype) if dtype == jnp.float32 else None
         self.count = 0
         self.impl = impl
         self.chunk_rows = chunk_rows
 
+    def _acc(self, delta) -> None:
+        """Fold one partial gram into ``g`` — compensated when f32."""
+        delta = jnp.asarray(delta, self.g.dtype)
+        if self._err is None:
+            self.g = self.g + delta
+            return
+        t = self.g + delta
+        big = jnp.abs(self.g) >= jnp.abs(delta)
+        self._err = self._err + jnp.where(
+            big, (self.g - t) + delta, (delta - t) + self.g
+        )
+        self.g = t
+
     def update(self, batch) -> "StreamingGram":
         cols = jnp.asarray(batch)[:, self.support]
-        self.g += np.asarray(ops.gram(cols, impl=self.impl), np.float64)
+        self._acc(ops.gram(cols, impl=self.impl))
         self.count += batch.shape[0]
         return self
 
-    def update_csr(self, chunk) -> "StreamingGram":
-        # Map global column ids to support positions (support is sorted —
-        # it comes from flatnonzero); entries off the support get the
-        # >= n_hat sentinel the kernel/oracle drop.
+    def _local_cols(self, col_ids: np.ndarray) -> np.ndarray:
+        """Map global column ids to support positions (support is sorted —
+        it comes from flatnonzero); entries off the support get the
+        >= n_hat sentinel the kernel/oracle drop.  Vectorized over any
+        entry-array shape (one chunk or a whole megabatch)."""
         k = self.support.size
-        if chunk.n_rows > self.chunk_rows:
+        pos = np.searchsorted(self.support, col_ids)
+        pos_c = np.minimum(pos, k - 1)
+        return np.where(
+            self.support[pos_c] == col_ids, pos_c, k
+        ).astype(np.int32)
+
+    def _check_rows(self, n_rows: int) -> None:
+        if n_rows > self.chunk_rows:
             raise ValueError(
-                f"chunk has {chunk.n_rows} rows > chunk_rows="
+                f"chunk has {n_rows} rows > chunk_rows="
                 f"{self.chunk_rows}; iterate the store with "
                 f"chunk_rows <= the accumulator's"
             )
-        if k == 0:
+
+    def update_csr(self, chunk) -> "StreamingGram":
+        self._check_rows(chunk.n_rows)
+        if self.support.size == 0:
             self.count += chunk.n_rows
             return self
-        pos = np.searchsorted(self.support, chunk.col_ids)
-        pos_c = np.minimum(pos, k - 1)
-        local = np.where(
-            self.support[pos_c] == chunk.col_ids, pos_c, k
-        ).astype(np.int32)
-        self.g += np.asarray(
-            ops.csr_gram(
-                jnp.asarray(chunk.values), jnp.asarray(local),
-                jnp.asarray(chunk.seg_ids),
-                n_rows=self.chunk_rows, n_hat=k, impl=self.impl,
-            ),
-            np.float64,
-        )
+        self._acc(ops.csr_gram(
+            chunk.values, self._local_cols(chunk.col_ids), chunk.seg_ids,
+            n_rows=self.chunk_rows, n_hat=self.support.size, impl=self.impl,
+            nnz=chunk.nnz,
+        ))
         self.count += chunk.n_rows
+        return self
+
+    def update_csr_batch(self, mb) -> "StreamingGram":
+        """C chunks -> ONE kernel dispatch, accumulated on device."""
+        self._check_rows(int(np.max(mb.n_rows, initial=0)))
+        if self.support.size == 0:
+            self.count += int(np.sum(mb.n_rows))
+            return self
+        self._acc(ops.csr_gram_batched(
+            mb.values, self._local_cols(mb.col_ids), mb.seg_ids,
+            n_rows=self.chunk_rows, n_hat=self.support.size, impl=self.impl,
+            nnz=mb.nnz,
+        ))
+        self.count += int(np.sum(mb.n_rows))
+        return self
+
+    def merge(self, other: "StreamingGram") -> "StreamingGram":
+        # Overrides the shared field-sum merge: the compensated fold must
+        # route the other partial's gram through _acc (device-side adds
+        # either way, matching the protocol contract).
+        assert type(self) is type(other), (type(self), type(other))
+        self._check_mergeable(other)
+        if self._err is not None:       # dtypes match, so _err does too
+            self._err = self._err + other._err
+        self._acc(other.g)
+        self.count += other.count
         return self
 
     def _check_mergeable(self, other) -> None:
         assert np.array_equal(self.support, other.support)
+        # mixed accumulator dtypes would silently downcast one partial
+        # (and drop its compensation) — fail loudly like every other
+        # partial mismatch instead
+        assert self.g.dtype == other.g.dtype, (self.g.dtype, other.g.dtype)
 
     def finalize(self, *, means: np.ndarray | None = None) -> np.ndarray:
         m = max(self.count, 1)
-        g = self.g.copy()
+        g = np.asarray(self.g, np.float64)   # the ONE host transfer
+        if self._err is not None:            # re-inject the compensation
+            g = g + np.asarray(self._err, np.float64)
         if means is not None:
             mu = np.asarray(means)[self.support]
-            g -= m * np.outer(mu, mu)
+            g = g - m * np.outer(mu, mu)
         return g / m
 
 

@@ -1,24 +1,31 @@
-"""Pallas TPU kernel: gather-Gram — Sigma_hat numerator from CSR chunks.
+"""Pallas TPU kernels: gather-Gram — Sigma_hat numerator from CSR chunks.
 
 After safe elimination only ``n_hat << n`` columns survive, but the
 streaming dense path still reads every column of every row block to slice
-out A_S.  This kernel builds ``G += A_S^T A_S`` for one store chunk
-*directly from the CSR entries*: entries are scatter-densified into a
-chunk-local ``(R, n_hat_pad)`` scratch (R = chunk row capacity) resident
-in VMEM, then the Gram tile is an MXU contraction over R.  Work is
-O(nnz_S) scatter + O(R n_hat^2) flops — never O(m n).
+out A_S.  These kernels build ``G += A_S^T A_S`` *directly from the CSR
+entries*: entries are scatter-densified into a chunk-local
+``(R, n_hat_pad)`` scratch (R = chunk row capacity) resident in VMEM,
+then the Gram is an MXU contraction over R.  Work is O(nnz_S) scatter +
+O(R n_hat^2) flops — never O(m n).
 
 Support mapping happens upstream (``repro.sparse.engine``): ``local_cols``
 holds each entry's position *within the support* and any value >= n_hat is
 a sentinel meaning "entry not on the support, drop it" (matching the
 oracle's ``mode='drop'`` scatter).
 
-Layout: the scratch is shaped ``(n_tiles, R, 128)`` — column ``c`` lives
-at (c // 128, seg, c % 128) — so both scatter indices are leading-dim
-dynamic slices and the lane dim stays static.  Grid: (n_tiles, n_tiles)
-output tiles; the scatter runs once at step (0, 0) and every step
-contracts two scratch tiles on the MXU.  Padded slots (value 0) are
-additively harmless.
+Two schemes (mirroring the fused-solver plan split):
+
+* ``csr_gram_batched_pallas`` — the PR-5 megabatch kernel: grid=(C,) over
+  a batch of C chunks, with BOTH the densify scratch and the full
+  (n_pad, n_pad) Gram accumulator VMEM-resident; each step re-densifies
+  its chunk (a per-entry dynamic-sublane scatter with a full-lane one-hot)
+  and accumulates one whole-chunk ``B^T B`` dot.  ONE ``pallas_call`` per
+  megabatch instead of one per chunk; fits while
+  ``R*n_pad + n_pad^2`` words stay under the VMEM budget (n_hat ~1536 at
+  R=512 in f32 — see `batched_gram_fits`).
+* ``csr_gram_pallas`` — the PR-3 single-chunk kernel, kept as the
+  large-``n_hat`` fallback: (n_tiles, n_tiles) output-tile grid, scratch
+  shaped (n_tiles, R, 128) so only 128-lane tiles are ever contracted.
 """
 from __future__ import annotations
 
@@ -28,6 +35,92 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# VMEM budget for the resident-G batched scheme: densify scratch + Gram
+# accumulator + double-buffered entry blocks, against ~16 MB/core.
+_BATCHED_VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+
+def batched_gram_fits(n_hat: int, n_rows: int, chunk_nnz: int) -> bool:
+    """Whether the one-launch megabatch scheme's resident state
+    (R x n_pad densify scratch + n_pad^2 Gram + 2x3 entry blocks) fits."""
+    n_pad = max(128, ((n_hat + 127) // 128) * 128)
+    R = ((max(n_rows, 8) + 7) // 8) * 8
+    words = R * n_pad + n_pad * n_pad + 6 * chunk_nnz
+    return words * 4 <= _BATCHED_VMEM_BUDGET_BYTES
+
+
+def _batched_kernel(vals_ref, cols_ref, segs_ref, out_ref, b_ref, *,
+                    n_hat: int, n_entries: int):
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b_ref[...] = jnp.zeros_like(b_ref)      # fresh densify per chunk
+    n_pad = b_ref.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
+
+    def body(p, _):
+        cc0 = cols_ref[0, p]
+        valid = cc0 < n_hat
+        v = jnp.where(valid, vals_ref[0, p].astype(jnp.float32), 0.0)
+        cc = jnp.where(valid, cc0, 0)
+        oh = (lanes == cc).astype(jnp.float32)          # (1, n_pad)
+        b_ref[pl.ds(segs_ref[0, p], 1), :] += v * oh
+        return 0
+
+    jax.lax.fori_loop(0, n_entries, body, 0)
+    out_ref[...] += jax.lax.dot_general(
+        b_ref[...], b_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),     # contract rows
+        preferred_element_type=jnp.float32,
+    )
+
+
+def csr_gram_batched_pallas(
+    values: jax.Array,
+    local_cols: jax.Array,
+    seg_ids: jax.Array,
+    n_rows: int,
+    n_hat: int,
+    *,
+    interpret: bool = False,
+):
+    """Megabatch Gram ``G = sum_c B_c^T B_c`` over C chunks in ONE launch.
+
+    ``values``/``local_cols``/``seg_ids`` are (C, E); ``seg_ids`` are
+    chunk-local rows in [0, n_rows); ``local_cols`` entries >= n_hat are
+    dropped (off-support sentinel).  Returns (n_hat, n_hat) f32.
+    """
+    C, E = values.shape
+    assert local_cols.shape == (C, E) and seg_ids.shape == (C, E)
+    n_pad = max(128, ((n_hat + 127) // 128) * 128)
+    R = ((max(n_rows, 8) + 7) // 8) * 8
+    G = pl.pallas_call(
+        functools.partial(_batched_kernel, n_hat=n_hat, n_entries=E),
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda c: (c, 0)),
+            pl.BlockSpec((1, E), lambda c: (c, 0)),
+            pl.BlockSpec((1, E), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((R, n_pad), jnp.float32)],
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=C * (2 * R * n_pad * n_pad + 2 * E),
+            bytes_accessed=(3 * C * E + n_pad * n_pad) * 4,
+            transcendentals=0,
+        ),
+    )(
+        values,
+        jnp.asarray(local_cols, jnp.int32),
+        jnp.asarray(seg_ids, jnp.int32),
+    )
+    return G[:n_hat, :n_hat]
 
 
 def _kernel(vals_ref, cols_ref, segs_ref, out_ref, b_ref, *, n_hat: int,
@@ -69,8 +162,10 @@ def csr_gram_pallas(
     *,
     interpret: bool = False,
 ):
-    """Chunk Gram ``G[a, b] = sum_r B[r, a] B[r, b]`` where ``B`` is the
-    (n_rows, n_hat) densification of the chunk on the support.
+    """Single-chunk Gram ``G[a, b] = sum_r B[r, a] B[r, b]`` where ``B`` is
+    the (n_rows, n_hat) densification of the chunk on the support — the
+    large-``n_hat`` fallback of the megabatch scheme (its tiled output
+    never holds the full Gram in VMEM).
 
     ``seg_ids`` must be chunk-local rows in [0, n_rows); ``local_cols``
     entries >= n_hat are dropped (off-support sentinel).  Returns

@@ -3,19 +3,29 @@
 The variance screen (Thm 2.1) over an out-of-core corpus must never
 densify: a >99%-sparse (m, n) matrix read as dense blocks wastes 100x the
 HBM bandwidth on zeros.  This kernel consumes the store's fixed-shape
-``(chunk_nnz,)`` entry chunks directly and scatter-accumulates into
-per-column ``(sum, sumsq)`` living in VMEM — one pass, O(nnz) work.
+``(chunk_nnz,)`` entry chunks directly and accumulates per-column
+``(sum, sumsq)`` living in VMEM — one pass, O(nnz) work.
 
-Layout: the accumulators are shaped ``(n_pad/128, 128)`` so column ``c``
-maps to sublane-row ``c // 128``, lane ``c % 128``.  The scatter is a
-per-entry loop: a dynamic-sublane read-modify-write of one 128-lane row
-with a one-hot lane mask (TPU has no vector scatter; a dynamic sublane
-slice + VPU select is the native primitive).  Per entry that is one
-128-lane VPU op — nnz-proportional, vs the dense kernel's m*n.
+Vectorized scatter (PR 5): the accumulators are shaped ``(n_pad/128, 128)``
+so column ``c`` maps to sublane-row ``c // 128``, lane ``c % 128``.  The
+original kernel scattered one entry per step — a dynamic-sublane
+read-modify-write with a one-hot lane mask, nnz *sequential* VPU ops.  The
+rewrite processes entries in ``(8, 128)``-tiled blocks and turns the
+scatter into a one-hot contraction the MXU executes: for each 128-entry
+lane row, ``M[s, p] = v_p * [c_p // 128 == s]`` (a broadcast compare
+against a sublane iota — no transpose needed) and
+``L[l, p] = [c_p %% 128 == l]``, so
 
-Grid: (chunk_nnz / block_e,) sequential, entries streamed through VMEM in
-``(1, block_e)`` tiles; both accumulators stay resident across steps.
-Padded slots (value 0, col 0) add zero and need no masking.
+    acc[s, l] += sum_p M[s, p] * L[l, p]      (one dot_general, MXU)
+
+deposits all 128 entries at once.  sum and sumsq share one matmul by
+stacking their M blocks.  Padded slots (value 0, col 0) land on
+accumulator (0, 0) with value 0 — additively harmless, no masking.
+
+Batch dimension (PR 5): the grid is ``(C, E_pad/block_e)`` over a
+megabatch of C chunks, both accumulators VMEM-resident across the WHOLE
+batch — one ``pallas_call`` per megabatch instead of one per chunk,
+mirroring the batched-solve launch economics of the BCD kernels.
 """
 from __future__ import annotations
 
@@ -25,27 +35,44 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Entry tile geometry: lane rows of 128 entries, ``_TILE_ROWS`` rows per
+# grid step (the (8, 128) VPU-native tile).
+_TILE_ROWS = 8
 
-def _kernel(vals_ref, cols_ref, sum_ref, sumsq_ref, *, block_e: int):
-    e = pl.program_id(0)
 
-    @pl.when(e == 0)
+def _kernel(vals_ref, cols_ref, sum_ref, sumsq_ref, *, tile_rows: int):
+    c = pl.program_id(0)
+    e = pl.program_id(1)
+
+    @pl.when((c == 0) & (e == 0))
     def _init():
         sum_ref[...] = jnp.zeros_like(sum_ref)
         sumsq_ref[...] = jnp.zeros_like(sumsq_ref)
 
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
+    S = sum_ref.shape[0]
+    v = vals_ref[0].astype(jnp.float32)        # (tile_rows, 128)
+    col = cols_ref[0]                          # (tile_rows, 128) int32
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (S, 128), 0)
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (128, 128), 0)
 
-    def body(i, _):
-        v = vals_ref[0, i].astype(jnp.float32)
-        c = cols_ref[0, i]
-        row = c // 128
-        oh = (lanes == c % 128).astype(jnp.float32)
-        sum_ref[pl.ds(row, 1), :] += v * oh
-        sumsq_ref[pl.ds(row, 1), :] += (v * v) * oh
+    def body(a, _):
+        va = jax.lax.dynamic_slice(v, (a, 0), (1, 128))      # (1, 128)
+        ca = jax.lax.dynamic_slice(col, (a, 0), (1, 128))
+        ohr = row_iota == ca // 128                          # (S, 128)
+        m = jnp.concatenate(
+            [jnp.where(ohr, va, 0.0), jnp.where(ohr, va * va, 0.0)], axis=0
+        )                                                    # (2S, 128)
+        ohl = (lane_iota == ca % 128).astype(jnp.float32)    # (128, 128)
+        d = jax.lax.dot_general(
+            m, ohl,
+            dimension_numbers=(((1,), (1,)), ((), ())),      # contract p
+            preferred_element_type=jnp.float32,
+        )                                                    # (2S, 128)
+        sum_ref[...] += d[:S]
+        sumsq_ref[...] += d[S:]
         return 0
 
-    jax.lax.fori_loop(0, block_e, body, 0)
+    jax.lax.fori_loop(0, tile_rows, body, 0)
 
 
 def csr_column_stats_pallas(
@@ -56,43 +83,59 @@ def csr_column_stats_pallas(
     block_e: int = 4096,
     interpret: bool = False,
 ):
-    """Returns ``(col_sum, col_sumsq)`` of shape (n,) in f32 from flat CSR
-    entry arrays.  ``col_ids`` must be in [0, n); padded slots must carry
-    value 0 (their column is then irrelevant)."""
-    (E,) = values.shape
-    assert col_ids.shape == (E,)
-    block_e = min(block_e, max(128, E))
-    pe = (-E) % block_e
+    """Returns ``(col_sum, col_sumsq)`` of shape (n,) in f32 from CSR entry
+    arrays.  ``values``/``col_ids`` are either flat ``(E,)`` (one chunk) or
+    ``(C, E)`` (a megabatch of C chunks, reduced in ONE launch).
+    ``col_ids`` must be in [0, n); padded slots must carry value 0 (their
+    column is then irrelevant — see `ops.csr_column_stats` for the
+    enforced contract).  ``block_e`` is the per-grid-step entry count; it
+    is clamped to the (padded) entry count so a chunk smaller than one
+    block never inflates the launch shape.
+    """
+    if values.ndim == 1:
+        values = values.reshape(1, -1)
+        col_ids = col_ids.reshape(1, -1)
+    C, E = values.shape
+    assert col_ids.shape == (C, E)
+    # Entries tile as (rows, 128) lanes; rows group into tile_rows blocks.
+    pe = (-E) % 128
     if pe:
-        values = jnp.pad(values, (0, pe))
-        col_ids = jnp.pad(col_ids, (0, pe))
-    Ep = E + pe
+        values = jnp.pad(values, ((0, 0), (0, pe)))
+        col_ids = jnp.pad(col_ids, ((0, 0), (0, pe)))
+    rows = (E + pe) // 128
+    tile_rows = max(1, min(_TILE_ROWS, block_e // 128, rows))
+    pr = (-rows) % tile_rows
+    rows_p = rows + pr
+    values = values.reshape(C, rows, 128)
+    col_ids = jnp.asarray(col_ids, jnp.int32).reshape(C, rows, 128)
+    if pr:
+        values = jnp.pad(values, ((0, 0), (0, pr), (0, 0)))
+        col_ids = jnp.pad(col_ids, ((0, 0), (0, pr), (0, 0)))
     n_pad = ((n + 127) // 128) * 128
     S = n_pad // 128
     out_shape = [
         jax.ShapeDtypeStruct((S, 128), jnp.float32),
         jax.ShapeDtypeStruct((S, 128), jnp.float32),
     ]
+    Ep = C * rows_p * 128
     s, ss = pl.pallas_call(
-        functools.partial(_kernel, block_e=block_e),
-        grid=(Ep // block_e,),
+        functools.partial(_kernel, tile_rows=tile_rows),
+        grid=(C, rows_p // tile_rows),
         in_specs=[
-            pl.BlockSpec((1, block_e), lambda e: (0, e)),
-            pl.BlockSpec((1, block_e), lambda e: (0, e)),
+            pl.BlockSpec((1, tile_rows, 128), lambda c, e: (c, e, 0)),
+            pl.BlockSpec((1, tile_rows, 128), lambda c, e: (c, e, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((S, 128), lambda e: (0, 0)),
-            pl.BlockSpec((S, 128), lambda e: (0, 0)),
+            pl.BlockSpec((S, 128), lambda c, e: (0, 0)),
+            pl.BlockSpec((S, 128), lambda c, e: (0, 0)),
         ],
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
-            flops=3 * Ep,
+            # one (2S, 128) x (128, 128) MXU contraction per 128 entries
+            flops=2 * 2 * S * 128 * Ep // 128,
             bytes_accessed=(2 * Ep + 2 * n_pad) * 4,
             transcendentals=0,
         ),
-    )(
-        values.reshape(1, Ep),
-        jnp.asarray(col_ids, jnp.int32).reshape(1, Ep),
-    )
+    )(values, col_ids)
     return s.reshape(n_pad)[:n], ss.reshape(n_pad)[:n]

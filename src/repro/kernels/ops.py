@@ -5,13 +5,20 @@ interpret mode executes the kernel body in Python for correctness) and the
 compiled path on TPU.  The ``impl`` argument forces a path for testing:
   'pallas'  — the kernel (interpret off-TPU)
   'ref'     — the pure-jnp oracle
-  'auto'    — kernel on TPU, oracle elsewhere (oracle is faster than
-              interpret mode on CPU; semantics are identical and tested)
+  'host'    — (CSR ops only) numpy bincount / scipy spgemm on the host:
+              XLA's CPU scatter lowers to a sequential loop ~100x slower
+              than a fused bincount, so this is the off-TPU production
+              backend for the ingest reductions
+  'auto'    — kernel on TPU; off it the host path when the inputs are
+              concrete host arrays (the streaming-ingest case), else the
+              oracle (faster than interpret mode on CPU; all three are
+              parity-tested against each other)
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import functools
 
@@ -20,7 +27,7 @@ from dataclasses import dataclass
 from . import ref
 from .bcd_fused import bcd_solve_batched_pallas, bcd_solve_pallas
 from .bcd_sweep import qp_sweep_pallas
-from .csr_gram import csr_gram_pallas
+from .csr_gram import batched_gram_fits, csr_gram_batched_pallas, csr_gram_pallas
 from .csr_stats import csr_column_stats_pallas
 from .gram import gram_pallas
 from .project import sparse_project_pallas
@@ -132,36 +139,203 @@ def gram(A, *, impl: str = "auto", block_i: int = 128, block_j: int = 128,
     )
 
 
+try:                                     # scipy ships with jax; the spgemm
+    import scipy.sparse as _scipy_sparse  # fast path degrades gracefully
+except ImportError:                      # pragma: no cover - image has scipy
+    _scipy_sparse = None
+
+
+def _host_path(impl: str, *arrays) -> bool:
+    """Whether the host (numpy) backend serves this call: forced by
+    ``impl='host'``, or picked by ``'auto'`` off-TPU when every input is a
+    concrete host array (a tracer can't leave jit; a device array would
+    pay a transfer)."""
+    if impl == "host":
+        return True
+    return (
+        impl == "auto" and not _on_tpu()
+        and all(isinstance(a, np.ndarray) for a in arrays)
+    )
+
+
+def _csr_column_stats_host(values, col_ids, n: int):
+    """Host backend of the CSR screen reduction: two fused f64 bincounts —
+    O(nnz + n), no XLA scatter (which lowers to a ~100x slower sequential
+    loop on CPU).  Columns >= n are dropped like the oracle's scatter."""
+    v = np.asarray(values, np.float64).reshape(-1)
+    c = np.asarray(col_ids, np.int64).reshape(-1)
+    s = np.bincount(c, weights=v, minlength=n)[:n]
+    ss = np.bincount(c, weights=v * v, minlength=n)[:n]
+    return s.astype(np.float32), ss.astype(np.float32)
+
+
+def _csr_gram_host(values, local_cols, seg_ids, n_rows: int, n_hat: int):
+    """Host backend of the gather-Gram: only the on-support entries (a
+    tiny fraction of the chunk after elimination) enter a sparse
+    ``B^T B`` (scipy spgemm when available, bincount-densify + BLAS
+    otherwise) — never an XLA scatter."""
+    C = values.shape[0] if values.ndim == 2 else 1
+    rows = (
+        np.asarray(seg_ids, np.int64).reshape(C, -1)
+        + n_rows * np.arange(C, dtype=np.int64)[:, None]
+    ).reshape(-1)
+    cols = np.asarray(local_cols, np.int64).reshape(-1)
+    keep = cols < n_hat                      # off-support sentinel drop
+    v = np.asarray(values, np.float64).reshape(-1)[keep]
+    r = rows[keep]
+    c = cols[keep]
+    if _scipy_sparse is not None:
+        B = _scipy_sparse.coo_matrix(
+            (v, (r, c)), shape=(C * n_rows, n_hat)
+        ).tocsr()
+        return np.asarray((B.T @ B).toarray(), np.float32)
+    Bd = np.bincount(
+        r * n_hat + c, weights=v, minlength=C * n_rows * n_hat
+    ).reshape(C * n_rows, n_hat).astype(np.float32)
+    return Bd.T @ Bd
+
+
+def _sync_host_inputs(*arrays):
+    """Convert concrete host arrays bound for a jit path into device
+    buffers, BLOCKING until the copies land.  Callers like the megabatch
+    ring reuse their host buffers as soon as the wrapper returns; async
+    dispatch makes no promise about when a raw numpy argument is read,
+    and ``jnp.asarray`` may alias host memory on CPU — hence the
+    explicit ``copy=True`` plus the block."""
+    if not any(isinstance(a, np.ndarray) for a in arrays):
+        return arrays
+    out = tuple(jnp.array(a, copy=True) for a in arrays)
+    jax.block_until_ready(out)
+    return out
+
+
+def _assert_csr_padding(values, nnz) -> None:
+    """Enforce the store's chunk padding contract on concrete host arrays:
+    slots at or past ``nnz`` must carry value 0 (their col/seg ids are then
+    additively harmless for every CSR kernel).  ``nnz`` is a scalar for a
+    single chunk or a (C,) vector for a megabatch; tracers (inside jit)
+    and ``nnz=None`` skip the check."""
+    if nnz is None or not isinstance(values, np.ndarray):
+        return
+    v = values if values.ndim == 2 else values[None, :]
+    k = np.asarray(nnz, np.int64).reshape(-1, 1)
+    lane = np.arange(v.shape[1], dtype=np.int64)[None, :]
+    if np.any((lane >= k) & (v != 0)):
+        raise ValueError(
+            "CSR chunk padding contract violated: slots past nnz must "
+            "carry value 0 (see sparse.store.CSRChunk)"
+        )
+
+
 @functools.partial(
     jax.jit, static_argnames=("n", "impl", "block_e")
 )
-def csr_column_stats(values, col_ids, *, n: int, impl: str = "auto",
-                     block_e: int = 4096):
-    """(col_sum, col_sumsq) in f32 from flat CSR entries — the sparse leg
-    of the Thm 2.1 screen.  Chunks from the store have a fixed shape, so
-    this traces once per (chunk_nnz, n) and never recompiles."""
+def _csr_column_stats_jit(values, col_ids, *, n: int, impl: str,
+                          block_e: int):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        if values.ndim == 2:
+            return ref.csr_column_stats_batched_ref(values, col_ids, n)
         return ref.csr_column_stats_ref(values, col_ids, n)
     return csr_column_stats_pallas(
         values, col_ids, n, block_e=block_e, interpret=not _on_tpu()
     )
 
 
+def csr_column_stats(values, col_ids, *, n: int, impl: str = "auto",
+                     block_e: int = 4096, nnz=None):
+    """(col_sum, col_sumsq) in f32 from CSR entries — the sparse leg of the
+    Thm 2.1 screen.  ``values``/``col_ids`` are flat ``(E,)`` for one chunk
+    or ``(C, E)`` for a megabatch of C chunks reduced in ONE dispatch (one
+    `pallas_call` on TPU, one XLA scatter off it).  Chunks from the store
+    have a fixed shape, so this traces once per (C, chunk_nnz, n) and
+    never recompiles.  ``nnz`` (scalar or (C,)), when given with concrete
+    host arrays, asserts the ``value 0`` padding contract."""
+    _assert_csr_padding(values, nnz)
+    if _host_path(impl, values, col_ids):
+        return _csr_column_stats_host(values, col_ids, n)
+    values, col_ids = _sync_host_inputs(values, col_ids)
+    return _csr_column_stats_jit(values, col_ids, n=n, impl=impl,
+                                 block_e=block_e)
+
+
+# back-compat: tests introspect the jit cache through the public name
+csr_column_stats._cache_size = _csr_column_stats_jit._cache_size
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_rows", "n_hat", "impl")
 )
-def csr_gram(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
-             impl: str = "auto"):
-    """Chunk gather-Gram G = B^T B on the post-elimination support.
-
-    ``local_cols`` are support positions with >= n_hat meaning "drop"
-    (entry not on the support); ``seg_ids`` are chunk-local rows.  Fixed
-    chunk shapes keep this a single trace per (chunk_nnz, n_hat)."""
+def _csr_gram_jit(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
+                  impl: str):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.csr_gram_ref(values, local_cols, seg_ids, n_rows, n_hat)
     return csr_gram_pallas(
         values, local_cols, seg_ids, n_rows, n_hat, interpret=not _on_tpu()
     )
+
+
+def csr_gram(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
+             impl: str = "auto", nnz=None):
+    """Chunk gather-Gram G = B^T B on the post-elimination support.
+
+    ``local_cols`` are support positions with >= n_hat meaning "drop"
+    (entry not on the support); ``seg_ids`` are chunk-local rows.  Fixed
+    chunk shapes keep this a single trace per (chunk_nnz, n_hat)."""
+    _assert_csr_padding(values, nnz)
+    if _host_path(impl, values, local_cols, seg_ids):
+        return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
+    values, local_cols, seg_ids = _sync_host_inputs(
+        values, local_cols, seg_ids
+    )
+    return _csr_gram_jit(values, local_cols, seg_ids, n_rows=n_rows,
+                         n_hat=n_hat, impl=impl)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "n_hat", "impl")
+)
+def _csr_gram_batched_jit(values, local_cols, seg_ids, *, n_rows: int,
+                          n_hat: int, impl: str):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.csr_gram_batched_ref(
+            values, local_cols, seg_ids, n_rows, n_hat
+        )
+    C, E = values.shape
+    if batched_gram_fits(n_hat, n_rows, E):
+        return csr_gram_batched_pallas(
+            values, local_cols, seg_ids, n_rows, n_hat,
+            interpret=not _on_tpu(),
+        )
+    # Resident-G state too big: fall back to the tiled single-chunk kernel,
+    # one launch per chunk (the pre-megabatch economics, correct at any
+    # n_hat <= max_reduced).
+    G = csr_gram_pallas(
+        values[0], local_cols[0], seg_ids[0], n_rows, n_hat,
+        interpret=not _on_tpu(),
+    )
+    for c in range(1, C):
+        G = G + csr_gram_pallas(
+            values[c], local_cols[c], seg_ids[c], n_rows, n_hat,
+            interpret=not _on_tpu(),
+        )
+    return G
+
+
+def csr_gram_batched(values, local_cols, seg_ids, *, n_rows: int,
+                     n_hat: int, impl: str = "auto", nnz=None):
+    """Megabatch gather-Gram: C chunks' ``sum_c B_c^T B_c`` in ONE dispatch
+    (grid=(C,) `pallas_call` with the Gram accumulator VMEM-resident across
+    the batch on TPU, one stacked spgemm off it).  Inputs are (C, E);
+    ``nnz`` (C,), when given with concrete host arrays, asserts the
+    ``value 0`` padding contract."""
+    _assert_csr_padding(values, nnz)
+    if _host_path(impl, values, local_cols, seg_ids):
+        return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
+    values, local_cols, seg_ids = _sync_host_inputs(
+        values, local_cols, seg_ids
+    )
+    return _csr_gram_batched_jit(values, local_cols, seg_ids, n_rows=n_rows,
+                                 n_hat=n_hat, impl=impl)
 
 
 def _resolve_scheme(scheme: str, n: int, itemsize: int, batch: int):

@@ -39,6 +39,29 @@ def csr_column_stats_ref(values, col_ids, n: int):
     return s, ss
 
 
+def csr_column_stats_batched_ref(values, col_ids, n: int):
+    """Megabatch oracle: the (C, E) entry arrays of C chunks reduced in ONE
+    segmented scatter (== the sum of per-chunk `csr_column_stats_ref`)."""
+    return csr_column_stats_ref(values.reshape(-1), col_ids.reshape(-1), n)
+
+
+def csr_gram_batched_ref(values, local_cols, seg_ids, n_rows: int, n_hat: int):
+    """Megabatch gather-Gram oracle: densify all C chunks into one stacked
+    (C * n_rows, n_hat) matrix (chunk c's rows live at ``c * n_rows + seg``,
+    so chunks never mix rows) and contract once:
+    ``G = B^T B = sum_c B_c^T B_c``.  Off-support sentinels
+    (col >= n_hat) are dropped, matching the kernel."""
+    C, E = values.shape
+    rows = (
+        jnp.asarray(seg_ids, jnp.int32)
+        + n_rows * jnp.arange(C, dtype=jnp.int32)[:, None]
+    ).reshape(-1)
+    B = jnp.zeros((C * n_rows, n_hat), jnp.float32).at[
+        rows, jnp.asarray(local_cols, jnp.int32).reshape(-1)
+    ].add(values.reshape(-1).astype(jnp.float32), mode="drop")
+    return B.T @ B
+
+
 def csr_gram_ref(values, local_cols, seg_ids, n_rows: int, n_hat: int):
     """Chunk gather-Gram oracle: densify the chunk's entries onto the
     support — ``B[seg, col] += v`` with off-support sentinels

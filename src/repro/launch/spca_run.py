@@ -6,9 +6,13 @@ screen -> safe elimination -> reduced gram -> BCD -> topic tables.
 
 With ``--streaming`` the corpus is first written to a sharded CSR store on
 disk (``--store-dir``, default a temp dir) and the whole fit runs
-out-of-core from the store through the CSR Pallas kernels
-(``repro.sparse``): two streaming passes per component, never an (m, n)
-dense array — the paper's "cannot even load them into memory" regime.
+out-of-core from the store through the CSR kernels (``repro.sparse``):
+prefetched megabatch chunk passes, 1 + 1 passes for ALL components
+(screen + one union-support Gram shared across the deflation rounds via
+the covariance cache), never an (m, n) dense array — the paper's "cannot
+even load them into memory" regime.  The per-component lines and the
+final total report the solve-launch AND corpus-pass/ingest-launch
+economics.
 
 With --mesh NxM (and XLA_FLAGS device count) the variance/gram passes run
 as shard_map collectives over the data axes (core/distributed.py) — the
@@ -32,7 +36,7 @@ import time
 import numpy as np
 
 from repro.configs.spca_experiments import NYTIMES, PUBMED
-from repro.core import SPCAConfig, search_lambda
+from repro.core import SPCAConfig, fit_components
 from repro.data.corpus import NYTIMES_TOPICS, PUBMED_TOPICS, make_corpus
 
 
@@ -50,6 +54,8 @@ def main():
                     help="where to write the CSR store (default: temp dir)")
     ap.add_argument("--chunk-nnz", type=int, default=16_384)
     ap.add_argument("--chunk-rows", type=int, default=512)
+    ap.add_argument("--megabatch", type=int, default=8,
+                    help="chunks per ingest launch (grid=(C,) batch)")
     ap.add_argument("--batch-evals", type=int, default=0,
                     help=">1: run each lambda-search round as ONE batched "
                          "solve launch of this many evaluations")
@@ -67,8 +73,10 @@ def main():
 
     cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8,
                      chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows,
+                     megabatch_chunks=args.megabatch,
                      batch_evals=args.batch_evals)
 
+    ingest: dict = {}
     if args.streaming:
         from repro.sparse import write_corpus
         from repro.sparse.engine import sparse_stats
@@ -82,10 +90,13 @@ def main():
         t0 = time.time()
         var, build = sparse_stats(
             store, chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
-            impl=cfg.csr_impl,
+            megabatch=cfg.megabatch_chunks,
+            prefetch_depth=cfg.ingest_prefetch,
+            impl=cfg.csr_impl, counters=ingest,
         )
         print(f"  out-of-core variance screen: {time.time() - t0:.1f}s "
-              f"(one pass over {store.nnz} nnz)")
+              f"(one pass over {store.nnz} nnz, "
+              f"{ingest.get('screen_launches', 0)} megabatch launch(es))")
     else:
         mean, var = corpus.column_stats_exact()
 
@@ -96,24 +107,35 @@ def main():
             A = A - A.mean(0, keepdims=True)
             return jnp.asarray((A.T @ A) / corpus.n_docs)
 
-    mask = np.ones(n_words, bool)
-    total_launches = 0
-    for c in range(args.components):
-        t0 = time.time()
-        diag = {}
-        r = search_lambda(None, args.target_card, cfg=cfg,
-                          active_mask=mask, stats=(np.asarray(var), build),
-                          diagnostics=diag)
-        total_launches += diag["solve_launches"]
+    # The driver owns the cross-component pass economics (PR 5): ONE
+    # eager Gram build on the union support serves every deflated search
+    # via principal-submatrix slices — with --streaming that is ONE more
+    # corpus pass for ALL components instead of one per component.
+    t0 = time.time()
+    diag: dict = {}
+    results = fit_components(
+        None, args.components, target_card=args.target_card, cfg=cfg,
+        stats=(np.asarray(var), build), diagnostics=diag,
+    )
+    fit_s = time.time() - t0
+    for c, (r, d) in enumerate(zip(results, diag["components"])):
         words = [corpus.vocab[i] for i in r.support]
         print(f"PC{c + 1}: card={r.cardinality} n_hat={r.reduced_n} "
               f"lam={r.lam:.3f} var={r.variance:.2f} gap={r.gap:.1e} "
-              f"launches={diag['solve_launches']} evals={diag['evals']} "
-              f"({time.time() - t0:.1f}s)")
+              f"launches={d['solve_launches']} evals={d['evals']} "
+              f"cov_builds={d['cov_builds']}")
         print("   " + ", ".join(words))
-        mask[r.support] = False
-    print(f"total: {total_launches} solve launch(es) across "
-          f"{args.components} components")
+    print(f"total: {diag['solve_launches']} solve launch(es) across "
+          f"{args.components} components in {fit_s:.1f}s; gram builds: "
+          f"{diag['cov_builds']}")
+    if args.streaming:
+        passes = ingest.get("screen_passes", 0) + ingest.get("gram_passes", 0)
+        print(f"corpus passes: {passes} "
+              f"(screen={ingest.get('screen_passes', 0)} "
+              f"gram={ingest.get('gram_passes', 0)}; old scheme: "
+              f"{1 + args.components}), ingest launches: "
+              f"{ingest.get('screen_launches', 0) + ingest.get('gram_launches', 0)} "
+              f"over {ingest.get('chunks', 0)} chunk(s)")
 
 
 if __name__ == "__main__":

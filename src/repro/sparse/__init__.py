@@ -15,12 +15,13 @@ from .engine import (
     sparse_stats,
 )
 from .store import (
-    CSRChunk, CSRStoreWriter, DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS,
-    SparseCorpus, write_corpus,
+    CSRChunk, CSRMegaBatch, CSRStoreWriter, DEFAULT_CHUNK_NNZ,
+    DEFAULT_CHUNK_ROWS, SparseCorpus, write_corpus,
 )
 
 __all__ = [
-    "CSRChunk", "CSRStoreWriter", "DEFAULT_CHUNK_NNZ", "DEFAULT_CHUNK_ROWS",
-    "SparseCorpus", "write_corpus", "screen_and_gram_sparse",
-    "sparse_feature_variances", "sparse_reduced_covariance", "sparse_stats",
+    "CSRChunk", "CSRMegaBatch", "CSRStoreWriter", "DEFAULT_CHUNK_NNZ",
+    "DEFAULT_CHUNK_ROWS", "SparseCorpus", "write_corpus",
+    "screen_and_gram_sparse", "sparse_feature_variances",
+    "sparse_reduced_covariance", "sparse_stats",
 ]

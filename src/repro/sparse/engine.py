@@ -11,11 +11,25 @@ Mirrors the dense streaming pipeline (`data/bow.py`) chunk-for-batch:
           support through the csr_gram kernel, O(nnz_S + n_hat^2) per
           chunk, never materialising an (m, n) dense array.
 
+Pass pipelining (PR 5): each pass drains the store's *megabatch* iterator
+(C chunks packed into reusable (C, chunk_nnz) host buffers off the cached
+chunk plan) through `data.pipeline.prefetch`, so mmap read + pad of batch
+i+1 overlaps device compute on batch i — the producer/consumer idiom the
+serve microbatcher uses, with the same worker-exception propagation and
+deterministic chunk order (single reader thread, FIFO queue).  Each
+megabatch is ONE kernel dispatch (`update_csr_batch`), so a pass costs
+ceil(chunks / C) launches instead of `chunks`.
+
+``counters`` (a plain dict) tallies the pass economics the driver surfaces
+via `fit_components(diagnostics=...)`: ``screen_passes`` / ``gram_passes``
+(corpus passes), ``screen_launches`` / ``gram_launches`` (ingest
+dispatches), and ``chunks`` streamed.
+
 `sparse_stats` packages the two passes as the ``(variances, build)`` pair
-`core.spca._as_stats` hands to the lambda search, so `fit_components`
-runs end-to-end from a store handle: the `ReducedCovarianceCache` already
-guarantees ONE `build` per search, i.e. exactly two passes over the
-corpus per component.
+`core.spca._as_stats` hands to the lambda search; the driver's
+cross-component covariance cache calls ``build`` ONCE per fit in the
+common case — 1 + 1 corpus passes for K components (see
+`core.spca.fit_components`).
 """
 from __future__ import annotations
 
@@ -24,8 +38,36 @@ import numpy as np
 
 from repro.core.elimination import Screen, combine_screens, select_support
 from repro.data.bow import StreamingGram, StreamingStats
+from repro.data.pipeline import prefetch
 
 from .store import DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS, SparseCorpus
+
+DEFAULT_MEGABATCH = 8
+DEFAULT_PREFETCH = 2
+
+
+def _bump(counters: dict | None, **deltas) -> None:
+    if counters is None:
+        return
+    for k, d in deltas.items():
+        counters[k] = counters.get(k, 0) + d
+
+
+def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
+           prefetch_depth, host_id, num_hosts, counters, launch_key):
+    """One streaming pass of ``acc`` over this host's shard slice: packed
+    megabatches, prefetched one batch ahead, one dispatch per batch."""
+    it = store.iter_megabatches(
+        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
+        host_id=host_id, num_hosts=num_hosts,
+        ring=max(2, prefetch_depth + 2),
+    )
+    if prefetch_depth > 0:
+        it = prefetch(it, size=prefetch_depth)
+    for mb in it:
+        acc.update_csr_batch(mb)
+        _bump(counters, **{launch_key: 1, "chunks": mb.n_chunks})
+    return acc
 
 
 def sparse_feature_variances(
@@ -35,7 +77,10 @@ def sparse_feature_variances(
     impl: str = "auto",
     chunk_nnz: int = DEFAULT_CHUNK_NNZ,
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    megabatch: int = DEFAULT_MEGABATCH,
+    prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
+    counters: dict | None = None,
 ) -> Screen:
     """One streaming pass: the Thm 2.1 screen input from CSR chunks.
 
@@ -47,12 +92,14 @@ def sparse_feature_variances(
     partials = []
     for h in range(num_hosts):
         acc = StreamingStats(store.n_cols, impl=impl)
-        for chunk in store.iter_chunks(
-            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-            host_id=h, num_hosts=num_hosts,
-        ):
-            acc.update_csr(chunk)
+        _drain(
+            store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+            megabatch=megabatch, prefetch_depth=prefetch_depth,
+            host_id=h, num_hosts=num_hosts, counters=counters,
+            launch_key="screen_launches",
+        )
         partials.append(acc.finalize(center=center))
+    _bump(counters, screen_passes=1)
     if len(partials) == 1:
         return partials[0]
     return combine_screens(partials)
@@ -66,20 +113,27 @@ def sparse_reduced_covariance(
     impl: str = "auto",
     chunk_nnz: int = DEFAULT_CHUNK_NNZ,
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    megabatch: int = DEFAULT_MEGABATCH,
+    prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
+    counters: dict | None = None,
 ):
     """One streaming pass: Sigma_hat = A_S^T A_S / m (centred when
-    ``means`` is given) on the surviving columns, straight from chunks."""
+    ``means`` is given) on the surviving columns, straight from chunks.
+    The partial accumulators pool DEVICE-side (`StreamingGram.merge` is a
+    jnp add) — one host transfer at finalize."""
     support = np.asarray(support)
     accs = []
     for h in range(num_hosts):
         acc = StreamingGram(support, impl=impl, chunk_rows=chunk_rows)
-        for chunk in store.iter_chunks(
-            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-            host_id=h, num_hosts=num_hosts,
-        ):
-            acc.update_csr(chunk)
+        _drain(
+            store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+            megabatch=megabatch, prefetch_depth=prefetch_depth,
+            host_id=h, num_hosts=num_hosts, counters=counters,
+            launch_key="gram_launches",
+        )
         accs.append(acc)
+    _bump(counters, gram_passes=1)
     acc = accs[0]
     for other in accs[1:]:
         acc.merge(other)
@@ -93,15 +147,20 @@ def sparse_stats(
     impl: str = "auto",
     chunk_nnz: int = DEFAULT_CHUNK_NNZ,
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    megabatch: int = DEFAULT_MEGABATCH,
+    prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
+    counters: dict | None = None,
 ):
     """The ``(variances, build)`` pair `core.spca` drives the lambda
     search with, computed out-of-core.  ``build(support)`` is one more
-    streaming pass; the driver's covariance cache calls it once per
-    search."""
+    streaming pass; the driver's covariance cache calls it ONCE per fit
+    (cross-component slicing), so a K-component fit costs 1 + 1 passes."""
     screen = sparse_feature_variances(
         store, center=center, impl=impl,
-        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, num_hosts=num_hosts,
+        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
+        prefetch_depth=prefetch_depth, num_hosts=num_hosts,
+        counters=counters,
     )
     means = np.asarray(screen.means) if center else None
 
@@ -109,7 +168,8 @@ def sparse_stats(
         return sparse_reduced_covariance(
             store, np.asarray(support), means=means,
             impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-            num_hosts=num_hosts,
+            megabatch=megabatch, prefetch_depth=prefetch_depth,
+            num_hosts=num_hosts, counters=counters,
         )
 
     return np.asarray(screen.variances), build
@@ -124,20 +184,26 @@ def screen_and_gram_sparse(
     max_reduced: int = 2048,
     chunk_nnz: int = DEFAULT_CHUNK_NNZ,
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    megabatch: int = DEFAULT_MEGABATCH,
+    prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
+    counters: dict | None = None,
 ):
     """Two-pass out-of-core pipeline at a fixed lambda — the sparse twin
     of `data.bow.screen_and_gram_streaming`.  Returns
     (Sigma_hat, support, screen)."""
     screen = sparse_feature_variances(
         store, center=center, impl=impl,
-        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, num_hosts=num_hosts,
+        chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
+        prefetch_depth=prefetch_depth, num_hosts=num_hosts,
+        counters=counters,
     )
     support = select_support(screen.variances, lam, max_reduced)
     Sigma_hat = sparse_reduced_covariance(
         store, support,
         means=np.asarray(screen.means) if center else None,
         impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-        num_hosts=num_hosts,
+        megabatch=megabatch, prefetch_depth=prefetch_depth,
+        num_hosts=num_hosts, counters=counters,
     )
     return Sigma_hat, support, screen

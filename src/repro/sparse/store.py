@@ -60,6 +60,84 @@ class CSRChunk(NamedTuple):
     nnz: int              # real entries (<= chunk_nnz)
 
 
+class CSRMegaBatch(NamedTuple):
+    """A fixed-shape batch of C chunks — what ONE ingest kernel launch
+    consumes (`ops.csr_column_stats` / `ops.csr_gram_batched`).
+
+    All entry arrays are (C, chunk_nnz); slot ``i`` obeys the `CSRChunk`
+    padding contract independently (slots past ``nnz[i]`` are value 0,
+    col 0, seg 0).  A ragged final batch pads with empty slots
+    (``n_rows == nnz == 0`` — additively harmless everywhere), so the
+    shape — and therefore the jit trace — never changes.
+
+    When produced by ``iter_megabatches(reuse_buffers=True)`` the arrays
+    are views into a rotating buffer ring: they are valid until ``ring``
+    more batches have been drawn from the same iterator (sized so a
+    depth-2 prefetch queue plus the in-flight producer/consumer items
+    never alias).  The `repro.kernels.ops` CSR wrappers either reduce
+    host arrays synchronously (host backend) or block on the
+    host-to-device copy before dispatching (`_sync_host_inputs`), so a
+    consumer that hands a batch straight to them is done with the buffer
+    when the call returns.
+    """
+
+    values: np.ndarray     # (C, chunk_nnz) float32
+    col_ids: np.ndarray    # (C, chunk_nnz) int32, global column ids
+    seg_ids: np.ndarray    # (C, chunk_nnz) int32, chunk-local row ids
+    row_offset: np.ndarray  # (C,) int64 global row of each slot (0 if unused)
+    n_rows: np.ndarray     # (C,) int32 real rows per slot (0 = unused slot)
+    nnz: np.ndarray        # (C,) int64 real entries per slot
+    n_chunks: int          # real chunks packed (<= C)
+
+
+def _fill_slot(values, col_ids, seg_ids, vals, cols, row_ptr, r, stop):
+    """Copy whole rows [r, stop) of one shard into a padded chunk slot
+    (1-D views), upholding the padding contract: slots past nnz carry
+    value 0, col 0, seg 0.  The ONE fill routine both `iter_chunks` and
+    `iter_megabatches` use, so the two paths cannot drift on the
+    contract.  Returns ``(n_rows, nnz)``."""
+    lo, hi = int(row_ptr[r]), int(row_ptr[stop])
+    k = hi - lo
+    values[:k] = vals[lo:hi]
+    col_ids[:k] = cols[lo:hi]
+    seg_ids[:k] = np.repeat(
+        np.arange(stop - r, dtype=np.int32),
+        np.diff(row_ptr[r : stop + 1]).astype(np.int64),
+    )
+    values[k:] = 0.0
+    col_ids[k:] = 0
+    seg_ids[k:] = 0
+    return stop - r, k
+
+
+def _shard_chunk_bounds(row_ptr: np.ndarray, chunk_nnz: int,
+                        chunk_rows: int, row_offset: int) -> np.ndarray:
+    """Greedy whole-row chunk boundaries for one shard: ``bounds[i]`` is
+    the first row of chunk ``i`` (terminated by ``n_rows``).  Computed ONCE
+    per (shard, geometry) and cached — the per-iteration searchsorted pack
+    this replaces re-derived the same boundaries every pass."""
+    n_rows = row_ptr.size - 1
+    bounds = [0]
+    r = 0
+    while r < n_rows:
+        lo = int(row_ptr[r])
+        r_hi = min(r + chunk_rows, n_rows)
+        stop = int(
+            np.searchsorted(row_ptr[r + 1 : r_hi + 1], lo + chunk_nnz,
+                            side="right")
+        ) + r
+        if stop == r:
+            raise ValueError(
+                f"row {row_offset + r} has "
+                f"{int(row_ptr[r + 1]) - lo} nnz > chunk_nnz="
+                f"{chunk_nnz}; raise chunk_nnz (rows may not span "
+                f"chunks — the gather-Gram needs whole rows)"
+            )
+        bounds.append(stop)
+        r = stop
+    return np.asarray(bounds, np.int64)
+
+
 class CSRStoreWriter:
     """Appends CSR row blocks and splits them into shards on disk.
 
@@ -172,6 +250,11 @@ class SparseCorpus:
     def __init__(self, path: str, manifest: dict):
         self.path = path
         self.manifest = manifest
+        # (chunk_nnz, chunk_rows) -> per-shard chunk-boundary arrays,
+        # computed lazily on first iteration and reused by every later
+        # pass over the store (a K-component fit re-streams the corpus,
+        # so the greedy pack must not be re-derived per pass).
+        self._chunk_plans: dict[tuple[int, int], list[np.ndarray]] = {}
 
     @classmethod
     def open(cls, path: str) -> "SparseCorpus":
@@ -221,6 +304,48 @@ class SparseCorpus:
                 int(shard["row_offset"]),
             )
 
+    def chunk_plan(self, chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+                   chunk_rows: int = DEFAULT_CHUNK_ROWS) -> list[np.ndarray]:
+        """Per-shard chunk row-boundary arrays for this geometry (cached:
+        the greedy whole-row pack runs once per store handle, not once per
+        streaming pass)."""
+        key = (int(chunk_nnz), int(chunk_rows))
+        plan = self._chunk_plans.get(key)
+        if plan is None:
+            plan = []
+            for shard in self.manifest["shards"]:
+                row_ptr = self._mmap(shard, "row_ptr")
+                plan.append(_shard_chunk_bounds(
+                    row_ptr, chunk_nnz, chunk_rows, int(shard["row_offset"])
+                ))
+            self._chunk_plans[key] = plan
+        return plan
+
+    def n_chunks(self, chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS, *,
+                 host_id: int = 0, num_hosts: int = 1) -> int:
+        """Chunks one pass at this geometry yields on this host slice."""
+        plan = self.chunk_plan(chunk_nnz, chunk_rows)
+        return sum(b.size - 1 for b in plan[host_id::num_hosts])
+
+    def _iter_packed(self, chunk_nnz, chunk_rows, host_id, num_hosts):
+        """Internal: (vals_mmap, cols_mmap, row_ptr, row_offset, r, stop)
+        per chunk, in deterministic shard-then-row order, off the cached
+        plan."""
+        plan = self.chunk_plan(chunk_nnz, chunk_rows)
+        shards = self.manifest["shards"]
+        if not (0 <= host_id < num_hosts):
+            raise ValueError(f"host_id {host_id} not in [0, {num_hosts})")
+        for s in range(host_id, len(shards), num_hosts):
+            shard = shards[s]
+            vals = self._mmap(shard, "values")
+            cols = self._mmap(shard, "col_ids")
+            row_ptr = self._mmap(shard, "row_ptr")
+            bounds = plan[s]
+            for i in range(bounds.size - 1):
+                yield (vals, cols, row_ptr, int(shard["row_offset"]),
+                       int(bounds[i]), int(bounds[i + 1]))
+
     def iter_chunks(
         self,
         *,
@@ -234,49 +359,105 @@ class SparseCorpus:
         A chunk closes when the next row would overflow either the
         ``chunk_nnz`` slot budget or the ``chunk_rows`` row budget; the
         final chunk of each shard is ragged and zero-padded to shape.
+        Chunks are freshly allocated (callers may hold references); the
+        megabatch iterator below is the buffer-reusing hot path.
         """
-        for vals, cols, row_ptr, row_offset in self.iter_shards(
-            host_id=host_id, num_hosts=num_hosts
+        for vals, cols, row_ptr, row_offset, r, stop in self._iter_packed(
+            chunk_nnz, chunk_rows, host_id, num_hosts
         ):
-            n_rows = row_ptr.size - 1
-            r = 0
-            while r < n_rows:
-                lo = int(row_ptr[r])
-                # Greedy pack: longest run of whole rows within both budgets.
-                r_hi = min(r + chunk_rows, n_rows)
-                stop = int(
-                    np.searchsorted(row_ptr[r + 1 : r_hi + 1], lo + chunk_nnz,
-                                    side="right")
-                ) + r
-                if stop == r:
-                    raise ValueError(
-                        f"row {row_offset + r} has "
-                        f"{int(row_ptr[r + 1]) - lo} nnz > chunk_nnz="
-                        f"{chunk_nnz}; raise chunk_nnz (rows may not span "
-                        f"chunks — the gather-Gram needs whole rows)"
+            values = np.empty(chunk_nnz, np.float32)
+            col_ids = np.empty(chunk_nnz, np.int32)
+            seg_ids = np.empty(chunk_nnz, np.int32)
+            n_rows, k = _fill_slot(
+                values, col_ids, seg_ids, vals, cols, row_ptr, r, stop
+            )
+            yield CSRChunk(
+                values=values,
+                col_ids=col_ids,
+                seg_ids=seg_ids,
+                row_offset=row_offset + r,
+                n_rows=n_rows,
+                nnz=k,
+            )
+
+    def iter_megabatches(
+        self,
+        *,
+        chunk_nnz: int = DEFAULT_CHUNK_NNZ,
+        chunk_rows: int = DEFAULT_CHUNK_ROWS,
+        megabatch: int = 8,
+        host_id: int = 0,
+        num_hosts: int = 1,
+        reuse_buffers: bool = True,
+        ring: int = 4,
+    ) -> Iterator[CSRMegaBatch]:
+        """Pack C = ``megabatch`` chunks per step into fixed (C, chunk_nnz)
+        arrays — the unit ONE ingest kernel launch consumes.
+
+        With ``reuse_buffers`` the (C, chunk_nnz) arrays rotate through a
+        preallocated ring instead of being reallocated per batch (mmap
+        read + pad lands in warm pages); ``ring`` must exceed the
+        downstream prefetch depth + 1 so a queued batch is never
+        overwritten before it is consumed.  Only slot tails past each
+        chunk's nnz are re-zeroed, so a full chunk costs one memcpy and no
+        memset.  The final batch of a pass is ragged: unused slots carry
+        ``n_rows == nnz == 0`` and all-zero entries.
+        """
+        C = int(megabatch)
+        if C < 1:
+            raise ValueError(f"megabatch must be >= 1, got {megabatch}")
+        buffers = [
+            (
+                np.zeros((C, chunk_nnz), np.float32),
+                np.zeros((C, chunk_nnz), np.int32),
+                np.zeros((C, chunk_nnz), np.int32),
+            )
+            for _ in range(max(2, ring) if reuse_buffers else 1)
+        ]
+        b = 0
+        slot = 0
+        row_offset_v = np.zeros(C, np.int64)
+        n_rows_v = np.zeros(C, np.int32)
+        nnz_v = np.zeros(C, np.int64)
+
+        def emit(n_slots: int) -> CSRMegaBatch:
+            values, col_ids, seg_ids = buffers[b]
+            for i in range(n_slots, C):   # blank the ragged tail's slots
+                values[i, :] = 0.0
+                col_ids[i, :] = 0
+                seg_ids[i, :] = 0
+                row_offset_v[i] = 0
+                n_rows_v[i] = 0
+                nnz_v[i] = 0
+            return CSRMegaBatch(
+                values=values, col_ids=col_ids, seg_ids=seg_ids,
+                row_offset=row_offset_v.copy(), n_rows=n_rows_v.copy(),
+                nnz=nnz_v.copy(), n_chunks=n_slots,
+            )
+
+        for vals, cols, row_ptr, row_offset, r, stop in self._iter_packed(
+            chunk_nnz, chunk_rows, host_id, num_hosts
+        ):
+            values, col_ids, seg_ids = buffers[b]
+            n_rows_v[slot], nnz_v[slot] = _fill_slot(
+                values[slot], col_ids[slot], seg_ids[slot],
+                vals, cols, row_ptr, r, stop,
+            )
+            row_offset_v[slot] = row_offset + r
+            slot += 1
+            if slot == C:
+                yield emit(C)
+                slot = 0
+                if reuse_buffers:
+                    b = (b + 1) % len(buffers)
+                else:
+                    buffers[0] = (
+                        np.zeros((C, chunk_nnz), np.float32),
+                        np.zeros((C, chunk_nnz), np.int32),
+                        np.zeros((C, chunk_nnz), np.int32),
                     )
-                hi = int(row_ptr[stop])
-                k = hi - lo
-                values = np.zeros(chunk_nnz, np.float32)
-                col_ids = np.zeros(chunk_nnz, np.int32)
-                seg_ids = np.zeros(chunk_nnz, np.int32)
-                values[:k] = vals[lo:hi]
-                col_ids[:k] = cols[lo:hi]
-                seg_ids[:k] = (
-                    np.repeat(
-                        np.arange(stop - r, dtype=np.int32),
-                        np.diff(row_ptr[r : stop + 1]).astype(np.int64),
-                    )
-                )
-                yield CSRChunk(
-                    values=values,
-                    col_ids=col_ids,
-                    seg_ids=seg_ids,
-                    row_offset=row_offset + r,
-                    n_rows=stop - r,
-                    nnz=k,
-                )
-                r = stop
+        if slot:
+            yield emit(slot)
 
     def to_dense(self, *, max_bytes: int | None = None) -> np.ndarray:
         """Materialise the full matrix — tests/small stores only."""

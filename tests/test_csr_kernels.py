@@ -49,8 +49,13 @@ def test_csr_stats_parity(E, n, nnz, block_e):
         interpret=True,
     )
     s_r, ss_r = ref.csr_column_stats_ref(jnp.asarray(vals), jnp.asarray(cols), n)
-    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=0, atol=0)
-    np.testing.assert_allclose(np.asarray(ss_k), np.asarray(ss_r), rtol=0, atol=0)
+    # the vectorized kernel reduces 128 entries per MXU contraction, so
+    # the summation order differs from the oracle's sequential scatter by
+    # last-ulp f32 rounding — near-exact, not bit-exact
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ss_k), np.asarray(ss_r),
+                               rtol=1e-6, atol=1e-6)
     s_d, ss_d = _dense_stats(vals, cols, n)
     np.testing.assert_allclose(np.asarray(s_k), s_d, rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(ss_k), ss_d, rtol=1e-5, atol=1e-5)
