@@ -1,0 +1,74 @@
+"""Observability smoke bench: trace a tiny fit, export, validate.
+
+Two rows:
+
+  obs_trace_export  — a 2-component fit under an active tracer; the
+                      Chrome trace-event JSON is dumped to a temp file,
+                      parsed back, and schema-checked (every "X" event
+                      carries ts/dur; the expected fit spans exist).
+                      us_per_call is the traced fit's wall time.
+  obs_span_overhead — cost of one `trace.span()` open/close with NO
+                      tracer installed (the no-op fast path every hot
+                      call site pays when tracing is off).
+
+Not a perf gate (no ``kernel_``/``ingest_`` prefix): the value is the
+end-to-end proof that ``--trace`` produces a loadable artifact, run on
+every ``--quick`` leg so a broken exporter fails CI before a human loads
+a truncated JSON into Perfetto.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def run_smoke():
+    from repro.core import spca
+    from repro.obs import metrics, trace
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(120, 60))
+    A[:, :6] += 2.5 * rng.normal(size=(120, 1))
+
+    with metrics.use_registry(), trace.enable() as tracer:
+        t0 = time.perf_counter()
+        spca.fit_components(A, 2, 4, cfg=spca.SPCAConfig(
+            max_sweeps=6, lam_search_evals=4))
+        fit_s = time.perf_counter() - t0
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="obs_trace_")
+    os.close(fd)
+    try:
+        tracer.dump_chrome_trace(path)
+        with open(path) as f:
+            doc = json.load(f)
+    finally:
+        os.unlink(path)
+    events = doc["traceEvents"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert xs, "trace exported no span events"
+    assert all("ts" in e and "dur" in e and e["dur"] >= 0 for e in xs)
+    names = {e["name"] for e in xs}
+    for expected in ("fit.components", "fit.component", "solver.solve"):
+        assert expected in names, f"missing span {expected!r} in trace"
+    yield {
+        "name": "obs_trace_export",
+        "us_per_call": fit_s * 1e6,
+        "derived": f"events={len(xs)} names={len(names)} json_ok=1",
+    }
+
+    reps = 200_000
+    assert trace.active() is None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with trace.span("noop"):
+            pass
+    per = (time.perf_counter() - t0) / reps
+    yield {
+        "name": "obs_span_overhead",
+        "us_per_call": per * 1e6,
+        "derived": f"tracing_off_noop reps={reps}",
+    }

@@ -36,7 +36,8 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 _BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
-_QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels", "ingest smoke"}
+_QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels",
+                 "ingest smoke", "obs smoke"}
 
 
 def main(argv=None) -> None:
@@ -62,7 +63,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_complexity, bench_convergence, bench_elimination, bench_ingest,
-        bench_kernels, bench_lambda_search, bench_serve, bench_topics,
+        bench_kernels, bench_lambda_search, bench_obs, bench_serve,
+        bench_topics,
     )
 
     suites = [
@@ -77,6 +79,7 @@ def main(argv=None) -> None:
         ("ingest", bench_ingest.run),
         ("lambda search", bench_lambda_search.run),
         ("serving", bench_serve.run),
+        ("obs smoke", bench_obs.run_smoke),
     ]
     if args.quick:
         suites = [s for s in suites if s[0] in _QUICK_SUITES]
@@ -163,6 +166,34 @@ def main(argv=None) -> None:
         f.write("\n")
     print(f"wrote {args.json} ({len(results)} updated / {len(merged)} total)",
           file=sys.stderr)
+
+    # Provenance sidecar: a number without the machine that produced it is
+    # not a baseline.  Written next to the dump on every refresh, so a
+    # PR-over-PR trajectory can tell a real regression from a host change.
+    meta_path = os.path.splitext(args.json)[0] + ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(_run_metadata(suites), f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {meta_path}", file=sys.stderr)
+
+
+def _run_metadata(suites) -> dict:
+    import platform
+    import time
+
+    dev = jax.devices()[0]
+    return {
+        "t_unix_s": time.time(),
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.jax_enable_x64),
+        "suites": [label for label, _ in suites],
+    }
 
 
 if __name__ == "__main__":

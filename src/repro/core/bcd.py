@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
+
 
 class BCDResult(NamedTuple):
     X: jax.Array          # solution of the augmented problem (6)
@@ -48,6 +50,12 @@ class BCDResult(NamedTuple):
     history: jax.Array
     sweeps: jax.Array     # number of sweeps actually executed
     beta: float = 0.0     # logdet barrier weight actually used (for kkt_gap)
+    # Final barrier-free objective F(X) as computed ON-CHIP by the fused
+    # kernel's early-exit test (kernels/bcd_fused.py) — None on the jnp
+    # path, whose early exit uses the augmented objective (= ``obj``).
+    # Surfaced so the driver can report solver convergence telemetry
+    # without recomputing, and so kernel/oracle parity is checkable.
+    kernel_obj: jax.Array | None = None
 
 
 def augmented_objective(X, Sigma, lam, beta):
@@ -280,11 +288,14 @@ def solve_bcd(
     if impl in ("fused", "fused_ref"):
         from repro.kernels import ops as kernel_ops
 
-        X, _, sweeps, hist = kernel_ops.bcd_solve(
-            Sigma, lam, beta_, X0, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
-            tol=tol, tau_iters=tau_iters, panel_rows=panel_rows,
-            impl="pallas" if impl == "fused" else "ref",
-        )
+        with trace.span("solver.solve", n=n, impl=impl):
+            X, kernel_obj, sweeps, hist = kernel_ops.bcd_solve(
+                Sigma, lam, beta_, X0, max_sweeps=max_sweeps,
+                qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
+                panel_rows=panel_rows,
+                impl="pallas" if impl == "fused" else "ref",
+            )
+            trace.device_sync(X)
         trX = jnp.trace(X)
         Z = X / trX
         return BCDResult(
@@ -295,11 +306,14 @@ def solve_bcd(
             history=hist,
             sweeps=sweeps,
             beta=float(beta),
+            kernel_obj=kernel_obj,
         )
-    res = _solve_bcd_jit(
-        Sigma, lam, beta_, X0, max_sweeps, qp_sweeps, jnp.asarray(tol, Sigma.dtype),
-        tau_iters, qp_impl,
-    )
+    with trace.span("solver.solve", n=n, impl=impl):
+        res = _solve_bcd_jit(
+            Sigma, lam, beta_, X0, max_sweeps, qp_sweeps,
+            jnp.asarray(tol, Sigma.dtype), tau_iters, qp_impl,
+        )
+        trace.device_sync(res.X)
     return res._replace(beta=float(beta))
 
 
@@ -414,13 +428,15 @@ def solve_bcd_many(
         Xp[k, :n, :n] = np.eye(n) if X0s[k] is None else np.asarray(X0s[k])
     from repro.kernels import ops as kernel_ops
 
-    X, _, sweeps, hist = kernel_ops.bcd_solve_batched(
-        jnp.asarray(Sp, dtype), jnp.asarray(lams, dtype),
-        jnp.asarray(betas, dtype), jnp.asarray(Xp, dtype),
-        jnp.asarray(sizes, jnp.int32), max_sweeps=max_sweeps,
-        qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
-        panel_rows=panel_rows, impl=impl,
-    )
+    with trace.span("solver.solve_many", batch=B, n_pad=n_pad, impl=impl):
+        X, kernel_objs, sweeps, hist = kernel_ops.bcd_solve_batched(
+            jnp.asarray(Sp, dtype), jnp.asarray(lams, dtype),
+            jnp.asarray(betas, dtype), jnp.asarray(Xp, dtype),
+            jnp.asarray(sizes, jnp.int32), max_sweeps=max_sweeps,
+            qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
+            panel_rows=panel_rows, impl=impl,
+        )
+        trace.device_sync(X)
     out: list[BCDResult] = []
     for k, n in enumerate(sizes):
         Xk = X[k, :n, :n]
@@ -435,6 +451,7 @@ def solve_bcd_many(
             history=hist[k],
             sweeps=sweeps[k],
             beta=betas[k],
+            kernel_obj=kernel_objs[k],
         ))
     return out
 

@@ -21,6 +21,8 @@ from dataclasses import dataclass, field, replace
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics, trace
+
 from . import bcd, elimination, validate
 
 
@@ -217,16 +219,21 @@ class ReducedCovarianceCache:
                 support, self._support
             ):
                 self.slices += 1
+                metrics.counter("cov.slices").inc()
                 return self._sigma
             pos = np.searchsorted(self._support, support)
             pos = np.minimum(pos, self._support.size - 1)
             if np.array_equal(self._support[pos], support):
                 self.slices += 1
+                metrics.counter("cov.slices").inc()
                 idx = jnp.asarray(pos)
                 return self._sigma[jnp.ix_(idx, idx)]
         self.builds += 1
+        metrics.counter("cov.builds").inc()
         self._support = support
-        self._sigma = self._build(support)
+        with trace.span("cov.build", n_hat=int(support.size)):
+            self._sigma = self._build(support)
+            trace.device_sync(self._sigma)
         return self._sigma
 
 
@@ -281,24 +288,28 @@ def solve_at_lambda(
     X0 = None
     if warm is not None and cfg.warm_start:
         X0 = _warm_x0(support, warm[0], warm[1], Sigma_hat.dtype)
-    res = bcd.solve_bcd(
-        Sigma_hat,
-        lam,
-        beta=cfg.beta,
-        max_sweeps=cfg.max_sweeps,
-        qp_sweeps=cfg.qp_sweeps,
-        tol=cfg.tol,
-        tau_iters=cfg.tau_iters,
-        X0=X0,
-        qp_impl=cfg.qp_impl,
-        solver_impl=cfg.solver_impl,
-        panel_rows=cfg.panel_rows,
-    )
+    with trace.span("solver.eval", lam=float(lam), n_hat=int(support.size),
+                    warm=X0 is not None):
+        res = bcd.solve_bcd(
+            Sigma_hat,
+            lam,
+            beta=cfg.beta,
+            max_sweeps=cfg.max_sweeps,
+            qp_sweeps=cfg.qp_sweeps,
+            tol=cfg.tol,
+            tau_iters=cfg.tau_iters,
+            X0=X0,
+            qp_impl=cfg.qp_impl,
+            solver_impl=cfg.solver_impl,
+            panel_rows=cfg.panel_rows,
+        )
     x_red = bcd.leading_sparse_component(res.Z, rel_tol=cfg.support_rel_tol)
     gap = float(validate.kkt_gap(res.X, Sigma_hat, lam, res.beta)[0])
     x = np.zeros(variances.shape[0])
     x[support] = np.asarray(x_red)
     nz = np.flatnonzero(x)
+    sweeps = int(res.sweeps)
+    metrics.histogram("solver.sweeps").observe(sweeps)
     return PCResult(
         x=x,
         support=nz,
@@ -307,7 +318,7 @@ def solve_at_lambda(
         cardinality=int(nz.size),
         reduced_n=int(support.size),
         gap=gap,
-        sweeps=int(res.sweeps),
+        sweeps=sweeps,
         reduced_support=support,
         X_reduced=np.asarray(res.X) if keep_reduced else None,
         Sigma_reduced=np.asarray(Sigma_hat) if keep_reduced else None,
@@ -479,6 +490,11 @@ def search_lambda(
         else:
             hi = lam   # too sparse -> lower lambda
     assert best is not None
+    # Registry mirror of the diagnostics dict (same code path, same
+    # numbers — the dict stays a view; see obs.metrics module doc).
+    metrics.counter("search.evals").inc(evals)
+    metrics.counter("search.warm_starts").inc(warm_starts)
+    metrics.counter("solver.launches").inc(evals + probe_launches)
     if diagnostics is not None:
         diagnostics.update(
             evals=evals,
@@ -561,18 +577,23 @@ def _search_lambda_batched(
                 X0[:m, :m] = Xw[:m, :m]
                 X0s.append(X0)
             warm_starts += len(sizes)
-        solved = bcd.solve_bcd_many(
-            [Sigma_perm[:t, :t] for t in sizes], lams, X0s=X0s,
-            betas=None if cfg.beta is None else [cfg.beta] * len(sizes),
-            max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
-            tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
-            impl=_batched_impl(cfg.solver_impl),
-        )
+        with trace.span("solver.batched_round", evals=len(sizes),
+                        lam_lo=float(lo), lam_hi=float(hi)):
+            solved = bcd.solve_bcd_many(
+                [Sigma_perm[:t, :t] for t in sizes], lams, X0s=X0s,
+                betas=None if cfg.beta is None else [cfg.beta] * len(sizes),
+                max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps,
+                tol=cfg.tol, tau_iters=cfg.tau_iters,
+                panel_rows=cfg.panel_rows,
+                impl=_batched_impl(cfg.solver_impl),
+            )
         launches += 1
         evals += len(solved)
         cards = []
         for la, t, res in zip(lams, sizes, solved):
-            total_sweeps += int(res.sweeps)
+            sweeps_i = int(res.sweeps)
+            total_sweeps += sweeps_i
+            metrics.histogram("solver.sweeps").observe(sweeps_i)
             x_red = np.asarray(bcd.leading_sparse_component(
                 res.Z, rel_tol=cfg.support_rel_tol))
             card = int(np.count_nonzero(x_red))
@@ -613,6 +634,9 @@ def _search_lambda_batched(
     support_sorted = feat_perm[:t][sort_idx]
     X_sorted = np.asarray(res.X)[np.ix_(sort_idx, sort_idx)]
     Sigma_sorted = Sigma_perm[:t, :t][np.ix_(sort_idx, sort_idx)]
+    metrics.counter("search.evals").inc(evals)
+    metrics.counter("search.warm_starts").inc(warm_starts)
+    metrics.counter("solver.launches").inc(launches)
     if diagnostics is not None:
         diagnostics.update(
             evals=evals,
@@ -709,14 +733,16 @@ def _refine_components_batched(
         else build(r.reduced_support)
         for r in results
     ]
-    solved = bcd.solve_bcd_many(
-        Sigmas, [r.lam for r in results],
-        X0s=[r.X_reduced for r in results],
-        betas=None if cfg.beta is None else [cfg.beta] * len(results),
-        max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
-        tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
-        impl=_batched_impl(cfg.solver_impl),
-    )
+    with trace.span("solver.batched_refine", components=len(results)):
+        solved = bcd.solve_bcd_many(
+            Sigmas, [r.lam for r in results],
+            X0s=[r.X_reduced for r in results],
+            betas=None if cfg.beta is None else [cfg.beta] * len(results),
+            max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
+            tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
+            impl=_batched_impl(cfg.solver_impl),
+        )
+    metrics.counter("solver.launches").inc()
     out: list[PCResult] = []
     for r, S, res in zip(results, Sigmas, solved):
         x_red = np.asarray(bcd.leading_sparse_component(
@@ -725,10 +751,12 @@ def _refine_components_batched(
         x = np.zeros(r.x.shape[0])
         x[r.reduced_support] = x_red
         nz = np.flatnonzero(x)
+        sweeps_i = int(res.sweeps)
+        metrics.histogram("solver.sweeps").observe(sweeps_i)
         out.append(replace(
             r, x=x, support=nz, cardinality=int(nz.size),
             variance=float(x_red @ np.asarray(S) @ x_red), gap=gap,
-            sweeps=r.sweeps + int(res.sweeps), X_reduced=None,
+            sweeps=r.sweeps + sweeps_i, X_reduced=None,
             Sigma_reduced=None,
         ))
     return out
@@ -748,6 +776,8 @@ def fit_components(
     """Top-k sparse PCs.  deflation='remove' drops selected features from the
     dictionary between components (paper-style disjoint topics);
     'project' applies Hotelling deflation to the covariance.
+    The whole fit runs under a ``fit.components`` span (one ``fit.component``
+    child per deflation round) when a tracer is active — see obs.trace.
 
     ``data`` may be a dense (m, n) matrix, an (n, n) covariance, or a
     `repro.sparse.SparseCorpus` store handle — the out-of-core path
@@ -765,6 +795,26 @@ def fit_components(
     total (``corpus_passes``: screen + shared Gram) instead of 1 + K, with
     the per-pass ingest launch tally under ``ingest``.
     """
+    with trace.span("fit.components", n_components=n_components,
+                    target_card=target_card, deflation=deflation):
+        return _fit_components(
+            data, n_components, target_card, is_covariance=is_covariance,
+            cfg=cfg, deflation=deflation, diagnostics=diagnostics,
+            stats=stats,
+        )
+
+
+def _fit_components(
+    data,
+    n_components: int,
+    target_card: int,
+    *,
+    is_covariance: bool,
+    cfg: SPCAConfig | None,
+    deflation: str,
+    diagnostics: dict | None,
+    stats,
+) -> list[PCResult]:
     if cfg is None:
         cfg = SPCAConfig()
     if deflation == "project" and hasattr(data, "iter_chunks"):
@@ -795,13 +845,14 @@ def fit_components(
                                        cfg)
             if base.size:
                 cache.get(base)
-        for _ in range(n_components):
+        for k in range(n_components):
             d: dict = {}
-            r = search_lambda(
-                data, target_card, is_covariance=is_covariance, cfg=cfg,
-                active_mask=mask, stats=stats, diagnostics=d,
-                keep_reduced=cfg.batch_deflation, cov_cache=cache,
-            )
+            with trace.span("fit.component", k=k):
+                r = search_lambda(
+                    data, target_card, is_covariance=is_covariance, cfg=cfg,
+                    active_mask=mask, stats=stats, diagnostics=d,
+                    keep_reduced=cfg.batch_deflation, cov_cache=cache,
+                )
             per_comp.append(d)
             results.append(r)
             mask[r.support] = False
@@ -839,8 +890,10 @@ def fit_components(
             Sigma = np.asarray((A.T @ A) / A.shape[0])
         else:
             Sigma = np.asarray(data).copy()
-        for _ in range(n_components):
-            r = search_lambda(Sigma, target_card, is_covariance=True, cfg=cfg)
+        for k in range(n_components):
+            with trace.span("fit.component", k=k):
+                r = search_lambda(Sigma, target_card, is_covariance=True,
+                                  cfg=cfg)
             results.append(r)
             x = r.x / max(np.linalg.norm(r.x), 1e-30)
             P = np.eye(Sigma.shape[0]) - np.outer(x, x)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
 
 import jax
@@ -68,21 +69,47 @@ class _PrefetchError:
         self.exc = exc
 
 
-def prefetch(it, size: int = 2):
+def prefetch(it, size: int = 2, *, stats: dict | None = None):
     """Background-thread prefetch — overlaps host data generation with device
     compute (the CPU-side analogue of the device prefetch a real input
     pipeline would use).
 
     A producer-side exception is captured and re-raised here in the
     consumer (with the worker traceback chained), instead of silently
-    truncating the stream."""
+    truncating the stream.
+
+    ``stats`` (any mutable mapping, e.g. a plain dict or an ingest
+    counters dict) receives the pipeline's stall accounting, answering
+    "is this pass read-bound or reduce-bound?":
+
+      consumer_stall_s — time the CONSUMER blocked on an empty queue
+                         (the reader can't keep up: read-bound)
+      producer_stall_s — time the WORKER blocked on a full queue
+                         (the reduction can't keep up: reduce-bound)
+      items            — items that crossed the queue
+      occupancy_sum    — queue depth sampled before each get (divide by
+                         ``items`` for mean occupancy; ~size means the
+                         buffer is actually ahead)
+
+    The two stall keys are written from different threads but never the
+    same key from both, so plain dict arithmetic is race-free under the
+    GIL.  The ingest engine forwards these into the shared metrics
+    registry as ``ingest.prefetch.*`` (see `repro.sparse.engine`)."""
     q: queue.Queue = queue.Queue(maxsize=size)
     _END = object()
 
     def worker():
         try:
             for x in it:
-                q.put(x)
+                if stats is None:
+                    q.put(x)
+                else:
+                    t0 = time.perf_counter()
+                    q.put(x)
+                    stats["producer_stall_s"] = (
+                        stats.get("producer_stall_s", 0.0)
+                        + (time.perf_counter() - t0)
+                    )
         except BaseException as e:  # noqa: BLE001 — re-raised in consumer
             q.put(_PrefetchError(e))
         else:
@@ -91,11 +118,22 @@ def prefetch(it, size: int = 2):
     t = threading.Thread(target=worker, daemon=True)
     t.start()
     while True:
-        x = q.get()
+        if stats is None:
+            x = q.get()
+        else:
+            stats["occupancy_sum"] = stats.get("occupancy_sum", 0) + q.qsize()
+            t0 = time.perf_counter()
+            x = q.get()
+            stats["consumer_stall_s"] = (
+                stats.get("consumer_stall_s", 0.0)
+                + (time.perf_counter() - t0)
+            )
         if x is _END:
             return
         if isinstance(x, _PrefetchError):
             raise x.exc
+        if stats is not None:
+            stats["items"] = stats.get("items", 0) + 1
         yield x
 
 

@@ -24,6 +24,8 @@ import functools
 
 from dataclasses import dataclass
 
+from repro.obs import metrics, profile
+
 from . import ref
 from .bcd_fused import bcd_solve_batched_pallas, bcd_solve_pallas
 from .bcd_sweep import qp_sweep_pallas
@@ -36,6 +38,17 @@ from .variance import column_stats_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _launch(op: str):
+    """Per-op dispatch accounting at the wrapper boundary: bump the
+    ``kernel.launches.<op>`` registry counter and open an ``ops.<op>``
+    profiler region (`obs.profile.annotate` — a free no-op unless device
+    profiling was enabled, so the untraced hot path pays one counter
+    increment).  Counted here, not inside jit: the wrappers run eagerly
+    per call, so counts are dispatches, not traces."""
+    metrics.counter(f"kernel.launches.{op}").inc()
+    return profile.annotate(f"ops.{op}")
 
 
 # VMEM budgets for the two fused-solve execution schemes, against a ~16 MB/
@@ -112,11 +125,12 @@ _bcd_solve_batched_ref_jit = jax.jit(
 
 def column_stats(A, *, impl: str = "auto", block_m: int = 256, block_n: int = 512):
     """(col_sum, col_sumsq) in f32 — feeds the Thm 2.1 variance screen."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return ref.column_stats_ref(A)
-    return column_stats_pallas(
-        A, block_m=block_m, block_n=block_n, interpret=not _on_tpu()
-    )
+    with _launch("column_stats"):
+        if impl == "ref" or (impl == "auto" and not _on_tpu()):
+            return ref.column_stats_ref(A)
+        return column_stats_pallas(
+            A, block_m=block_m, block_n=block_n, interpret=not _on_tpu()
+        )
 
 
 def column_variances(A, *, impl: str = "auto"):
@@ -131,12 +145,13 @@ def column_variances(A, *, impl: str = "auto"):
 def gram(A, *, impl: str = "auto", block_i: int = 128, block_j: int = 128,
          block_k: int = 512):
     """A^T A in f32 — the reduced covariance numerator."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return ref.gram_ref(A)
-    return gram_pallas(
-        A, block_i=block_i, block_j=block_j, block_k=block_k,
-        interpret=not _on_tpu(),
-    )
+    with _launch("gram"):
+        if impl == "ref" or (impl == "auto" and not _on_tpu()):
+            return ref.gram_ref(A)
+        return gram_pallas(
+            A, block_i=block_i, block_j=block_j, block_k=block_k,
+            interpret=not _on_tpu(),
+        )
 
 
 try:                                     # scipy ships with jax; the spgemm
@@ -251,11 +266,12 @@ def csr_column_stats(values, col_ids, *, n: int, impl: str = "auto",
     never recompiles.  ``nnz`` (scalar or (C,)), when given with concrete
     host arrays, asserts the ``value 0`` padding contract."""
     _assert_csr_padding(values, nnz)
-    if _host_path(impl, values, col_ids):
-        return _csr_column_stats_host(values, col_ids, n)
-    values, col_ids = _sync_host_inputs(values, col_ids)
-    return _csr_column_stats_jit(values, col_ids, n=n, impl=impl,
-                                 block_e=block_e)
+    with _launch("csr_column_stats"):
+        if _host_path(impl, values, col_ids):
+            return _csr_column_stats_host(values, col_ids, n)
+        values, col_ids = _sync_host_inputs(values, col_ids)
+        return _csr_column_stats_jit(values, col_ids, n=n, impl=impl,
+                                     block_e=block_e)
 
 
 # back-compat: tests introspect the jit cache through the public name
@@ -282,13 +298,14 @@ def csr_gram(values, local_cols, seg_ids, *, n_rows: int, n_hat: int,
     (entry not on the support); ``seg_ids`` are chunk-local rows.  Fixed
     chunk shapes keep this a single trace per (chunk_nnz, n_hat)."""
     _assert_csr_padding(values, nnz)
-    if _host_path(impl, values, local_cols, seg_ids):
-        return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
-    values, local_cols, seg_ids = _sync_host_inputs(
-        values, local_cols, seg_ids
-    )
-    return _csr_gram_jit(values, local_cols, seg_ids, n_rows=n_rows,
-                         n_hat=n_hat, impl=impl)
+    with _launch("csr_gram"):
+        if _host_path(impl, values, local_cols, seg_ids):
+            return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
+        values, local_cols, seg_ids = _sync_host_inputs(
+            values, local_cols, seg_ids
+        )
+        return _csr_gram_jit(values, local_cols, seg_ids, n_rows=n_rows,
+                             n_hat=n_hat, impl=impl)
 
 
 @functools.partial(
@@ -329,13 +346,14 @@ def csr_gram_batched(values, local_cols, seg_ids, *, n_rows: int,
     ``nnz`` (C,), when given with concrete host arrays, asserts the
     ``value 0`` padding contract."""
     _assert_csr_padding(values, nnz)
-    if _host_path(impl, values, local_cols, seg_ids):
-        return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
-    values, local_cols, seg_ids = _sync_host_inputs(
-        values, local_cols, seg_ids
-    )
-    return _csr_gram_batched_jit(values, local_cols, seg_ids, n_rows=n_rows,
-                                 n_hat=n_hat, impl=impl)
+    with _launch("csr_gram_batched"):
+        if _host_path(impl, values, local_cols, seg_ids):
+            return _csr_gram_host(values, local_cols, seg_ids, n_rows, n_hat)
+        values, local_cols, seg_ids = _sync_host_inputs(
+            values, local_cols, seg_ids
+        )
+        return _csr_gram_batched_jit(values, local_cols, seg_ids,
+                                     n_rows=n_rows, n_hat=n_hat, impl=impl)
 
 
 def _resolve_scheme(scheme: str, n: int, itemsize: int, batch: int):
@@ -380,24 +398,26 @@ def bcd_solve(Sigma, lam, beta, X0=None, *, max_sweeps: int = 20,
     use_pallas = (impl == "pallas" or (
         impl == "auto" and _on_tpu() and Sigma.dtype.itemsize <= 4
     )) and resolved is not None
-    if not use_pallas:
-        if n_valid is None:
-            return _bcd_solve_ref_jit(
-                Sigma, lam, beta, X0, tol,
+    with _launch("bcd_solve"):
+        if not use_pallas:
+            if n_valid is None:
+                return _bcd_solve_ref_jit(
+                    Sigma, lam, beta, X0, tol,
+                    max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+                    tau_iters=tau_iters,
+                )
+            return _bcd_solve_masked_ref_jit(
+                Sigma, lam, beta, X0, tol, n_valid,
                 max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
                 tau_iters=tau_iters,
             )
-        return _bcd_solve_masked_ref_jit(
-            Sigma, lam, beta, X0, tol, n_valid,
+        kscheme, kpanel = resolved
+        return bcd_solve_pallas(
+            Sigma, lam, beta, X0, tol,
             max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+            n_valid=n_valid, scheme=kscheme, panel_rows=panel_rows or kpanel,
+            interpret=not _on_tpu(),
         )
-    kscheme, kpanel = resolved
-    return bcd_solve_pallas(
-        Sigma, lam, beta, X0, tol,
-        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
-        n_valid=n_valid, scheme=kscheme, panel_rows=panel_rows or kpanel,
-        interpret=not _on_tpu(),
-    )
 
 
 def bcd_solve_batched(Sigmas, lams, betas, X0s, n_valids, *,
@@ -429,18 +449,20 @@ def bcd_solve_batched(Sigmas, lams, betas, X0s, n_valids, *,
     use_pallas = (impl == "pallas" or (
         impl == "auto" and _on_tpu() and dtype.itemsize <= 4
     )) and resolved is not None
-    if not use_pallas:
-        return _bcd_solve_batched_ref_jit(
+    with _launch("bcd_solve_batched"):
+        if not use_pallas:
+            return _bcd_solve_batched_ref_jit(
+                Sigmas, lams, betas, X0s, tol, n_valids,
+                max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+                tau_iters=tau_iters,
+            )
+        kscheme, kpanel = resolved
+        return bcd_solve_batched_pallas(
             Sigmas, lams, betas, X0s, tol, n_valids,
             max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
+            scheme=kscheme, panel_rows=panel_rows or kpanel,
+            interpret=not _on_tpu(),
         )
-    kscheme, kpanel = resolved
-    return bcd_solve_batched_pallas(
-        Sigmas, lams, betas, X0s, tol, n_valids,
-        max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
-        scheme=kscheme, panel_rows=panel_rows or kpanel,
-        interpret=not _on_tpu(),
-    )
 
 
 def qp_sweeps(Y, s, lam, u0, j, *, sweeps: int = 4, impl: str = "auto"):
@@ -454,18 +476,19 @@ def sparse_project(X, support_idx, values, *, impl: str = "auto",
                    block_b: int = 512):
     """(B, k) document->topic scores through the gather representation —
     the serving hot path (see ``repro.serve.projector``)."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return ref.sparse_project_ref(X, support_idx, values)
-    k, cap = support_idx.shape
-    B, n = X.shape
-    # Batch-transpose + zero pad row: column gather becomes row gather.
-    XT = jnp.concatenate(
-        [X.T.astype(jnp.float32), jnp.zeros((1, B), jnp.float32)], axis=0
-    )
-    idx = jnp.where(values.reshape(-1) != 0, support_idx.reshape(-1), n)
-    cid = jnp.repeat(jnp.arange(k, dtype=jnp.int32), cap)
-    out = sparse_project_pallas(
-        XT, idx.astype(jnp.int32), cid, values.reshape(-1), k, cap,
-        block_b=block_b, interpret=not _on_tpu(),
-    )
-    return out.T
+    with _launch("sparse_project"):
+        if impl == "ref" or (impl == "auto" and not _on_tpu()):
+            return ref.sparse_project_ref(X, support_idx, values)
+        k, cap = support_idx.shape
+        B, n = X.shape
+        # Batch-transpose + zero pad row: column gather becomes row gather.
+        XT = jnp.concatenate(
+            [X.T.astype(jnp.float32), jnp.zeros((1, B), jnp.float32)], axis=0
+        )
+        idx = jnp.where(values.reshape(-1) != 0, support_idx.reshape(-1), n)
+        cid = jnp.repeat(jnp.arange(k, dtype=jnp.int32), cap)
+        out = sparse_project_pallas(
+            XT, idx.astype(jnp.int32), cid, values.reshape(-1), k, cap,
+            block_b=block_b, interpret=not _on_tpu(),
+        )
+        return out.T

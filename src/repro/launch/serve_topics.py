@@ -31,7 +31,16 @@ import numpy as np
 from repro.core import SPCAConfig, search_lambda
 from repro.core.elimination import Screen
 from repro.data.corpus import NYTIMES_TOPICS, make_corpus
+from repro.obs import metrics, trace
 from repro.serve import BatcherConfig, DriftMonitor, MicroBatcher, ModelRegistry
+
+_EXAMPLES = """\
+observability examples:
+  # span timeline (fit + per-batch serve spans on the server thread's own
+  # Perfetto track) and a serve.* / solver.* metrics snapshot
+  python -m repro.launch.serve_topics --smoke \\
+      --trace serve_trace.json --metrics serve_metrics.jsonl
+"""
 
 
 def iter_docs(corpus):
@@ -111,7 +120,10 @@ def serve_stream(batcher, docs, *, inflight: int = 256):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EXAMPLES,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--smoke", action="store_true",
                     help="small corpus, fast end-to-end run")
     ap.add_argument("--docs", type=int, default=8000)
@@ -122,6 +134,12 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--registry", default=None,
                     help="persistence dir (default: a temp dir)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write the host span timeline as Chrome "
+                         "trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="append one metrics-registry snapshot (JSON line) "
+                         "at exit")
     args = ap.parse_args()
     if args.smoke:
         args.docs = min(args.docs, 3000)
@@ -129,6 +147,22 @@ def main():
         args.components = min(args.components, 3)
         args.queries = max(min(args.queries, 1500), 1000)
 
+    tracer = trace.install(trace.Tracer()) if args.trace else None
+    try:
+        _run(args)
+    finally:
+        trace.install(None)
+    if tracer is not None:
+        tracer.dump_chrome_trace(args.trace)
+        print(f"trace: {args.trace} (load at ui.perfetto.dev)")
+    if args.metrics:
+        metrics.get_registry().dump_jsonl(
+            args.metrics, extra={"run": "serve_topics"}
+        )
+        print(f"metrics: {args.metrics}")
+
+
+def _run(args):
     # 1. fit ---------------------------------------------------------------
     print(f"corpus: {args.docs} docs x {args.words} words")
     corpus = make_corpus(args.docs, args.words, topics=NYTIMES_TOPICS, seed=0)

@@ -38,10 +38,30 @@ import numpy as np
 from repro.configs.spca_experiments import NYTIMES, PUBMED
 from repro.core import SPCAConfig, fit_components
 from repro.data.corpus import NYTIMES_TOPICS, PUBMED_TOPICS, make_corpus
+from repro.obs import metrics, profile, trace
+
+_EXAMPLES = """\
+observability examples:
+  # span timeline of the whole fit (Perfetto-loadable) + metrics snapshot
+  python -m repro.launch.spca_run --streaming --components 3 \\
+      --trace out.json --metrics m.jsonl
+  #   out.json  -> load at https://ui.perfetto.dev (or chrome://tracing);
+  #                the span tree (also printed) shows the 2 corpus passes
+  #                (ingest.screen_pass / ingest.gram_pass), per-megabatch
+  #                dispatches, and the solve-launch structure
+  #   m.jsonl   -> one JSON line: solver.*, cov.*, search.*, ingest.*
+  #                (incl. ingest.prefetch.* stall time), kernel.launches.*
+
+  # device-level jax.profiler trace with annotated kernel dispatch sites
+  python -m repro.launch.spca_run --profile-dir /tmp/jaxtrace
+"""
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EXAMPLES,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--corpus", choices=("nytimes", "pubmed"), default="nytimes")
     ap.add_argument("--docs", type=int, default=8000)
     ap.add_argument("--words", type=int, default=0,
@@ -59,8 +79,36 @@ def main():
     ap.add_argument("--batch-evals", type=int, default=0,
                     help=">1: run each lambda-search round as ONE batched "
                          "solve launch of this many evaluations")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write the host span timeline as Chrome "
+                         "trace-event JSON (Perfetto-loadable) and print "
+                         "the span tree")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="append one metrics-registry snapshot (JSON line) "
+                         "after the fit")
+    ap.add_argument("--profile-dir", default="", metavar="DIR",
+                    help="run a jax.profiler device trace into DIR with "
+                         "the kernel dispatch sites annotated")
     args = ap.parse_args()
 
+    tracer = trace.install(trace.Tracer()) if args.trace else None
+    try:
+        with profile.trace_device(args.profile_dir or None):
+            _run(args)
+    finally:
+        trace.install(None)
+    if tracer is not None:
+        tracer.dump_chrome_trace(args.trace)
+        print(f"trace: {args.trace} (load at ui.perfetto.dev)")
+        print(tracer.tree_str(min_s=0.005))
+    if args.metrics:
+        metrics.get_registry().dump_jsonl(
+            args.metrics, extra={"run": "spca_run", "corpus": args.corpus}
+        )
+        print(f"metrics: {args.metrics}")
+
+
+def _run(args):
     exp = NYTIMES if args.corpus == "nytimes" else PUBMED
     topics = NYTIMES_TOPICS if args.corpus == "nytimes" else PUBMED_TOPICS
     n_words = args.words or exp.n_words

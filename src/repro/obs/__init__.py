@@ -1,0 +1,24 @@
+"""Unified observability layer: span tracing, metrics, profiler hooks.
+
+Three pieces, all zero-required-dependency and inert by default:
+
+  obs.trace    — nestable context-manager spans with monotonic wall time
+                 and optional device-sync boundaries; Chrome trace-event
+                 JSON (Perfetto) + human tree export.
+  obs.metrics  — typed Counter/Gauge/Histogram registry with JSONL
+                 snapshot export and cross-registry merge; the system's
+                 `diagnostics=` dicts are a read-out view over it.
+  obs.profile  — `jax.profiler` TraceAnnotation/named_scope wrappers
+                 around kernel dispatch sites, behind a no-op default.
+
+Span/metric naming scheme and the diagnostics-dict compatibility
+contract: see ROADMAP.md "Observability".
+"""
+from . import metrics, profile, trace
+from .metrics import Counter, Gauge, Histogram, Registry
+from .trace import Span, Tracer
+
+__all__ = [
+    "metrics", "profile", "trace",
+    "Counter", "Gauge", "Histogram", "Registry", "Span", "Tracer",
+]

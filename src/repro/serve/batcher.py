@@ -17,13 +17,14 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.data.pipeline import prefetch
+from repro.obs import metrics, trace
+from repro.obs.metrics import Histogram
 
 
 @dataclass(frozen=True)
@@ -36,14 +37,20 @@ class BatcherConfig:
 class LatencyStats:
     """Per-request wall-latency accumulator -> p50/p99/docs-per-second.
 
-    Percentiles are computed over a bounded sliding window (``window``
-    most-recent requests) so a long-lived server holds O(window) memory,
-    not one float per request ever served; ``count``/``docs_per_s`` still
-    reflect the full lifetime."""
+    Backed by the shared `obs.metrics.Histogram` (bounded window + lifetime
+    moments), so a long-lived server holds O(window) memory while
+    ``count``/``docs_per_s`` reflect the full lifetime.  Each batcher owns
+    its OWN histogram instance (snapshots stay per-batcher); the samples
+    are also mirrored into the process registry's ``serve.latency_s``.
+
+    Percentiles use the histogram's clamped nearest-rank estimator: the
+    previous ``np.percentile(lat, 99)`` linearly interpolated to within a
+    hair of the window max for any count < 100, so one slow warm-up
+    request over-reported the steady-state p99; now p99 of e.g. 10
+    samples reads the second-largest (see `Histogram.percentile`)."""
 
     def __init__(self, window: int = 100_000):
-        self._lat = deque(maxlen=window)
-        self._count = 0
+        self._h = Histogram("serve.latency_s", window=window)
         self._t0: float | None = None
         self._t1: float | None = None
         self._lock = threading.Lock()
@@ -56,22 +63,23 @@ class LatencyStats:
                 # single-batch snapshot doesn't divide by ~zero).
                 self._t0 = now - (max(latencies_s) if latencies_s else 0.0)
             self._t1 = now
-            self._lat.extend(float(x) for x in latencies_s)
-            self._count += len(latencies_s)
+        self._h.observe_many(latencies_s)
+        metrics.histogram("serve.latency_s").observe_many(latencies_s)
+        metrics.counter("serve.requests").inc(len(latencies_s))
 
     def snapshot(self) -> dict:
+        n = self._h.count
+        if n == 0:
+            return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                    "docs_per_s": 0.0}
         with self._lock:
-            if not self._lat:
-                return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0,
-                        "docs_per_s": 0.0}
-            lat = np.asarray(self._lat)
             wall = max((self._t1 or 0.0) - (self._t0 or 0.0), 1e-9)
-            return {
-                "count": self._count,
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p99_ms": float(np.percentile(lat, 99) * 1e3),
-                "docs_per_s": float(self._count / wall),
-            }
+        return {
+            "count": n,
+            "p50_ms": self._h.percentile(50) * 1e3,
+            "p99_ms": self._h.percentile(99) * 1e3,
+            "docs_per_s": float(n / wall),
+        }
 
 
 class _Request:
@@ -161,20 +169,25 @@ class MicroBatcher:
                 yield live, X
 
     def _serve_loop(self):
+        # Runs on the server thread: spans opened here land on that
+        # thread's own root timeline (see obs.trace thread model).
         for reqs, X in prefetch(self._collect(), size=self.cfg.prefetch_depth):
-            try:
-                scores = np.asarray(self.projector.project(X))
-            except Exception as e:          # fail the waiting futures, not us
-                for r in reqs:
-                    r.future.set_exception(e)
-                continue
-            for i, r in enumerate(reqs):
-                r.future.set_result(scores[i])
-            now = time.perf_counter()       # after resolution: honest latency
-            self.stats.record([now - r.t_submit for r in reqs], now)
-            self.batches_served += 1
-            if self.observer is not None:   # off the response critical path
-                self.observer(X[: len(reqs)])
+            with trace.span("serve.batch", batch=len(reqs)):
+                try:
+                    scores = np.asarray(self.projector.project(X))
+                except Exception as e:      # fail the waiting futures, not us
+                    for r in reqs:
+                        r.future.set_exception(e)
+                    continue
+                for i, r in enumerate(reqs):
+                    r.future.set_result(scores[i])
+                now = time.perf_counter()   # after resolution: honest latency
+                self.stats.record([now - r.t_submit for r in reqs], now)
+                self.batches_served += 1
+                metrics.counter("serve.batches").inc()
+                metrics.histogram("serve.batch_size").observe(len(reqs))
+                if self.observer is not None:  # off the response critical path
+                    self.observer(X[: len(reqs)])
 
     def start(self) -> "MicroBatcher":
         assert self._thread is None, "already started"

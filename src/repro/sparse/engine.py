@@ -39,6 +39,7 @@ import numpy as np
 from repro.core.elimination import Screen, combine_screens, select_support
 from repro.data.bow import StreamingGram, StreamingStats
 from repro.data.pipeline import prefetch
+from repro.obs import metrics, trace
 
 from .store import DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS, SparseCorpus
 
@@ -47,6 +48,8 @@ DEFAULT_PREFETCH = 2
 
 
 def _bump(counters: dict | None, **deltas) -> None:
+    for k, d in deltas.items():
+        metrics.counter(f"ingest.{k}").inc(d)
     if counters is None:
         return
     for k, d in deltas.items():
@@ -56,17 +59,46 @@ def _bump(counters: dict | None, **deltas) -> None:
 def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
            prefetch_depth, host_id, num_hosts, counters, launch_key):
     """One streaming pass of ``acc`` over this host's shard slice: packed
-    megabatches, prefetched one batch ahead, one dispatch per batch."""
+    megabatches, prefetched one batch ahead, one dispatch per batch.
+
+    Observability: each megabatch dispatch gets an ``ingest.megabatch``
+    span (device-synced on the accumulator state, so the span measures the
+    reduction, not just async dispatch), and the prefetch queue's stall
+    accounting lands in ``counters`` (``prefetch_consumer_stall_s`` /
+    ``prefetch_producer_stall_s``) and the ``ingest.prefetch.*`` registry
+    instruments — consumer stall means the pass is read-bound, producer
+    stall means it is reduce-bound."""
     it = store.iter_megabatches(
         chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
         host_id=host_id, num_hosts=num_hosts,
         ring=max(2, prefetch_depth + 2),
     )
+    pstats: dict = {}
     if prefetch_depth > 0:
-        it = prefetch(it, size=prefetch_depth)
+        it = prefetch(it, size=prefetch_depth, stats=pstats)
     for mb in it:
-        acc.update_csr_batch(mb)
+        with trace.span("ingest.megabatch", kind=launch_key,
+                        chunks=int(mb.n_chunks)):
+            acc.update_csr_batch(mb)
+            trace.device_sync(
+                tuple(getattr(acc, f) for f in acc._acc_fields)
+            )
         _bump(counters, **{launch_key: 1, "chunks": mb.n_chunks})
+    if pstats:
+        cstall = pstats.get("consumer_stall_s", 0.0)
+        wstall = pstats.get("producer_stall_s", 0.0)
+        if counters is not None:
+            counters["prefetch_consumer_stall_s"] = (
+                counters.get("prefetch_consumer_stall_s", 0.0) + cstall)
+            counters["prefetch_producer_stall_s"] = (
+                counters.get("prefetch_producer_stall_s", 0.0) + wstall)
+        metrics.counter("ingest.prefetch.consumer_stall_s").inc(cstall)
+        metrics.counter("ingest.prefetch.producer_stall_s").inc(wstall)
+        items = pstats.get("items", 0)
+        if items:
+            mean_occ = pstats.get("occupancy_sum", 0) / items
+            metrics.histogram("ingest.prefetch.occupancy").observe(mean_occ)
+            metrics.gauge("ingest.prefetch.queue_depth").set(mean_occ)
     return acc
 
 
@@ -90,19 +122,21 @@ def sparse_feature_variances(
     would produce and merge.
     """
     partials = []
-    for h in range(num_hosts):
-        acc = StreamingStats(store.n_cols, impl=impl)
-        _drain(
-            store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-            megabatch=megabatch, prefetch_depth=prefetch_depth,
-            host_id=h, num_hosts=num_hosts, counters=counters,
-            launch_key="screen_launches",
-        )
-        partials.append(acc.finalize(center=center))
-    _bump(counters, screen_passes=1)
-    if len(partials) == 1:
-        return partials[0]
-    return combine_screens(partials)
+    with trace.span("ingest.screen_pass", nnz=int(store.nnz),
+                    num_hosts=num_hosts, megabatch=megabatch):
+        for h in range(num_hosts):
+            acc = StreamingStats(store.n_cols, impl=impl)
+            _drain(
+                store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+                megabatch=megabatch, prefetch_depth=prefetch_depth,
+                host_id=h, num_hosts=num_hosts, counters=counters,
+                launch_key="screen_launches",
+            )
+            partials.append(acc.finalize(center=center))
+        _bump(counters, screen_passes=1)
+        if len(partials) == 1:
+            return partials[0]
+        return combine_screens(partials)
 
 
 def sparse_reduced_covariance(
@@ -124,20 +158,24 @@ def sparse_reduced_covariance(
     jnp add) — one host transfer at finalize."""
     support = np.asarray(support)
     accs = []
-    for h in range(num_hosts):
-        acc = StreamingGram(support, impl=impl, chunk_rows=chunk_rows)
-        _drain(
-            store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
-            megabatch=megabatch, prefetch_depth=prefetch_depth,
-            host_id=h, num_hosts=num_hosts, counters=counters,
-            launch_key="gram_launches",
-        )
-        accs.append(acc)
-    _bump(counters, gram_passes=1)
-    acc = accs[0]
-    for other in accs[1:]:
-        acc.merge(other)
-    return jnp.asarray(acc.finalize(means=means))
+    with trace.span("ingest.gram_pass", n_hat=int(support.size),
+                    num_hosts=num_hosts, megabatch=megabatch):
+        for h in range(num_hosts):
+            acc = StreamingGram(support, impl=impl, chunk_rows=chunk_rows)
+            _drain(
+                store, acc, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
+                megabatch=megabatch, prefetch_depth=prefetch_depth,
+                host_id=h, num_hosts=num_hosts, counters=counters,
+                launch_key="gram_launches",
+            )
+            accs.append(acc)
+        _bump(counters, gram_passes=1)
+        acc = accs[0]
+        for other in accs[1:]:
+            acc.merge(other)
+        out = jnp.asarray(acc.finalize(means=means))
+        trace.device_sync(out)
+    return out
 
 
 def sparse_stats(

@@ -100,6 +100,43 @@ def test_prefetch_order_matches_synchronous_iterator(setup):
     assert int(sync.count) == int(pre.count)
 
 
+def test_prefetch_stall_accounting_read_bound():
+    """A slow producer (read-bound pass) must show up as CONSUMER stall:
+    the consumer blocks on an empty queue — the blindness this PR fixes
+    (before, a stalled pipeline and a saturated one looked identical)."""
+    import time as _time
+
+    stats = {}
+
+    def slow_src():
+        for i in range(5):
+            _time.sleep(0.02)
+            yield i
+
+    assert list(prefetch(slow_src(), size=2, stats=stats)) == list(range(5))
+    assert stats["items"] == 5
+    assert stats["consumer_stall_s"] > 0.0
+    assert stats.get("producer_stall_s", 0.0) < stats["consumer_stall_s"]
+
+
+def test_prefetch_stall_accounting_reduce_bound():
+    """A slow consumer (reduce-bound pass) must show up as PRODUCER stall:
+    the worker blocks on a full queue."""
+    import time as _time
+
+    stats = {}
+    out = []
+    for x in prefetch(iter(range(6)), size=1, stats=stats):
+        _time.sleep(0.02)
+        out.append(x)
+    assert out == list(range(6))
+    assert stats["items"] == 6
+    assert stats["producer_stall_s"] > 0.0
+    assert stats.get("consumer_stall_s", 0.0) < stats["producer_stall_s"]
+    # queue stayed warm: mean occupancy near the buffer size
+    assert stats["occupancy_sum"] / stats["items"] > 0.5
+
+
 def test_prefetch_propagates_reader_exception(setup):
     """A reader-thread failure (row too wide for chunk_nnz, detected while
     building the chunk plan) must surface in the consumer, not truncate
@@ -267,6 +304,10 @@ def test_fit_components_streaming_is_two_passes(setup):
     assert diag["ingest"]["screen_launches"] == per_pass
     assert diag["ingest"]["gram_launches"] == per_pass
     assert diag["ingest"]["chunks"] == 2 * n_chunks
+    # stall accounting rides along on every prefetched pass (>= 0; which
+    # side stalls depends on machine load, presence is the contract)
+    assert diag["ingest"]["prefetch_consumer_stall_s"] >= 0.0
+    assert diag["ingest"]["prefetch_producer_stall_s"] >= 0.0
     # deflated components stay disjoint (paper-style word sets)
     sup = [set(r.support.tolist()) for r in rs]
     assert not (sup[0] & sup[1]) and not (sup[0] & sup[2])

@@ -1,0 +1,344 @@
+"""Observability layer: span tracing, metrics registry, and their wiring
+into the fit/ingest/serve paths.
+
+Covers the PR-6 acceptance surface: trace-export schema round-trip (spans
+nest, Chrome JSON loads, self time sums to <= parent total), registry
+merge semantics, the diagnostics-dict-as-view contract on
+`fit_components`, the streaming-fit span tree (exactly 2 corpus passes),
+the surfaced fused-solver telemetry (`BCDResult.kernel_obj`,
+``solver.sweeps``), and the small-count percentile fix in the serve
+latency report."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SPCAConfig, fit_components
+from repro.core.bcd import solve_bcd, solve_bcd_many
+from repro.data import make_corpus
+from repro.obs import Counter, Gauge, Histogram, Registry, metrics, trace
+from repro.serve.batcher import LatencyStats
+from repro.sparse import write_corpus
+
+
+@pytest.fixture()
+def fresh_registry():
+    with metrics.use_registry() as reg:
+        yield reg
+
+
+# ----------------------------------------------------------------- tracing
+
+def test_spans_nest_and_self_time_bounds():
+    with trace.enable() as t:
+        with trace.span("outer", layer=1):
+            with trace.span("inner.a"):
+                time.sleep(0.01)
+            with trace.span("inner.b"):
+                time.sleep(0.01)
+    roots = t.roots()
+    assert [s.name for s in roots] == ["outer"]
+    outer = roots[0]
+    assert [c.name for c in outer.children] == ["inner.a", "inner.b"]
+    assert outer.attrs == {"layer": 1}
+    # children fit inside the parent; self = total - sum(children)
+    assert sum(c.total_s for c in outer.children) <= outer.total_s + 1e-9
+    assert outer.self_s == pytest.approx(
+        outer.total_s - sum(c.total_s for c in outer.children))
+    for c in outer.children:
+        assert c.t0 >= outer.t0 and c.t1 <= outer.t1
+
+
+def test_chrome_trace_schema_round_trip(tmp_path):
+    with trace.enable() as t:
+        with trace.span("pass", n=np.int64(3)):   # numpy attr must coerce
+            with trace.span("step"):
+                pass
+    path = str(tmp_path / "trace.json")
+    t.dump_chrome_trace(path)
+    with open(path) as f:
+        doc = json.load(f)                        # loads = Perfetto-loadable
+    assert doc["displayTimeUnit"] == "ms"
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["name"] for e in xs} == {"pass", "step"}
+    assert metas and metas[0]["name"] == "thread_name"
+    by = {e["name"]: e for e in xs}
+    assert by["pass"]["args"] == {"n": 3}         # json int, not np.int64
+    # nesting is visible in the timestamps: step inside pass
+    assert by["step"]["ts"] >= by["pass"]["ts"]
+    assert (by["step"]["ts"] + by["step"]["dur"]
+            <= by["pass"]["ts"] + by["pass"]["dur"] + 1e-6)
+    # tree export agrees
+    tree = t.tree()
+    assert tree[0]["name"] == "pass"
+    assert tree[0]["children"][0]["name"] == "step"
+    assert "pass" in t.tree_str()
+
+
+def test_spans_on_worker_threads_get_own_roots():
+    with trace.enable() as t:
+        def work():
+            with trace.span("worker.task"):
+                pass
+
+        with trace.span("main.task"):
+            th = threading.Thread(target=work, name="w0")
+            th.start()
+            th.join()
+    names = {s.name for s in t.roots()}
+    assert names == {"main.task", "worker.task"}   # no cross-thread nesting
+    worker = [s for s in t.roots() if s.name == "worker.task"][0]
+    assert worker.tid == "w0"
+
+
+def test_span_is_noop_without_tracer():
+    assert trace.active() is None
+    with trace.span("nope") as sp:
+        pass
+    assert sp is trace.span("still.nope")          # the shared singleton
+    assert trace.device_sync(None) is None
+
+
+def test_find_and_enable_restores_previous():
+    outer_tracer = trace.Tracer()
+    trace.install(outer_tracer)
+    try:
+        with trace.enable() as inner:
+            with trace.span("x"):
+                pass
+            assert trace.active() is inner
+        assert trace.active() is outer_tracer
+        assert inner.find("x") and not outer_tracer.find("x")
+    finally:
+        trace.install(None)
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_counter_gauge_basics(fresh_registry):
+    c = metrics.counter("a.b")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    assert metrics.counter("a.b") is c             # get-or-create
+    g = metrics.gauge("a.depth")
+    g.set(7)
+    g.set(3)
+    assert g.snapshot() == 3.0
+    assert metrics.counter("a.int").snapshot() == 0  # integral -> int
+    metrics.counter("a.int").inc(2)
+    assert metrics.counter("a.int").snapshot() == 2
+
+
+def test_registry_type_mismatch_raises(fresh_registry):
+    metrics.counter("dual.use")
+    with pytest.raises(TypeError, match="dual.use"):
+        metrics.gauge("dual.use")
+
+
+def test_histogram_small_count_percentile_clamped():
+    """The satellite fix: p99 of n < 100 samples must NOT interpolate to
+    the sample max.  With 10 samples and one outlier, nearest-rank under
+    the (n-1)/n clamp reads the second-largest."""
+    h = Histogram("lat")
+    h.observe_many([1.0] * 9 + [100.0])            # one slow warm-up call
+    assert h.percentile(99) == 1.0                 # NOT ~91 (np interp)
+    assert h.percentile(50) == 1.0
+    assert h.percentile(100) == 1.0                # clamp caps at (n-1)/n
+    # monotone in q, and from n >= 100 the standard nearest-rank applies:
+    # p99 of 0..99 is the ceil(0.99*100) = 99th order statistic = 98
+    h2 = Histogram("lat2")
+    h2.observe_many(list(range(100)))
+    assert h2.percentile(99) == 98
+    assert h2.percentile(50) == 49
+    assert h2.percentile(99) >= h2.percentile(50)
+    snap = h.snapshot()
+    assert snap["count"] == 10 and snap["max"] == 100.0
+    assert snap["p99"] == 1.0
+
+
+def test_histogram_window_bounds_memory_not_lifetime():
+    h = Histogram("w", window=4)
+    h.observe_many([10.0, 20.0, 1.0, 2.0, 3.0, 4.0])
+    assert h.count == 6                            # lifetime
+    assert h.total == 40.0
+    # window forgot the 20.0, and the clamp caps p100 at the (n-1)/n rank
+    # of the surviving window [1, 2, 3, 4] -> 3.0
+    assert h.percentile(100) == 3.0
+    assert h.snapshot()["max"] == 20.0             # lifetime max remembered
+
+
+def test_registry_merge_across_components():
+    """Partial registries pool like partial Screens: counters add, gauges
+    take the freshest write, histograms pool windows + moments."""
+    a, b = Registry(), Registry()
+    a.counter("n").inc(2)
+    b.counter("n").inc(3)
+    a.gauge("depth").set(1.0)
+    time.sleep(0.002)
+    b.gauge("depth").set(9.0)                      # fresher write wins
+    a.histogram("h").observe_many([1.0, 2.0])
+    b.histogram("h").observe_many([3.0])
+    b.counter("only.b").inc()
+    a.merge(b)
+    assert a.value("n") == 5
+    assert a.value("depth") == 9.0
+    hs = a.value("h")
+    assert hs["count"] == 3 and hs["sum"] == 6.0 and hs["max"] == 3.0
+    assert a.value("only.b") == 1                  # new names adopted
+    assert b.value("n") == 3                       # source unchanged
+
+
+def test_registry_snapshot_and_jsonl_dump(tmp_path, fresh_registry):
+    metrics.counter("x.launches").inc(4)
+    metrics.histogram("x.t").observe(0.5)
+    path = str(tmp_path / "m.jsonl")
+    fresh_registry.dump_jsonl(path, extra={"run": "test"})
+    fresh_registry.dump_jsonl(path)
+    with open(path) as f:
+        lines = [json.loads(line) for line in f]
+    assert len(lines) == 2                         # appends a time series
+    assert lines[0]["run"] == "test"
+    assert lines[0]["metrics"]["x.launches"] == 4
+    assert lines[0]["metrics"]["x.t"]["count"] == 1
+
+
+# -------------------------------------------- diagnostics-dict-as-view
+
+def _toy_matrix(m=80, n=50, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n))
+    A[:, :5] += 2.5 * rng.normal(size=(m, 1))
+    return A
+
+
+@pytest.mark.parametrize("batch_evals", [0, 4])
+def test_fit_diagnostics_dict_is_registry_view(batch_evals, fresh_registry):
+    """The compatibility contract: the `diagnostics=` dict and the metrics
+    registry are written from the same code path, so the dict's totals
+    equal the registry's counters on a fresh registry."""
+    cfg = SPCAConfig(max_sweeps=6, lam_search_evals=4,
+                     batch_evals=batch_evals,
+                     batch_deflation=batch_evals > 0)
+    diag = {}
+    fit_components(_toy_matrix(), 2, 4, cfg=cfg, diagnostics=diag)
+    reg = fresh_registry
+    assert reg.value("solver.launches") == diag["solve_launches"]
+    assert reg.value("cov.builds") == diag["cov_builds"]
+    assert reg.value("cov.slices") == diag["cov_slices"]
+    assert reg.value("search.evals") == sum(
+        d["evals"] for d in diag["components"])
+    assert reg.value("search.warm_starts") == sum(
+        d["warm_starts"] for d in diag["components"])
+    sweeps = reg.value("solver.sweeps")
+    assert sweeps["count"] >= sum(1 for _ in diag["components"])
+    assert sweeps["sum"] > 0
+
+
+def test_fit_span_tree_matches_launch_diagnostics(fresh_registry):
+    cfg = SPCAConfig(max_sweeps=6, lam_search_evals=4)
+    diag = {}
+    with trace.enable() as t:
+        fit_components(_toy_matrix(seed=1), 2, 4, cfg=cfg, diagnostics=diag)
+    assert len(t.find("fit.components")) == 1
+    assert len(t.find("fit.component")) == 2
+    # one solver.eval span per sequential evaluation
+    assert len(t.find("solver.eval")) == sum(
+        d["evals"] for d in diag["components"])
+    assert len(t.find("cov.build")) == diag["cov_builds"]
+
+
+# ------------------------------------------------- streaming span tree
+
+def test_streaming_fit_trace_shows_two_corpus_passes(tmp_path,
+                                                     fresh_registry):
+    """PR-6 acceptance: the span tree of a streaming 3-component fit shows
+    exactly 2 corpus passes with the per-megabatch dispatches visible, and
+    the whole thing exports to loadable Chrome JSON."""
+    corpus = make_corpus(400, 900, topics={"t": ["a", "b", "c"]}, seed=5)
+    store = write_corpus(corpus, str(tmp_path / "csr"), shard_nnz=20_000)
+    cfg = SPCAConfig(max_sweeps=5, lam_search_evals=4,
+                     chunk_nnz=1024, chunk_rows=64, megabatch_chunks=4)
+    diag = {}
+    with trace.enable() as t:
+        fit_components(store, 3, target_card=4, cfg=cfg, diagnostics=diag)
+    assert diag["corpus_passes"] == 2
+    screen = t.find("ingest.screen_pass")
+    gram = t.find("ingest.gram_pass")
+    assert len(screen) == 1 and len(gram) == 1     # exactly 2 passes
+    # per-megabatch dispatch spans nest under their pass and agree with
+    # the ingest launch counters
+    mb_screen = [c for c in screen[0].children if c.name == "ingest.megabatch"]
+    mb_gram = [c for c in gram[0].children if c.name == "ingest.megabatch"]
+    assert len(mb_screen) == diag["ingest"]["screen_launches"]
+    assert len(mb_gram) == diag["ingest"]["gram_launches"]
+    assert sum(c.attrs["chunks"] for c in mb_screen + mb_gram) \
+        == diag["ingest"]["chunks"]
+    # the gram pass hangs off the fit's cov.build (O(1) solve/build
+    # structure: ONE build serves all 3 components)
+    builds = t.find("cov.build")
+    assert len(builds) == 1 and gram[0] in builds[0].children
+    # registry mirrored the ingest tallies and the stall accounting
+    reg = fresh_registry
+    assert reg.value("ingest.screen_passes") == 1
+    assert reg.value("ingest.gram_passes") == 1
+    assert reg.value("ingest.chunks") == diag["ingest"]["chunks"]
+    assert reg.value("ingest.prefetch.consumer_stall_s") >= 0.0
+    doc = t.to_chrome_trace()
+    json.loads(json.dumps(doc))                    # schema survives a dump
+    assert {"ingest.screen_pass", "ingest.gram_pass", "fit.components"} \
+        <= {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+
+
+# ------------------------------------------- fused-solver telemetry
+
+def test_bcd_result_surfaces_kernel_objective(fresh_registry):
+    """Satellite 1: the sweeps/objective the fused kernels compute on-chip
+    come back through BCDResult instead of being discarded."""
+    rng = np.random.default_rng(7)
+    B = rng.normal(size=(30, 12))
+    Sigma = (B.T @ B / 30).astype(np.float32)
+    res = solve_bcd(Sigma, 0.05, solver_impl="fused_ref", max_sweeps=6)
+    assert res.kernel_obj is not None
+    # the kernel's early-exit objective is barrier-free: F(X) =
+    # Tr(Sigma X) - lam||X||_1 - (Tr X)^2/2 (differs from .obj by beta*logdet)
+    X = np.asarray(res.X)
+    f = float((Sigma * X).sum() - 0.05 * np.abs(X).sum()
+              - 0.5 * np.trace(X) ** 2)
+    assert float(res.kernel_obj) == pytest.approx(f, rel=1e-3, abs=1e-4)
+    # jnp path has no kernel objective (its exit uses the augmented obj)
+    res_jnp = solve_bcd(Sigma, 0.05, solver_impl="jnp", max_sweeps=6)
+    assert res_jnp.kernel_obj is None
+    # batched path surfaces it per problem
+    many = solve_bcd_many([Sigma, Sigma[:8, :8]], [0.05, 0.04], impl="ref",
+                          max_sweeps=6)
+    assert all(r.kernel_obj is not None for r in many)
+    assert int(many[0].sweeps) >= 1
+
+
+# ------------------------------------------------- serve latency stats
+
+def test_latency_stats_small_count_p99_not_inflated(fresh_registry):
+    """Satellite 3: LatencyStats on the shared Histogram — p99 of a
+    10-sample window reads the second-largest sample instead of
+    interpolating next to the warm-up outlier."""
+    st = LatencyStats()
+    now = 100.0
+    st.record([0.001] * 9 + [0.5], now)            # one 500ms warm-up
+    s = st.snapshot()
+    assert s["count"] == 10
+    assert s["p99_ms"] == pytest.approx(1.0)       # NOT ~455ms
+    assert s["p99_ms"] >= s["p50_ms"] >= 0.0
+    assert s["docs_per_s"] > 0.0
+    # report shape is unchanged for existing consumers
+    assert set(s) == {"count", "p50_ms", "p99_ms", "docs_per_s"}
+    # and the samples were mirrored into the process registry
+    assert metrics.get_registry().value("serve.latency_s")["count"] == 10
+
+
+def test_latency_stats_empty_snapshot():
+    s = LatencyStats().snapshot()
+    assert s == {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0, "docs_per_s": 0.0}
