@@ -18,6 +18,11 @@ megabatch.  Reported per leg:
 union-support Gram) instead of the pre-PR-5 1 + K, with one ingest
 dispatch per pass-megabatch (`fit_components` diagnostics counters).
 
+``ingest_resume_overhead_*`` prices the PR-7 reliability layer: a screen
+pass with pass-checkpointing at the default cadence vs the stock pass —
+the "integrity + resume hooks are off the hot loop" claim as a gated
+number rather than an assertion.
+
 ``run_smoke`` is the --quick row: one small corpus, screen legs only.
 """
 from __future__ import annotations
@@ -144,6 +149,40 @@ def _fit_passes_row(store, *, chunk_nnz, chunk_rows, megabatch, tag):
     }
 
 
+def _resume_overhead_row(store, *, chunk_nnz, chunk_rows, megabatch, tag):
+    """The reliability layer's cost at default cadence, measured not
+    asserted: a screen pass with checkpointing ON (fresh resume dir per
+    rep, so nothing is skipped) vs the stock pass.  The checkpointed time
+    is the gated number; the stock time and the ratio ride in ``derived``
+    so a regression report shows WHERE the time went."""
+    geometry = dict(chunk_nnz=chunk_nnz, chunk_rows=chunk_rows)
+
+    def stock():
+        return sparse_feature_variances(store, megabatch=megabatch,
+                                        **geometry)
+
+    def checkpointed():
+        with tempfile.TemporaryDirectory() as rd:
+            return sparse_feature_variances(
+                store, megabatch=megabatch, **geometry,
+                resume_dir=rd, checkpoint_every=16,
+            )
+
+    t_stock = _bench_pass(stock)
+    t_ckpt = _bench_pass(checkpointed)
+    n_chunks = store.n_chunks(**geometry)
+    n_batches = -(-n_chunks // megabatch)
+    return {
+        "name": f"ingest_resume_overhead_{tag}",
+        "us_per_call": t_ckpt * 1e6,
+        "derived": (
+            f"stock={t_stock * 1e6:.0f}us overhead={t_ckpt / t_stock:.3f}x "
+            f"cadence=16 megabatches={n_batches} "
+            f"ckpts={-(-n_batches // 16) + 1}"
+        ),
+    }
+
+
 def run(n_docs: int = 4000, n_words: int = 20_000):
     """Full ingest comparison: screen + Gram on an NYTimes-shaped slice."""
     corpus = make_corpus(n_docs, n_words, topics={"t": ["a", "b", "c", "d"]},
@@ -157,6 +196,10 @@ def run(n_docs: int = 4000, n_words: int = 20_000):
             batch_docs=512, tag=f"{n_docs}x{n_words}",
             gram_support=support,
         )
+        rows.append(_resume_overhead_row(
+            store, chunk_nnz=16_384, chunk_rows=512, megabatch=8,
+            tag=f"{n_docs}x{n_words}",
+        ))
         rows.append(_fit_passes_row(
             store, chunk_nnz=16_384, chunk_rows=512, megabatch=8,
             tag=f"{n_docs}x{n_words}",

@@ -21,9 +21,23 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
 
 import jax
 import numpy as np
+
+DATA_NAME = "host_00000.npz"
+
+
+def _step_of(dirname: str) -> int | None:
+    """Parse ``step_NNNNNNNNN`` -> step, or None for anything else a crash
+    or a stray file may have left in the checkpoint root."""
+    if not dirname.startswith("step_") or dirname.endswith(".tmp"):
+        return None
+    try:
+        return int(dirname.split("_")[1])
+    except (IndexError, ValueError):
+        return None
 
 
 def _flatten(tree):
@@ -44,7 +58,7 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     os.makedirs(tmp, exist_ok=True)
     flat, _ = _flatten(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    np.savez(os.path.join(tmp, "host_00000.npz"), **arrays)
+    np.savez(os.path.join(tmp, DATA_NAME), **arrays)
     manifest = {
         "step": step,
         "complete": True,
@@ -62,17 +76,28 @@ def save(ckpt_dir: str, step: int, tree) -> str:
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest RESTORABLE step: a checkpoint counts only when its name
+    parses, its manifest is readable JSON marked ``complete``, and the
+    data file exists — everything else (leftover ``.tmp`` dirs, torn
+    manifests, a manifest whose npz never landed) is what a crashed
+    writer leaves behind, and is skipped rather than crashing the restart
+    that is trying to recover from that very crash."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and not d.endswith(".tmp"):
-            mf = os.path.join(ckpt_dir, d, "manifest.json")
-            if os.path.exists(mf):
-                with open(mf) as f:
-                    m = json.load(f)
-                if m.get("complete"):
-                    steps.append(int(d.split("_")[1]))
+        step = _step_of(d)
+        if step is None:
+            continue
+        mf = os.path.join(ckpt_dir, d, "manifest.json")
+        try:
+            with open(mf) as f:
+                m = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if m.get("complete") and os.path.exists(
+                os.path.join(ckpt_dir, d, DATA_NAME)):
+            steps.append(step)
     return max(steps) if steps else None
 
 
@@ -81,7 +106,14 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     ShapeDtypeStructs).  ``shardings``: matching pytree of NamedSharding for
     elastic placement onto the current mesh (None -> default device)."""
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
-    data = np.load(os.path.join(d, "host_00000.npz"))
+    try:
+        data = np.load(os.path.join(d, DATA_NAME))
+    except (OSError, ValueError, zipfile.BadZipFile) as e:
+        raise RuntimeError(
+            f"checkpoint step {step} at {d} is corrupt or missing "
+            f"({type(e).__name__}: {e}); pick a restorable step with "
+            "latest_step()"
+        ) from e
     flat_like, treedef = _flatten(like_tree)
     flat_shard, _ = _flatten(shardings) if shardings is not None else ({}, None)
     leaves = []
@@ -99,12 +131,13 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
 
 
 def prune(ckpt_dir: str, keep: int = 3):
+    """Retain the ``keep`` newest steps; unparsable directory names (crash
+    debris) are left alone rather than crashing the retention sweep."""
     if not os.path.isdir(ckpt_dir):
         return
     steps = sorted(
-        int(d.split("_")[1])
-        for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp")
+        s for s in (_step_of(d) for d in os.listdir(ckpt_dir))
+        if s is not None
     )
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"), ignore_errors=True)

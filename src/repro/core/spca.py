@@ -88,6 +88,12 @@ class SPCAConfig:
     csr_impl: str = "auto"       # 'auto' | 'ref' | 'pallas' for the CSR kernels
     megabatch_chunks: int = 8    # chunks per ingest launch (grid=(C,) batch)
     ingest_prefetch: int = 2     # chunk-prefetch queue depth (0 = synchronous)
+    # Reliability knobs (sparse/store.py retrying reader + sparse/resume.py
+    # pass checkpoints — see ROADMAP "Reliability"):
+    io_retries: int = 2          # transient-OSError read retries per shard file
+    io_backoff_s: float = 0.05   # initial retry backoff (doubles per attempt)
+    resume_dir: str | None = None  # pass-checkpoint root (None = no resume)
+    checkpoint_every: int = 16   # megabatches between pass checkpoints
 
 
 def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
@@ -111,6 +117,9 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
             megabatch=cfg.megabatch_chunks,
             prefetch_depth=cfg.ingest_prefetch,
             counters=counters,
+            io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
+            resume_dir=cfg.resume_dir,
+            checkpoint_every=cfg.checkpoint_every,
         )
     if is_covariance:
         Sigma = jnp.asarray(data)
@@ -875,6 +884,7 @@ def _fit_components(
                     ingest=dict(ingest),
                     corpus_passes=ingest.get("screen_passes", 0)
                     + ingest.get("gram_passes", 0),
+                    resumed_megabatches=ingest.get("resumed_megabatches", 0),
                 )
     elif deflation == "project":
         if stats is not None:

@@ -28,6 +28,8 @@ single psum at finalise time (see core.distributed), or
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -74,6 +76,26 @@ class StreamingAccumulator:
     def _check_mergeable(self, other) -> None:
         pass
 
+    # -- resume support (sparse/resume.py) --------------------------------
+    # The same summed moments `merge` pools, exported as host arrays so a
+    # killed pass can checkpoint them at a megabatch boundary and a resumed
+    # pass can re-load them — state_dict/load_state round-trip exactly, and
+    # state_signature() is the JSON-able identity a checkpoint is only
+    # valid against (same accumulator kind + shape + dtype).
+
+    def state_dict(self) -> dict:
+        """Summed state as np.savez-able host arrays."""
+        raise NotImplementedError
+
+    def load_state(self, state: dict) -> "StreamingAccumulator":
+        """Restore state produced by an equal-signature ``state_dict``."""
+        raise NotImplementedError
+
+    def state_signature(self) -> dict:
+        """JSON-able configuration identity; checkpoints from accumulators
+        with a different signature must be ignored, not loaded."""
+        raise NotImplementedError
+
 
 class StreamingStats(StreamingAccumulator):
     """One-pass per-column mean/variance accumulator."""
@@ -116,6 +138,22 @@ class StreamingStats(StreamingAccumulator):
 
     def _check_mergeable(self, other) -> None:
         assert self.n == other.n
+
+    def state_dict(self) -> dict:
+        return {
+            "sum": self.sum.copy(),
+            "sumsq": self.sumsq.copy(),
+            "count": np.asarray(self.count, np.int64),
+        }
+
+    def load_state(self, state: dict) -> "StreamingStats":
+        self.sum = np.asarray(state["sum"], np.float64).copy()
+        self.sumsq = np.asarray(state["sumsq"], np.float64).copy()
+        self.count = int(state["count"])
+        return self
+
+    def state_signature(self) -> dict:
+        return {"acc": "stats", "n": int(self.n)}
 
     def finalize(self, *, center: bool = True) -> Screen:
         m = max(self.count, 1)   # guards the division only
@@ -241,6 +279,39 @@ class StreamingGram(StreamingAccumulator):
         # (and drop its compensation) — fail loudly like every other
         # partial mismatch instead
         assert self.g.dtype == other.g.dtype, (self.g.dtype, other.g.dtype)
+
+    def state_dict(self) -> dict:
+        # np.asarray(g) blocks on the device value — a checkpoint is a
+        # synchronization point by construction, so the saved moments are
+        # exactly what the completed megabatches folded in.
+        d = {
+            "g": np.asarray(self.g),
+            "count": np.asarray(self.count, np.int64),
+        }
+        if self._err is not None:
+            d["err"] = np.asarray(self._err)
+        return d
+
+    def load_state(self, state: dict) -> "StreamingGram":
+        self.g = jnp.asarray(np.asarray(state["g"]), self.g.dtype)
+        if self._err is not None:
+            self._err = (
+                jnp.asarray(np.asarray(state["err"]), self.g.dtype)
+                if "err" in state else jnp.zeros_like(self.g)
+            )
+        self.count = int(state["count"])
+        return self
+
+    def state_signature(self) -> dict:
+        return {
+            "acc": "gram",
+            "n_hat": int(self.support.size),
+            "support_crc": int(
+                zlib.crc32(np.ascontiguousarray(self.support).tobytes())
+                & 0xFFFFFFFF
+            ),
+            "dtype": str(self.g.dtype),
+        }
 
     def finalize(self, *, means: np.ndarray | None = None) -> np.ndarray:
         m = max(self.count, 1)

@@ -94,47 +94,86 @@ def prefetch(it, size: int = 2, *, stats: dict | None = None):
     The two stall keys are written from different threads but never the
     same key from both, so plain dict arithmetic is race-free under the
     GIL.  The ingest engine forwards these into the shared metrics
-    registry as ``ingest.prefetch.*`` (see `repro.sparse.engine`)."""
+    registry as ``ingest.prefetch.*`` (see `repro.sparse.engine`).
+
+    Abandonment: if the consumer stops early (``break``, an exception, or
+    generator ``close()``), the worker is signalled via a cancellation
+    event, unblocked (its pending ``q.put`` uses a polling timeout), joined,
+    and the SOURCE iterator is closed — so a half-consumed pass cannot
+    leave a thread parked on a full queue pinning the ring-buffered
+    megabatch arrays (or holding mmap handles) for the process lifetime."""
     q: queue.Queue = queue.Queue(maxsize=size)
     _END = object()
+    cancel = threading.Event()
+
+    def _put(x) -> bool:
+        """Blocking put that aborts when the consumer is gone."""
+        while not cancel.is_set():
+            try:
+                q.put(x, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def worker():
         try:
-            for x in it:
-                if stats is None:
-                    q.put(x)
-                else:
-                    t0 = time.perf_counter()
-                    q.put(x)
-                    stats["producer_stall_s"] = (
-                        stats.get("producer_stall_s", 0.0)
-                        + (time.perf_counter() - t0)
-                    )
-        except BaseException as e:  # noqa: BLE001 — re-raised in consumer
-            q.put(_PrefetchError(e))
-        else:
-            q.put(_END)
+            try:
+                for x in it:
+                    if stats is None:
+                        if not _put(x):
+                            return
+                    else:
+                        t0 = time.perf_counter()
+                        if not _put(x):
+                            return
+                        stats["producer_stall_s"] = (
+                            stats.get("producer_stall_s", 0.0)
+                            + (time.perf_counter() - t0)
+                        )
+            except BaseException as e:  # noqa: BLE001 — re-raised in consumer
+                _put(_PrefetchError(e))
+            else:
+                _put(_END)
+        finally:
+            # release the source's resources (ring buffers, mmaps) in the
+            # thread that owns the iteration, whether we finished, failed,
+            # or were cancelled
+            close = getattr(it, "close", None)
+            if close is not None:
+                close()
 
     t = threading.Thread(target=worker, daemon=True)
     t.start()
-    while True:
-        if stats is None:
-            x = q.get()
-        else:
-            stats["occupancy_sum"] = stats.get("occupancy_sum", 0) + q.qsize()
-            t0 = time.perf_counter()
-            x = q.get()
-            stats["consumer_stall_s"] = (
-                stats.get("consumer_stall_s", 0.0)
-                + (time.perf_counter() - t0)
-            )
-        if x is _END:
-            return
-        if isinstance(x, _PrefetchError):
-            raise x.exc
-        if stats is not None:
-            stats["items"] = stats.get("items", 0) + 1
-        yield x
+    try:
+        while True:
+            if stats is None:
+                x = q.get()
+            else:
+                stats["occupancy_sum"] = stats.get("occupancy_sum", 0) + q.qsize()
+                t0 = time.perf_counter()
+                x = q.get()
+                stats["consumer_stall_s"] = (
+                    stats.get("consumer_stall_s", 0.0)
+                    + (time.perf_counter() - t0)
+                )
+            if x is _END:
+                return
+            if isinstance(x, _PrefetchError):
+                raise x.exc
+            if stats is not None:
+                stats["items"] = stats.get("items", 0) + 1
+            yield x
+    finally:
+        # runs on exhaustion AND on abandonment (close()/break/throw):
+        # stop the worker, drain anything it already queued, and reap it.
+        cancel.set()
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join(timeout=5.0)
 
 
 def host_slice(global_batch: int, *, process_index: int | None = None,

@@ -41,6 +41,25 @@ from repro.data.corpus import NYTIMES_TOPICS, PUBMED_TOPICS, make_corpus
 from repro.obs import metrics, profile, trace
 
 _EXAMPLES = """\
+reliability examples:
+  # resumable streaming fit: pass checkpoints (accumulator state + the
+  # megabatch cursor) land in ckpt/ every 8 megabatches; if the fit is
+  # killed, re-running the SAME command restarts each screen/Gram pass
+  # from its last completed boundary instead of re-streaming the corpus
+  # ("resumed N megabatch(es)" in the final report shows the skip)
+  python -m repro.launch.spca_run --streaming --components 3 \\
+      --store-dir store/ --resume ckpt/ --checkpoint-every 8
+  # NOTE: resume needs a persistent --store-dir; checkpoints are keyed to
+  #       the store identity + chunk geometry, so changing --chunk-nnz /
+  #       --megabatch (or the corpus) safely falls back to a clean pass
+
+  # flaky storage: retry transient shard-read OSErrors up to 5 times with
+  # exponential backoff before giving up (absorbed retries are counted as
+  # ingest.retries in --metrics output; corrupt shards are NEVER retried
+  # — they raise ShardCorruptionError naming the shard)
+  python -m repro.launch.spca_run --streaming --io-retries 5 \\
+      --metrics m.jsonl
+
 observability examples:
   # span timeline of the whole fit (Perfetto-loadable) + metrics snapshot
   python -m repro.launch.spca_run --streaming --components 3 \\
@@ -76,6 +95,17 @@ def main():
     ap.add_argument("--chunk-rows", type=int, default=512)
     ap.add_argument("--megabatch", type=int, default=8,
                     help="chunks per ingest launch (grid=(C,) batch)")
+    ap.add_argument("--resume", default="", metavar="DIR",
+                    help="checkpoint streaming passes into DIR and resume "
+                         "a killed fit from the last completed megabatch "
+                         "boundary (see the reliability examples below)")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="megabatches between pass checkpoints (with "
+                         "--resume)")
+    ap.add_argument("--io-retries", type=int, default=2,
+                    help="transient shard-read OSError retries before "
+                         "giving up (exponential backoff; corruption is "
+                         "never retried)")
     ap.add_argument("--batch-evals", type=int, default=0,
                     help=">1: run each lambda-search round as ONE batched "
                          "solve launch of this many evaluations")
@@ -122,7 +152,10 @@ def _run(args):
     cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8,
                      chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows,
                      megabatch_chunks=args.megabatch,
-                     batch_evals=args.batch_evals)
+                     batch_evals=args.batch_evals,
+                     io_retries=args.io_retries,
+                     resume_dir=args.resume or None,
+                     checkpoint_every=args.checkpoint_every)
 
     ingest: dict = {}
     if args.streaming:
@@ -141,10 +174,16 @@ def _run(args):
             megabatch=cfg.megabatch_chunks,
             prefetch_depth=cfg.ingest_prefetch,
             impl=cfg.csr_impl, counters=ingest,
+            io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
+            resume_dir=cfg.resume_dir,
+            checkpoint_every=cfg.checkpoint_every,
         )
+        resumed = ingest.get("resumed_megabatches", 0)
         print(f"  out-of-core variance screen: {time.time() - t0:.1f}s "
               f"(one pass over {store.nnz} nnz, "
-              f"{ingest.get('screen_launches', 0)} megabatch launch(es))")
+              f"{ingest.get('screen_launches', 0)} megabatch launch(es)"
+              + (f", resumed {resumed} megabatch(es)" if resumed else "")
+              + ")")
     else:
         mean, var = corpus.column_stats_exact()
 
@@ -184,6 +223,15 @@ def _run(args):
               f"{1 + args.components}), ingest launches: "
               f"{ingest.get('screen_launches', 0) + ingest.get('gram_launches', 0)} "
               f"over {ingest.get('chunks', 0)} chunk(s)")
+        extras = []
+        if ingest.get("resumed_megabatches"):
+            extras.append(f"resumed {ingest['resumed_megabatches']} "
+                          "megabatch(es) from checkpoint")
+        if ingest.get("io_retries"):
+            extras.append(f"absorbed {ingest['io_retries']} transient "
+                          "read error(s)")
+        if extras:
+            print("reliability: " + "; ".join(extras))
 
 
 if __name__ == "__main__":

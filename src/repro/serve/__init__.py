@@ -10,14 +10,17 @@ sparse PCs at production scale.
 End-to-end wiring lives in ``repro.launch.serve_topics``.
 """
 from . import batcher, drift, projector, registry
-from .batcher import BatcherConfig, LatencyStats, MicroBatcher
+from .batcher import (
+    BatcherConfig, LatencyStats, MicroBatcher, RequestShed, RequestTimeout,
+)
 from .drift import DriftMonitor, DriftReport
 from .projector import ProjectorPack, TopicProjector, pack_components
 from .registry import ModelRegistry, ModelVersion
 
 __all__ = [
     "batcher", "drift", "projector", "registry",
-    "BatcherConfig", "LatencyStats", "MicroBatcher",
+    "BatcherConfig", "LatencyStats", "MicroBatcher", "RequestShed",
+    "RequestTimeout",
     "DriftMonitor", "DriftReport",
     "ProjectorPack", "TopicProjector", "pack_components",
     "ModelRegistry", "ModelVersion",

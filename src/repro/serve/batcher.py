@@ -32,6 +32,23 @@ class BatcherConfig:
     max_batch: int = 64      # the ONE batch shape the projector ever sees
     max_wait_ms: float = 2.0  # coalescing window after the first request
     prefetch_depth: int = 2
+    # Graceful degradation under overload (0 = off for both):
+    deadline_ms: float = 0.0  # per-request budget; a request popped after
+    #                           this long in the queue fails fast with
+    #                           RequestTimeout instead of occupying a slot
+    max_queue: int = 0        # bound on queued requests; submits past it
+    #                           are shed immediately (RequestShed) rather
+    #                           than growing an unbounded backlog
+
+
+class RequestTimeout(TimeoutError):
+    """The request sat in the queue past ``cfg.deadline_ms`` — by the time
+    a batch slot opened, the client had already given up on the answer."""
+
+
+class RequestShed(RuntimeError):
+    """The submit queue is at ``cfg.max_queue``: the batcher rejects new
+    work at the door instead of queueing latency it can never repay."""
 
 
 class LatencyStats:
@@ -109,16 +126,32 @@ class MicroBatcher:
         self.observer = observer
         self.stats = LatencyStats()
         self.batches_served = 0
+        self.timeouts = 0        # requests expired past cfg.deadline_ms
+        self.shed = 0            # submits rejected at cfg.max_queue
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------- client
     def submit(self, word_ids, counts) -> Future:
-        """Enqueue one sparse document; resolves to its (k,) score row."""
+        """Enqueue one sparse document; resolves to its (k,) score row.
+
+        Over-capacity submits (``cfg.max_queue``) return an already-failed
+        future (`RequestShed`) — the client learns instantly, and the
+        backlog can't grow past what the deadline budget could ever
+        service.  The queue stays UNBOUNDED internally so the shutdown
+        sentinel can never block; capacity is enforced here at the door."""
         if self._stop.is_set():
             raise RuntimeError("batcher is stopped")
         r = _Request(word_ids, counts)
+        if self.cfg.max_queue > 0 and self._q.qsize() >= self.cfg.max_queue:
+            self.shed += 1
+            metrics.counter("serve.shed").inc()
+            r.future.set_exception(RequestShed(
+                f"submit queue at capacity ({self.cfg.max_queue}); "
+                "request shed"
+            ))
+            return r.future
         self._q.put(r)
         if self._stop.is_set():
             # stop() raced between our check and the put: its drain may
@@ -127,6 +160,24 @@ class MicroBatcher:
         return r.future
 
     # ------------------------------------------------------------- server
+    def _expired(self, r: "_Request") -> bool:
+        """Deadline check at pop time: a request that already overstayed
+        ``cfg.deadline_ms`` in the queue fails fast (`RequestTimeout`) and
+        never occupies a batch slot — under overload the batcher spends
+        its capacity on answers someone is still waiting for."""
+        if self.cfg.deadline_ms <= 0:
+            return False
+        waited = time.perf_counter() - r.t_submit
+        if waited * 1e3 <= self.cfg.deadline_ms:
+            return False
+        self.timeouts += 1
+        metrics.counter("serve.timeouts").inc()
+        r.future.set_exception(RequestTimeout(
+            f"request expired after {waited * 1e3:.1f}ms in queue "
+            f"(deadline {self.cfg.deadline_ms:.1f}ms)"
+        ))
+        return True
+
     def _collect(self):
         """Yield (requests, padded (max_batch, n) matrix) until stopped."""
         cfg = self.cfg
@@ -137,6 +188,8 @@ class MicroBatcher:
                 continue
             if first is None:       # shutdown sentinel
                 return
+            if self._expired(first):
+                continue
             reqs = [first]
             deadline = time.perf_counter() + cfg.max_wait_ms / 1e3
             while len(reqs) < cfg.max_batch:
@@ -149,7 +202,8 @@ class MicroBatcher:
                     break
                 if r is None:
                     break
-                reqs.append(r)
+                if not self._expired(r):
+                    reqs.append(r)
             X = np.zeros((cfg.max_batch, self.n), np.float32)
             live = []
             for r in reqs:
@@ -188,6 +242,18 @@ class MicroBatcher:
                 metrics.histogram("serve.batch_size").observe(len(reqs))
                 if self.observer is not None:  # off the response critical path
                     self.observer(X[: len(reqs)])
+
+    def snapshot(self) -> dict:
+        """Latency percentiles plus the degradation tallies — the one
+        read-out an operator needs to see overload (rising ``timeouts`` /
+        ``shed``) before it becomes an outage."""
+        s = self.stats.snapshot()
+        s.update(
+            batches=self.batches_served,
+            timeouts=self.timeouts,
+            shed=self.shed,
+        )
+        return s
 
     def start(self) -> "MicroBatcher":
         assert self._thread is None, "already started"

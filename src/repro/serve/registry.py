@@ -18,6 +18,8 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
+import zipfile
 from dataclasses import dataclass, field
 
 import jax
@@ -26,6 +28,7 @@ import numpy as np
 from repro import checkpoint
 from repro.core.elimination import Screen
 from repro.core.spca import PCResult
+from repro.obs import metrics
 
 from .projector import ProjectorPack, TopicProjector, pack_components
 
@@ -110,6 +113,25 @@ class ModelRegistry:
             self._active = mv
         return mv
 
+    def rollback_to_last_good(self) -> ModelVersion:
+        """Re-activate the newest version OLDER than the active one — the
+        bad-deploy escape hatch: one call returns the fleet to the model
+        that was serving before the latest register().  Raises LookupError
+        when there is nothing older to fall back to."""
+        with self._lock:
+            if self._active is None:
+                raise LookupError("registry has no active model")
+            older = [v for v in self._versions if v < self._active.version]
+            if not older:
+                raise LookupError(
+                    f"no version older than active v{self._active.version} "
+                    "to roll back to"
+                )
+            mv = self._versions[max(older)]
+            self._active = mv
+        metrics.counter("serve.registry.rollbacks").inc()
+        return mv
+
     # --------------------------------------------------------- persistence
     def _save(self, mv: ModelVersion) -> str:
         tree = {
@@ -162,17 +184,41 @@ class ModelRegistry:
         )
 
     def load_all(self) -> list[int]:
-        """Restore every persisted version; newest becomes active."""
+        """Restore every persisted version; newest loadable becomes active.
+
+        A corrupt version directory (truncated npz, torn manifest, missing
+        files — what a crashed writer or bad disk leaves behind) is
+        SKIPPED with a warning and a ``serve.registry.corrupt`` count, not
+        allowed to crash server startup: the fleet comes back up on every
+        version that still loads."""
         if self.root is None or not os.path.isdir(self.root):
             return []
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.root)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
+        steps = []
+        for d in os.listdir(self.root):
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                continue
+        loaded: list[int] = []
         with self._lock:
-            for s in steps:
-                self._versions[s] = self._load_version(s)
-            if steps:
-                self._active = self._versions[steps[-1]]
-        return steps
+            for s in sorted(steps):
+                try:
+                    self._versions[s] = self._load_version(s)
+                # RuntimeError is checkpoint.restore's "corrupt or missing"
+                # signal; the rest covers torn manifests and shape drift.
+                except (OSError, ValueError, KeyError, AssertionError,
+                        RuntimeError, json.JSONDecodeError,
+                        zipfile.BadZipFile) as e:
+                    metrics.counter("serve.registry.corrupt").inc()
+                    warnings.warn(
+                        f"registry: skipping corrupt version {s} at "
+                        f"{self.root}: {type(e).__name__}: {e}",
+                        RuntimeWarning, stacklevel=2,
+                    )
+                    continue
+                loaded.append(s)
+            if loaded:
+                self._active = self._versions[loaded[-1]]
+        return loaded

@@ -1,10 +1,15 @@
 """Out-of-core sparse corpus engine.
 
   store.py  — disk-backed sharded CSR store (writer, manifest, mmap reader,
-              fixed-shape padded chunk iterator)
+              fixed-shape padded chunk iterator) with manifest-v2 crc32
+              integrity (corruption -> typed ShardCorruptionError) and a
+              bounded-backoff retrying reader for transient OSErrors
   engine.py — streaming screen/Gram over a store through the CSR Pallas
               kernels, multi-host merge via combine_screens, and the
               (variances, build) stats pair the SPCA driver consumes
+  resume.py — atomic accumulator+cursor checkpoints at megabatch
+              boundaries, so a killed pass restarts where it stopped
+              instead of re-streaming the corpus
 
 The corresponding device kernels live in ``repro.kernels`` (csr_stats.py,
 csr_gram.py) with oracles in ``repro.kernels.ref`` and wrappers in
@@ -14,14 +19,16 @@ from .engine import (
     screen_and_gram_sparse, sparse_feature_variances, sparse_reduced_covariance,
     sparse_stats,
 )
+from .resume import DEFAULT_CHECKPOINT_EVERY, PassCheckpointer, pass_fingerprint
 from .store import (
     CSRChunk, CSRMegaBatch, CSRStoreWriter, DEFAULT_CHUNK_NNZ,
-    DEFAULT_CHUNK_ROWS, SparseCorpus, write_corpus,
+    DEFAULT_CHUNK_ROWS, ShardCorruptionError, SparseCorpus, write_corpus,
 )
 
 __all__ = [
     "CSRChunk", "CSRMegaBatch", "CSRStoreWriter", "DEFAULT_CHUNK_NNZ",
-    "DEFAULT_CHUNK_ROWS", "SparseCorpus", "write_corpus",
-    "screen_and_gram_sparse", "sparse_feature_variances",
+    "DEFAULT_CHUNK_ROWS", "DEFAULT_CHECKPOINT_EVERY", "PassCheckpointer",
+    "ShardCorruptionError", "SparseCorpus", "pass_fingerprint",
+    "write_corpus", "screen_and_gram_sparse", "sparse_feature_variances",
     "sparse_reduced_covariance", "sparse_stats",
 ]

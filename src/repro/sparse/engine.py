@@ -41,6 +41,7 @@ from repro.data.bow import StreamingGram, StreamingStats
 from repro.data.pipeline import prefetch
 from repro.obs import metrics, trace
 
+from .resume import DEFAULT_CHECKPOINT_EVERY, PassCheckpointer, pass_fingerprint
 from .store import DEFAULT_CHUNK_NNZ, DEFAULT_CHUNK_ROWS, SparseCorpus
 
 DEFAULT_MEGABATCH = 8
@@ -56,26 +57,66 @@ def _bump(counters: dict | None, **deltas) -> None:
         counters[k] = counters.get(k, 0) + d
 
 
+def _count(counters: dict | None, key: str, delta) -> None:
+    """Diagnostics-dict side only (for registry names that don't follow
+    the flat ``ingest.<key>`` scheme, e.g. ``ingest.resume.*``)."""
+    if counters is not None:
+        counters[key] = counters.get(key, 0) + delta
+
+
 def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
-           prefetch_depth, host_id, num_hosts, counters, launch_key):
+           prefetch_depth, host_id, num_hosts, counters, launch_key,
+           checkpointer: PassCheckpointer | None = None, kind: str = ""):
     """One streaming pass of ``acc`` over this host's shard slice: packed
     megabatches, prefetched one batch ahead, one dispatch per batch.
 
+    Resume (``checkpointer``): the pass loads the newest checkpoint whose
+    fingerprint matches (store identity + chunk geometry + host slice +
+    accumulator signature), restores the summed moments, and starts the
+    iterator at the saved megabatch boundary — completed megabatches are
+    never re-streamed (whole shards before the boundary are skipped
+    without a read).  The accumulator state + cursor are re-published
+    atomically every ``checkpointer.every`` megabatches and once more with
+    ``complete=True`` when the pass finishes, so a kill *between* passes
+    resumes the finished pass with zero streaming.
+
     Observability: each megabatch dispatch gets an ``ingest.megabatch``
     span (device-synced on the accumulator state, so the span measures the
-    reduction, not just async dispatch), and the prefetch queue's stall
+    reduction, not just async dispatch); transient-read retries absorbed
+    by the store land in ``counters['io_retries']`` (registry:
+    ``ingest.retries``); resume events land in ``ingest.resume.*`` and
+    ``counters['resumed_megabatches']``; and the prefetch queue's stall
     accounting lands in ``counters`` (``prefetch_consumer_stall_s`` /
     ``prefetch_producer_stall_s``) and the ``ingest.prefetch.*`` registry
     instruments — consumer stall means the pass is read-bound, producer
     stall means it is reduce-bound."""
+    start_batch = 0
+    fp = None
+    if checkpointer is not None:
+        fp = pass_fingerprint(
+            kind or launch_key, store, chunk_nnz=chunk_nnz,
+            chunk_rows=chunk_rows, megabatch=megabatch, host_id=host_id,
+            num_hosts=num_hosts, signature=acc.state_signature(),
+        )
+        hit = checkpointer.load(fp)
+        if hit is not None:
+            cursor, state, _complete = hit
+            acc.load_state(state)
+            start_batch = cursor
+            metrics.counter("ingest.resume.loads").inc()
+            metrics.counter("ingest.resume.megabatches_skipped").inc(cursor)
+            _count(counters, "resumed_megabatches", cursor)
+    retries0 = getattr(store, "io_retry_count", 0)
     it = store.iter_megabatches(
         chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
         host_id=host_id, num_hosts=num_hosts,
         ring=max(2, prefetch_depth + 2),
+        start_batch=start_batch,
     )
     pstats: dict = {}
     if prefetch_depth > 0:
         it = prefetch(it, size=prefetch_depth, stats=pstats)
+    done = start_batch
     for mb in it:
         with trace.span("ingest.megabatch", kind=launch_key,
                         chunks=int(mb.n_chunks)):
@@ -84,6 +125,20 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
                 tuple(getattr(acc, f) for f in acc._acc_fields)
             )
         _bump(counters, **{launch_key: 1, "chunks": mb.n_chunks})
+        done += 1
+        if checkpointer is not None and done % checkpointer.every == 0:
+            with trace.span("ingest.resume.checkpoint", kind=launch_key,
+                            cursor=done):
+                checkpointer.save(fp, done, acc.state_dict())
+            metrics.counter("ingest.resume.checkpoints").inc()
+            _count(counters, "resume_checkpoints", 1)
+    if checkpointer is not None:
+        checkpointer.save(fp, done, acc.state_dict(), complete=True)
+        metrics.counter("ingest.resume.checkpoints").inc()
+        _count(counters, "resume_checkpoints", 1)
+    dr = getattr(store, "io_retry_count", 0) - retries0
+    if dr:
+        _count(counters, "io_retries", dr)
     if pstats:
         cstall = pstats.get("consumer_stall_s", 0.0)
         wstall = pstats.get("producer_stall_s", 0.0)
@@ -102,6 +157,17 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
     return acc
 
 
+def _reliability(store: SparseCorpus, io_retries, io_backoff_s,
+                 resume_dir, checkpoint_every) -> PassCheckpointer | None:
+    """Apply the pass-level reliability knobs: retry policy onto the store
+    handle, and a `PassCheckpointer` when a resume root is given."""
+    if io_retries is not None or io_backoff_s is not None:
+        store.set_io_policy(io_retries=io_retries, io_backoff_s=io_backoff_s)
+    if not resume_dir:
+        return None
+    return PassCheckpointer(resume_dir, every=checkpoint_every)
+
+
 def sparse_feature_variances(
     store: SparseCorpus,
     *,
@@ -113,6 +179,10 @@ def sparse_feature_variances(
     prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
     counters: dict | None = None,
+    io_retries: int | None = None,
+    io_backoff_s: float | None = None,
+    resume_dir: str | None = None,
+    checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
 ) -> Screen:
     """One streaming pass: the Thm 2.1 screen input from CSR chunks.
 
@@ -121,6 +191,8 @@ def sparse_feature_variances(
     goes through `combine_screens` — byte-identical to what H real hosts
     would produce and merge.
     """
+    ckpt = _reliability(store, io_retries, io_backoff_s,
+                        resume_dir, checkpoint_every)
     partials = []
     with trace.span("ingest.screen_pass", nnz=int(store.nnz),
                     num_hosts=num_hosts, megabatch=megabatch):
@@ -131,6 +203,7 @@ def sparse_feature_variances(
                 megabatch=megabatch, prefetch_depth=prefetch_depth,
                 host_id=h, num_hosts=num_hosts, counters=counters,
                 launch_key="screen_launches",
+                checkpointer=ckpt, kind="screen",
             )
             partials.append(acc.finalize(center=center))
         _bump(counters, screen_passes=1)
@@ -151,11 +224,17 @@ def sparse_reduced_covariance(
     prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
     counters: dict | None = None,
+    io_retries: int | None = None,
+    io_backoff_s: float | None = None,
+    resume_dir: str | None = None,
+    checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
 ):
     """One streaming pass: Sigma_hat = A_S^T A_S / m (centred when
     ``means`` is given) on the surviving columns, straight from chunks.
     The partial accumulators pool DEVICE-side (`StreamingGram.merge` is a
     jnp add) — one host transfer at finalize."""
+    ckpt = _reliability(store, io_retries, io_backoff_s,
+                        resume_dir, checkpoint_every)
     support = np.asarray(support)
     accs = []
     with trace.span("ingest.gram_pass", n_hat=int(support.size),
@@ -167,6 +246,7 @@ def sparse_reduced_covariance(
                 megabatch=megabatch, prefetch_depth=prefetch_depth,
                 host_id=h, num_hosts=num_hosts, counters=counters,
                 launch_key="gram_launches",
+                checkpointer=ckpt, kind="gram",
             )
             accs.append(acc)
         _bump(counters, gram_passes=1)
@@ -189,16 +269,27 @@ def sparse_stats(
     prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
     counters: dict | None = None,
+    io_retries: int | None = None,
+    io_backoff_s: float | None = None,
+    resume_dir: str | None = None,
+    checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
 ):
     """The ``(variances, build)`` pair `core.spca` drives the lambda
     search with, computed out-of-core.  ``build(support)`` is one more
     streaming pass; the driver's covariance cache calls it ONCE per fit
-    (cross-component slicing), so a K-component fit costs 1 + 1 passes."""
+    (cross-component slicing), so a K-component fit costs 1 + 1 passes.
+
+    With ``resume_dir`` both passes checkpoint accumulator state + cursor
+    every ``checkpoint_every`` megabatches; a killed fit restarted with
+    the same arguments resumes each pass from its last completed boundary
+    (a pass that had finished re-streams NOTHING — its final moments are
+    reloaded from the ``complete`` checkpoint)."""
     screen = sparse_feature_variances(
         store, center=center, impl=impl,
         chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
         prefetch_depth=prefetch_depth, num_hosts=num_hosts,
-        counters=counters,
+        counters=counters, io_retries=io_retries, io_backoff_s=io_backoff_s,
+        resume_dir=resume_dir, checkpoint_every=checkpoint_every,
     )
     means = np.asarray(screen.means) if center else None
 
@@ -208,6 +299,8 @@ def sparse_stats(
             impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
             megabatch=megabatch, prefetch_depth=prefetch_depth,
             num_hosts=num_hosts, counters=counters,
+            io_retries=io_retries, io_backoff_s=io_backoff_s,
+            resume_dir=resume_dir, checkpoint_every=checkpoint_every,
         )
 
     return np.asarray(screen.variances), build
@@ -226,6 +319,10 @@ def screen_and_gram_sparse(
     prefetch_depth: int = DEFAULT_PREFETCH,
     num_hosts: int = 1,
     counters: dict | None = None,
+    io_retries: int | None = None,
+    io_backoff_s: float | None = None,
+    resume_dir: str | None = None,
+    checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
 ):
     """Two-pass out-of-core pipeline at a fixed lambda — the sparse twin
     of `data.bow.screen_and_gram_streaming`.  Returns
@@ -234,7 +331,8 @@ def screen_and_gram_sparse(
         store, center=center, impl=impl,
         chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
         prefetch_depth=prefetch_depth, num_hosts=num_hosts,
-        counters=counters,
+        counters=counters, io_retries=io_retries, io_backoff_s=io_backoff_s,
+        resume_dir=resume_dir, checkpoint_every=checkpoint_every,
     )
     support = select_support(screen.variances, lam, max_reduced)
     Sigma_hat = sparse_reduced_covariance(
@@ -243,5 +341,7 @@ def screen_and_gram_sparse(
         impl=impl, chunk_nnz=chunk_nnz, chunk_rows=chunk_rows,
         megabatch=megabatch, prefetch_depth=prefetch_depth,
         num_hosts=num_hosts, counters=counters,
+        io_retries=io_retries, io_backoff_s=io_backoff_s,
+        resume_dir=resume_dir, checkpoint_every=checkpoint_every,
     )
     return Sigma_hat, support, screen

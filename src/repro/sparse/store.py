@@ -27,17 +27,127 @@ recompiles on the ragged tail:
 Multi-host: shards are the unit of work — host ``h`` of ``H`` iterates
 ``shards[h::H]`` and the partial accumulators merge with one
 ``combine_screens`` / psum (see ``repro.sparse.engine``).
+
+Integrity & fault tolerance (manifest v2)
+-----------------------------------------
+A multi-hour streaming pass must never fold a truncated or bit-flipped
+shard into a Gram — a wrong answer is strictly worse than a crash.  The
+store therefore:
+
+  * records a crc32 per array file in the manifest (``checksums`` on each
+    shard entry; version 2 — version-1 manifests still load, they just
+    carry no checksums to verify);
+  * publishes every shard file AND the manifest atomically (write to a
+    ``.tmp`` sibling, fsync, ``os.replace``), so a killed writer leaves
+    either the previous complete state or a ``.tmp`` leftover — never a
+    half-written file a reader would trust;
+  * verifies at read time: structural checks (dtype + element count
+    against the manifest) on every open, the crc32 once per shard file
+    per handle (cached in ``_verified`` — repeated passes over the same
+    handle pay nothing).  Failures raise :class:`ShardCorruptionError`
+    naming the shard file, which is typed precisely so the retry layer
+    can refuse to retry it;
+  * retries transient ``OSError``s at the file-open seam with bounded
+    exponential backoff (``io_retries`` / ``io_backoff_s`` on the
+    handle), counting ``ingest.retries`` in the metrics registry.
+
+All file I/O goes through the module-level :data:`FILE_IO` seam so the
+fault-injection harness (`repro.testing.faults`) can wrap ONE object to
+exercise every failure path deterministically.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
+import zlib
 from typing import Iterator, NamedTuple
 
 import numpy as np
 
+from repro.obs import metrics
+
 MANIFEST_NAME = "manifest.json"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+# Versions this reader accepts: v1 (no checksums) still loads — old stores
+# keep working, they just cannot be checksum-verified.
+SUPPORTED_VERSIONS = (1, 2)
+
+# Retry policy defaults for transient read errors (a flaky NFS mount, a
+# briefly unreachable blob store).  Zero-overhead when nothing fails: the
+# happy path is one try/except around the open.
+DEFAULT_IO_RETRIES = 2
+DEFAULT_IO_BACKOFF_S = 0.05
+
+
+class ShardCorruptionError(RuntimeError):
+    """A store file failed integrity verification (truncation, bit flip,
+    dtype/shape mismatch, or an unreadable npy header).
+
+    Carries the offending file name in ``shard`` so operators can locate
+    and re-replicate it.  Deliberately NOT an ``OSError``: corruption is
+    deterministic — the retry layer must re-raise it immediately instead
+    of burning its backoff budget re-reading the same bad bytes.
+    """
+
+    def __init__(self, msg: str, *, shard: str = ""):
+        super().__init__(msg)
+        self.shard = shard
+
+
+class _FileIO:
+    """The ONE seam every store read/write goes through.
+
+    `repro.testing.faults.FaultInjector` subclasses this and is swapped in
+    via ``faults.install`` to inject deterministic failures; production
+    code never touches files except through the module-level ``FILE_IO``.
+    """
+
+    def load_array(self, path: str, *, mmap_mode: str | None = None):
+        return np.load(path, mmap_mode=mmap_mode)
+
+    def save_array(self, path: str, arr: np.ndarray) -> None:
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def write_text(self, path: str, text: str) -> None:
+        with open(path, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def read_text(self, path: str) -> str:
+        with open(path) as f:
+            return f.read()
+
+    def replace(self, src: str, dst: str) -> None:
+        os.replace(src, dst)
+
+
+FILE_IO = _FileIO()
+
+
+def _crc32(arr: np.ndarray) -> int:
+    """crc32 of an array's raw data bytes (header-independent, so a
+    rewritten npy with a cosmetic header change still verifies)."""
+    a = np.ascontiguousarray(arr)
+    return zlib.crc32(a.view(np.uint8).reshape(-1)) & 0xFFFFFFFF
+
+
+def _atomic_save_array(path: str, arr: np.ndarray) -> None:
+    """Publish ``arr`` at ``path`` via tmp + rename: a reader never sees a
+    partially written file under the final name."""
+    tmp = path + ".tmp"
+    FILE_IO.save_array(tmp, arr)
+    FILE_IO.replace(tmp, path)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    FILE_IO.write_text(tmp, text)
+    FILE_IO.replace(tmp, path)
 
 # Default chunk geometry: 16k nnz slots / 512 rows keeps the Gram kernel's
 # densify scratch at chunk_rows * n_hat_pad * 4 B (4 MB at n_hat = 2048).
@@ -212,14 +322,19 @@ class CSRStoreWriter:
             "col_ids": f"shard_{k:05d}.col_ids.npy",
             "row_ptr": f"shard_{k:05d}.row_ptr.npy",
         }
-        np.save(os.path.join(self.path, names["values"]), vals)
-        np.save(os.path.join(self.path, names["col_ids"]), cols)
-        np.save(os.path.join(self.path, names["row_ptr"]), row_ptr)
+        arrays = {"values": vals, "col_ids": cols, "row_ptr": row_ptr}
+        checksums = {}
+        for which, arr in arrays.items():
+            # checksum BEFORE the write, publish atomically — a torn write
+            # either never surfaces under the final name or mismatches.
+            checksums[which] = _crc32(arr)
+            _atomic_save_array(os.path.join(self.path, names[which]), arr)
         self._shards.append({
             "files": names,
             "row_offset": self._total_rows,
             "n_rows": int(lens.size),
             "nnz": int(vals.size),
+            "checksums": checksums,
         })
         self._total_rows += int(lens.size)
         self._total_nnz += int(vals.size)
@@ -238,18 +353,49 @@ class CSRStoreWriter:
             "nnz": self._total_nnz,
             "shards": self._shards,
         }
-        with open(os.path.join(self.path, MANIFEST_NAME), "w") as f:
-            json.dump(manifest, f, indent=2)
-            f.write("\n")
+        # Atomic publication: the manifest names every shard file, so it
+        # lands LAST and via rename — its presence certifies the store.
+        _atomic_write_text(
+            os.path.join(self.path, MANIFEST_NAME),
+            json.dumps(manifest, indent=2) + "\n",
+        )
         return SparseCorpus.open(self.path)
 
 
-class SparseCorpus:
-    """Read handle on a sharded CSR store (shards are memory-mapped)."""
+_EXPECTED_DTYPES = {
+    "values": np.dtype(np.float32),
+    "col_ids": np.dtype(np.int32),
+    "row_ptr": np.dtype(np.int64),
+}
 
-    def __init__(self, path: str, manifest: dict):
+
+class SparseCorpus:
+    """Read handle on a sharded CSR store (shards are memory-mapped).
+
+    ``verify_checksums`` (default on) checks each shard file's crc32
+    against the manifest ONCE per handle, on first read — a K-pass fit
+    verifies each byte once, not K times.  Structural checks (dtype and
+    element count against the manifest) run on every open and catch
+    truncation even on v1 stores that carry no checksums.
+
+    ``io_retries``/``io_backoff_s`` bound the exponential-backoff retry
+    loop around transient ``OSError``s at the file-open seam;
+    :class:`ShardCorruptionError` is never retried.  Retries land in the
+    ``ingest.retries`` registry counter and the handle's
+    ``io_retry_count``.
+    """
+
+    def __init__(self, path: str, manifest: dict, *,
+                 verify_checksums: bool = True,
+                 io_retries: int = DEFAULT_IO_RETRIES,
+                 io_backoff_s: float = DEFAULT_IO_BACKOFF_S):
         self.path = path
         self.manifest = manifest
+        self.verify_checksums = bool(verify_checksums)
+        self.io_retries = int(io_retries)
+        self.io_backoff_s = float(io_backoff_s)
+        self.io_retry_count = 0
+        self._verified: set[str] = set()
         # (chunk_nnz, chunk_rows) -> per-shard chunk-boundary arrays,
         # computed lazily on first iteration and reused by every later
         # pass over the store (a K-component fit re-streams the corpus,
@@ -257,14 +403,33 @@ class SparseCorpus:
         self._chunk_plans: dict[tuple[int, int], list[np.ndarray]] = {}
 
     @classmethod
-    def open(cls, path: str) -> "SparseCorpus":
-        with open(os.path.join(path, MANIFEST_NAME)) as f:
-            manifest = json.load(f)
-        if manifest.get("version") != FORMAT_VERSION:
+    def open(cls, path: str, *, verify_checksums: bool = True,
+             io_retries: int = DEFAULT_IO_RETRIES,
+             io_backoff_s: float = DEFAULT_IO_BACKOFF_S) -> "SparseCorpus":
+        try:
+            manifest = json.loads(
+                FILE_IO.read_text(os.path.join(path, MANIFEST_NAME))
+            )
+        except ValueError as e:   # torn/truncated JSON: corrupt, not absent
+            raise ShardCorruptionError(
+                f"corrupt store manifest at {path}: {e}",
+                shard=MANIFEST_NAME,
+            ) from e
+        if manifest.get("version") not in SUPPORTED_VERSIONS:
             raise ValueError(
                 f"unsupported store version {manifest.get('version')!r}"
             )
-        return cls(path, manifest)
+        return cls(path, manifest, verify_checksums=verify_checksums,
+                   io_retries=io_retries, io_backoff_s=io_backoff_s)
+
+    def set_io_policy(self, *, io_retries: int | None = None,
+                      io_backoff_s: float | None = None) -> "SparseCorpus":
+        """Adjust the transient-read retry policy on this handle."""
+        if io_retries is not None:
+            self.io_retries = int(io_retries)
+        if io_backoff_s is not None:
+            self.io_backoff_s = float(io_backoff_s)
+        return self
 
     @property
     def n_rows(self) -> int:
@@ -286,10 +451,77 @@ class SparseCorpus:
     def n_shards(self) -> int:
         return len(self.manifest["shards"])
 
+    def _load_retrying(self, path: str, name: str) -> np.ndarray:
+        """Open one array file through the FILE_IO seam, retrying transient
+        OSErrors with bounded exponential backoff.  A missing file or an
+        unparseable npy header is corruption (deterministic — retrying
+        re-reads the same bad bytes), so those raise immediately."""
+        delay = self.io_backoff_s
+        for attempt in range(self.io_retries + 1):
+            try:
+                return FILE_IO.load_array(path, mmap_mode="r")
+            except FileNotFoundError as e:
+                raise ShardCorruptionError(
+                    f"store file {name} is missing at {path}", shard=name
+                ) from e
+            except ValueError as e:     # bad magic / truncated header
+                raise ShardCorruptionError(
+                    f"store file {name} is unreadable (truncated or "
+                    f"corrupt npy header): {e}", shard=name
+                ) from e
+            except OSError:
+                if attempt == self.io_retries:
+                    raise
+                self.io_retry_count += 1
+                metrics.counter("ingest.retries").inc()
+                time.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")
+
     def _mmap(self, shard: dict, which: str) -> np.ndarray:
-        return np.load(
-            os.path.join(self.path, shard["files"][which]), mmap_mode="r"
-        )
+        """Open + verify one shard array.  Structural checks (dtype,
+        element count vs the manifest) run every open; the crc32 runs once
+        per (shard, array) per handle and only when the manifest carries
+        checksums (v2)."""
+        name = shard["files"][which]
+        arr = self._load_retrying(os.path.join(self.path, name), name)
+        expect_n = (int(shard["n_rows"]) + 1 if which == "row_ptr"
+                    else int(shard["nnz"]))
+        expect_dt = _EXPECTED_DTYPES[which]
+        if arr.ndim != 1 or arr.size != expect_n or arr.dtype != expect_dt:
+            raise ShardCorruptionError(
+                f"shard file {name} is corrupt: got "
+                f"{arr.dtype}[{arr.size}], manifest says "
+                f"{expect_dt}[{expect_n}] (truncated or overwritten?)",
+                shard=name,
+            )
+        checksums = shard.get("checksums")
+        if (self.verify_checksums and checksums is not None
+                and name not in self._verified):
+            got = _crc32(arr)
+            want = int(checksums[which])
+            if got != want:
+                raise ShardCorruptionError(
+                    f"shard file {name} failed checksum verification "
+                    f"(crc32 {got:#010x} != manifest {want:#010x}): "
+                    "bit flip or torn write — refusing to fold it into "
+                    "a screen/Gram", shard=name,
+                )
+            self._verified.add(name)
+        return arr
+
+    def verify(self) -> int:
+        """Full integrity scan: re-verify every shard array against the
+        manifest (ignoring the once-per-handle cache).  Returns the number
+        of files checked; raises :class:`ShardCorruptionError` on the
+        first failure."""
+        self._verified.clear()
+        n = 0
+        for shard in self.manifest["shards"]:
+            for which in ("values", "col_ids", "row_ptr"):
+                self._mmap(shard, which)
+                n += 1
+        return n
 
     def iter_shards(self, *, host_id: int = 0, num_hosts: int = 1):
         """This host's shard slice as (values, col_ids, row_ptr, row_offset)
@@ -328,23 +560,32 @@ class SparseCorpus:
         plan = self.chunk_plan(chunk_nnz, chunk_rows)
         return sum(b.size - 1 for b in plan[host_id::num_hosts])
 
-    def _iter_packed(self, chunk_nnz, chunk_rows, host_id, num_hosts):
+    def _iter_packed(self, chunk_nnz, chunk_rows, host_id, num_hosts,
+                     start_chunk: int = 0):
         """Internal: (vals_mmap, cols_mmap, row_ptr, row_offset, r, stop)
         per chunk, in deterministic shard-then-row order, off the cached
-        plan."""
+        plan.  ``start_chunk`` fast-skips the first chunks of this host's
+        slice WITHOUT opening the skipped shards — a resumed pass costs
+        only the remaining reads (see `repro.sparse.resume`)."""
         plan = self.chunk_plan(chunk_nnz, chunk_rows)
         shards = self.manifest["shards"]
         if not (0 <= host_id < num_hosts):
             raise ValueError(f"host_id {host_id} not in [0, {num_hosts})")
+        skip = int(start_chunk)
         for s in range(host_id, len(shards), num_hosts):
+            bounds = plan[s]
+            n_c = bounds.size - 1
+            if skip >= n_c:       # whole shard already consumed: no reads
+                skip -= n_c
+                continue
             shard = shards[s]
             vals = self._mmap(shard, "values")
             cols = self._mmap(shard, "col_ids")
             row_ptr = self._mmap(shard, "row_ptr")
-            bounds = plan[s]
-            for i in range(bounds.size - 1):
+            for i in range(skip, n_c):
                 yield (vals, cols, row_ptr, int(shard["row_offset"]),
                        int(bounds[i]), int(bounds[i + 1]))
+            skip = 0
 
     def iter_chunks(
         self,
@@ -390,9 +631,16 @@ class SparseCorpus:
         num_hosts: int = 1,
         reuse_buffers: bool = True,
         ring: int = 4,
+        start_batch: int = 0,
     ) -> Iterator[CSRMegaBatch]:
         """Pack C = ``megabatch`` chunks per step into fixed (C, chunk_nnz)
         arrays — the unit ONE ingest kernel launch consumes.
+
+        ``start_batch`` skips the first ``start_batch`` megabatches of the
+        pass without reading their chunks (batch boundaries are fixed by
+        the cached chunk plan, so batch ``b`` always packs chunks
+        ``[b*C, (b+1)*C)`` of this host's slice — the deterministic cursor
+        a resumed pass restarts from).
 
         With ``reuse_buffers`` the (C, chunk_nnz) arrays rotate through a
         preallocated ring instead of being reallocated per batch (mmap
@@ -436,7 +684,8 @@ class SparseCorpus:
             )
 
         for vals, cols, row_ptr, row_offset, r, stop in self._iter_packed(
-            chunk_nnz, chunk_rows, host_id, num_hosts
+            chunk_nnz, chunk_rows, host_id, num_hosts,
+            start_chunk=int(start_batch) * C,
         ):
             values, col_ids, seg_ids = buffers[b]
             n_rows_v[slot], nnz_v[slot] = _fill_slot(

@@ -1,0 +1,12 @@
+"""Test/bench support utilities — deterministic fault injection for the
+out-of-core reliability layer (`repro.testing.faults`)."""
+from .faults import (
+    FaultInjector, InjectedReadError, InjectedWriteError, corrupt_file,
+    fail_nth_read, flip_bytes, install, slow_read, torn_write, truncate_file,
+)
+
+__all__ = [
+    "FaultInjector", "InjectedReadError", "InjectedWriteError",
+    "corrupt_file", "fail_nth_read", "flip_bytes", "install", "slow_read",
+    "torn_write", "truncate_file",
+]

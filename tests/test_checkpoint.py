@@ -58,6 +58,59 @@ def test_prune_keeps_newest(tmp_path):
     assert os.path.exists(tmp_path / "step_000000004")
 
 
+def test_truncated_manifest_ignored_by_latest_step(tmp_path):
+    """A torn manifest (killed writer, partial copy) is crash debris:
+    latest_step skips it instead of raising mid-recovery."""
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, t)
+    mf = tmp_path / "step_000000002" / "manifest.json"
+    raw = mf.read_bytes()
+    mf.write_bytes(raw[: len(raw) // 2])
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_missing_npz_ignored_by_latest_step(tmp_path):
+    """A manifest whose data file never landed is not restorable and must
+    not win latest_step."""
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 3, t)
+    os.remove(tmp_path / "step_000000003" / ck.DATA_NAME)
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_prune_survives_crash_debris(tmp_path):
+    """Unparsable step names, .tmp leftovers and stray files must not
+    crash the retention sweep — and must not be counted as steps."""
+    t = _tree()
+    for s in (1, 2, 3):
+        ck.save(str(tmp_path), s, t)
+    os.makedirs(tmp_path / "step_000000004.tmp")
+    os.makedirs(tmp_path / "step_garbage")
+    (tmp_path / "step_").mkdir()
+    (tmp_path / "notes.txt").write_text("x")
+    ck.prune(str(tmp_path), keep=2)
+    assert ck.latest_step(str(tmp_path)) == 3
+    assert not os.path.exists(tmp_path / "step_000000001")
+    assert os.path.exists(tmp_path / "step_000000002")
+    # debris untouched
+    assert os.path.exists(tmp_path / "step_garbage")
+    assert os.path.exists(tmp_path / "step_000000004.tmp")
+
+
+def test_restore_corrupt_step_raises_clear_error(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    npz = tmp_path / "step_000000001" / ck.DATA_NAME
+    raw = npz.read_bytes()
+    npz.write_bytes(raw[: len(raw) // 3])
+    with pytest.raises(RuntimeError, match="corrupt or missing"):
+        ck.restore(str(tmp_path), 1, jax.eval_shape(lambda: t))
+    with pytest.raises(RuntimeError, match="corrupt or missing"):
+        ck.restore(str(tmp_path), 7, jax.eval_shape(lambda: t))  # absent
+
+
 def test_shape_mismatch_raises(tmp_path):
     ck.save(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
     with pytest.raises(AssertionError):

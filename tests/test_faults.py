@@ -1,0 +1,309 @@
+"""Reliability layer under injected faults: store integrity (crc32 /
+manifest v2 / atomic publication), the retrying reader, resumable passes,
+and the end-to-end kill-and-resume proof — all seeded and deterministic
+(`repro.testing.faults` schedules faults by operation index, not timing).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import SPCAConfig, fit_components
+from repro.data import make_corpus
+from repro.obs import metrics
+from repro.sparse import (
+    PassCheckpointer, ShardCorruptionError, SparseCorpus, pass_fingerprint,
+    sparse_feature_variances, sparse_stats, write_corpus,
+)
+from repro.sparse.store import FORMAT_VERSION, MANIFEST_NAME
+from repro.testing import (
+    FaultInjector, corrupt_file, fail_nth_read, flip_bytes, install,
+    slow_read, torn_write, truncate_file,
+)
+
+TOPICS = {"t0": ["w0", "w1"], "t1": ["w2", "w3"], "t2": ["w4", "w5"]}
+GEOM = dict(chunk_nnz=512, chunk_rows=64, megabatch=2)
+
+
+def _make_store(tmp_path, docs=300, words=400, shard_nnz=2500, name="store"):
+    c = make_corpus(docs, words, topics=TOPICS, seed=0)
+    return write_corpus(c, str(tmp_path / name), shard_nnz=shard_nnz)
+
+
+def _screen(store, **kw):
+    return np.asarray(sparse_feature_variances(store, **GEOM, **kw).variances)
+
+
+# ---------------------------------------------------------------- integrity
+
+
+def test_manifest_v2_carries_checksums_and_verify_scans(tmp_path):
+    store = _make_store(tmp_path)
+    m = json.loads(open(str(tmp_path / "store" / MANIFEST_NAME)).read())
+    assert m["version"] == FORMAT_VERSION == 2
+    for sh in m["shards"]:
+        assert set(sh["checksums"]) == {"values", "col_ids", "row_ptr"}
+    assert store.verify() == 3 * store.n_shards
+
+
+def test_bit_flip_detected_named_and_fatal(tmp_path):
+    store = _make_store(tmp_path)
+    name = store.manifest["shards"][1]["files"]["col_ids"]
+    corrupt_file(os.path.join(store.path, name), n_flips=3, seed=7)
+    fresh = SparseCorpus.open(store.path)
+    with pytest.raises(ShardCorruptionError) as ei:
+        for _ in fresh.iter_chunks(chunk_nnz=512, chunk_rows=64):
+            pass
+    assert ei.value.shard == name
+    with pytest.raises(ShardCorruptionError):
+        SparseCorpus.open(store.path).verify()
+
+
+def test_truncated_shard_detected(tmp_path):
+    store = _make_store(tmp_path)
+    name = store.manifest["shards"][0]["files"]["values"]
+    truncate_file(os.path.join(store.path, name), frac=0.4)
+    with pytest.raises(ShardCorruptionError) as ei:
+        SparseCorpus.open(store.path).verify()
+    assert ei.value.shard == name
+
+
+def test_corruption_is_never_retried(tmp_path):
+    store = _make_store(tmp_path)
+    name = store.manifest["shards"][0]["files"]["values"]
+    corrupt_file(os.path.join(store.path, name), n_flips=2, seed=3)
+    fresh = SparseCorpus.open(store.path, io_retries=5, io_backoff_s=0.001)
+    with metrics.use_registry() as reg:
+        with pytest.raises(ShardCorruptionError):
+            fresh.verify()
+        assert reg.value("ingest.retries") == 0
+    assert fresh.io_retry_count == 0
+
+
+def test_v1_manifest_still_loads(tmp_path):
+    store = _make_store(tmp_path)
+    dense = store.to_dense()
+    m = json.loads(open(os.path.join(store.path, MANIFEST_NAME)).read())
+    m["version"] = 1
+    for sh in m["shards"]:
+        sh.pop("checksums")
+    with open(os.path.join(store.path, MANIFEST_NAME), "w") as f:
+        json.dump(m, f)
+    old = SparseCorpus.open(store.path)
+    assert old.manifest["version"] == 1
+    np.testing.assert_array_equal(old.to_dense(), dense)
+
+
+def test_torn_manifest_write_is_never_published(tmp_path):
+    c = make_corpus(120, 150, topics=TOPICS, seed=0)
+    inj = FaultInjector(torn_write(match=MANIFEST_NAME + "*", frac=0.5))
+    with install(inj), pytest.raises(OSError):
+        write_corpus(c, str(tmp_path / "torn"), shard_nnz=2000)
+    assert inj.injected["torn"] == 1
+    # the torn payload landed in the .tmp path only — the store directory
+    # has no manifest, so open() reports absence, not a half-parsed store
+    assert not os.path.exists(str(tmp_path / "torn" / MANIFEST_NAME))
+    with pytest.raises(FileNotFoundError):
+        SparseCorpus.open(str(tmp_path / "torn"))
+
+
+def test_torn_shard_write_is_never_published(tmp_path):
+    c = make_corpus(120, 150, topics=TOPICS, seed=0)
+    inj = FaultInjector(torn_write(match="*.values.npy*", frac=0.3))
+    with install(inj), pytest.raises(OSError):
+        write_corpus(c, str(tmp_path / "torn2"), shard_nnz=2000)
+    published = [f for f in os.listdir(str(tmp_path / "torn2"))
+                 if f.endswith(".values.npy")]
+    assert published == []
+
+
+def test_flip_after_write_caught_by_open_time_verification(tmp_path):
+    c = make_corpus(120, 150, topics=TOPICS, seed=0)
+    inj = FaultInjector(flip_bytes(match="*.col_ids.npy*", n_flips=3),
+                        seed=11)
+    with install(inj):
+        write_corpus(c, str(tmp_path / "flipped"), shard_nnz=2000)
+    assert inj.injected["flip"] == 1
+    with pytest.raises(ShardCorruptionError):
+        SparseCorpus.open(str(tmp_path / "flipped")).verify()
+
+
+# ------------------------------------------------------------------ retries
+
+
+def test_transient_read_failures_absorbed_by_retries(tmp_path):
+    store = _make_store(tmp_path)
+    clean = _screen(store)
+    inj = FaultInjector(fail_nth_read(2, match="*.npy", times=2))
+    counters: dict = {}
+    with metrics.use_registry() as reg, install(inj):
+        got = _screen(
+            store.set_io_policy(io_retries=3, io_backoff_s=0.001),
+            counters=counters,
+        )
+        assert reg.value("ingest.retries") >= 2
+    np.testing.assert_allclose(got, clean, rtol=1e-12)
+    assert inj.injected["read_fail"] == 2
+    assert counters["io_retries"] >= 2
+
+
+def test_retries_exhausted_reraises_oserror(tmp_path):
+    store = _make_store(tmp_path)
+    inj = FaultInjector(fail_nth_read(1, match="*.npy", times=10**9))
+    with metrics.use_registry() as reg, install(inj):
+        with pytest.raises(OSError):
+            _screen(store.set_io_policy(io_retries=2, io_backoff_s=0.001))
+        assert reg.value("ingest.retries") == 2
+
+
+def test_slow_reads_only_slow(tmp_path):
+    store = _make_store(tmp_path)
+    clean = _screen(store)
+    inj = FaultInjector(slow_read(0.002, match="*.npy"))
+    with install(inj):
+        got = _screen(store)
+    np.testing.assert_allclose(got, clean, rtol=1e-12)
+    assert inj.injected["slow"] > 0
+
+
+# ------------------------------------------------------------------- resume
+
+
+def test_checkpointer_atomicity_and_fingerprint_guard(tmp_path):
+    store = _make_store(tmp_path)
+    ck = PassCheckpointer(str(tmp_path / "ck"), every=2)
+    from repro.data.bow import StreamingStats
+
+    acc = StreamingStats(store.n_cols)
+    fp = pass_fingerprint("screen", store, chunk_nnz=512, chunk_rows=64,
+                          megabatch=2, host_id=0, num_hosts=1,
+                          signature=acc.state_signature())
+    acc.sum[:] = 1.5
+    acc.count = 42
+    ck.save(fp, 7, acc.state_dict())
+    cursor, state, complete = ck.load(fp)
+    assert (cursor, complete) == (7, False)
+    np.testing.assert_array_equal(state["sum"], acc.sum)
+    assert int(state["count"]) == 42
+
+    # a fingerprint differing in ANY field is a different pass
+    fp2 = dict(fp, chunk_nnz=1024)
+    assert ck.load(fp2) is None
+
+    # torn meta / torn state / leftover tmp are all "no checkpoint"
+    d = ck._dir(fp)
+    truncate_file(os.path.join(d, "state.npz"), frac=0.3)
+    assert ck.load(fp) is None
+    ck.save(fp, 9, acc.state_dict())
+    truncate_file(os.path.join(d, "meta.json"), frac=0.3)
+    assert ck.load(fp) is None
+    ck.save(fp, 11, acc.state_dict(), complete=True)
+    os.makedirs(d + ".tmp", exist_ok=True)
+    cursor, _, complete = ck.load(fp)
+    assert (cursor, complete) == (11, True)
+    ck.clear(fp)
+    assert ck.load(fp) is None and not os.path.exists(d + ".tmp")
+
+
+def test_engine_kill_and_resume_screen_pass(tmp_path):
+    store = _make_store(tmp_path)
+    rd = str(tmp_path / "resume")
+    clean_counters: dict = {}
+    clean = _screen(store, counters=clean_counters)
+    total_chunks = clean_counters["chunks"]
+
+    # measure the pass's read schedule, then kill it partway through
+    probe = FaultInjector()
+    with install(probe):
+        _screen(store)
+    kill = FaultInjector(
+        fail_nth_read(probe.reads // 2, match="*.npy", times=10**9)
+    )
+    with install(kill), pytest.raises(OSError):
+        _screen(store.set_io_policy(io_retries=0), resume_dir=rd,
+                checkpoint_every=1)
+
+    counters: dict = {}
+    got = _screen(store, counters=counters, resume_dir=rd,
+                  checkpoint_every=1)
+    np.testing.assert_allclose(got, clean, rtol=1e-12)
+    assert counters["resumed_megabatches"] > 0
+    assert counters["chunks"] < total_chunks  # no full re-stream
+
+
+def test_resume_geometry_change_falls_back_to_clean_pass(tmp_path):
+    store = _make_store(tmp_path)
+    rd = str(tmp_path / "resume")
+    _screen(store, resume_dir=rd, checkpoint_every=2)
+    counters: dict = {}
+    got = np.asarray(sparse_feature_variances(
+        store, chunk_nnz=1024, chunk_rows=64, megabatch=2,
+        counters=counters, resume_dir=rd, checkpoint_every=2,
+    ).variances)
+    assert counters.get("resumed_megabatches", 0) == 0
+    np.testing.assert_allclose(got, _screen(store), rtol=1e-12)
+
+
+def test_completed_pass_resumes_with_zero_streaming(tmp_path):
+    store = _make_store(tmp_path)
+    rd = str(tmp_path / "resume")
+    sup = np.arange(0, 40, dtype=np.int64)
+    kw = dict(resume_dir=rd, checkpoint_every=4)
+    v0, build0 = sparse_stats(store, **GEOM, **kw)
+    G0 = np.asarray(build0(sup))
+    counters: dict = {}
+    v1, build1 = sparse_stats(store, **GEOM, counters=counters, **kw)
+    G1 = np.asarray(build1(sup))
+    np.testing.assert_allclose(v1, v0, rtol=1e-12)
+    np.testing.assert_allclose(G1, G0, rtol=1e-12)
+    assert counters.get("chunks", 0) == 0
+    assert counters["resumed_megabatches"] > 0
+
+
+# ------------------------------------------------ end-to-end kill & resume
+
+
+def _fit_cfg(**kw):
+    return SPCAConfig(max_sweeps=6, lam_search_evals=6, chunk_nnz=512,
+                      chunk_rows=64, megabatch_chunks=2, **kw)
+
+
+def test_fit_killed_mid_gram_pass_resumes_identically(tmp_path):
+    """The acceptance proof: a streaming 3-component fit killed mid-Gram
+    by an injected fault, resumed via cfg.resume_dir, matches the
+    uninterrupted fit to 1e-6 — and the resumed run streams strictly
+    fewer chunks than a full restart would."""
+    store = _make_store(tmp_path, docs=300, words=400, shard_nnz=1500)
+    rd = str(tmp_path / "resume")
+
+    diag0: dict = {}
+    clean = fit_components(store, 3, target_card=4, cfg=_fit_cfg(),
+                           diagnostics=diag0)
+
+    # read schedule: the screen and Gram passes drain the same megabatch
+    # iterator, so each costs the same number of shard-array reads — land
+    # the kill halfway into the Gram pass
+    probe = FaultInjector()
+    with install(probe):
+        _screen(store)
+    kill_at = probe.reads + probe.reads // 2
+    assert kill_at > probe.reads
+
+    cfg = _fit_cfg(resume_dir=rd, checkpoint_every=1, io_retries=0)
+    kill = FaultInjector(fail_nth_read(kill_at, match="*.npy", times=10**9))
+    with install(kill), pytest.raises(OSError):
+        fit_components(store, 3, target_card=4, cfg=cfg)
+
+    diag1: dict = {}
+    resumed = fit_components(store, 3, target_card=4, cfg=cfg,
+                             diagnostics=diag1)
+
+    assert diag1["resumed_megabatches"] > 0
+    # no full corpus re-stream: the resumed run streams fewer chunks than
+    # the uninterrupted fit's 1+1 passes
+    assert diag1["ingest"]["chunks"] < diag0["ingest"]["chunks"]
+    for r0, r1 in zip(clean, resumed):
+        np.testing.assert_array_equal(r1.support, r0.support)
+        np.testing.assert_allclose(r1.variance, r0.variance, rtol=1e-6)
+        np.testing.assert_allclose(r1.lam, r0.lam, rtol=1e-6)

@@ -137,6 +137,56 @@ def test_prefetch_stall_accounting_reduce_bound():
     assert stats["occupancy_sum"] / stats["items"] > 0.5
 
 
+def test_prefetch_abandonment_reaps_worker_and_closes_source():
+    """A consumer that stops early (break/close) must not leave the worker
+    parked on a full queue forever: the cancellation event unblocks it,
+    the thread is joined, and the SOURCE generator's finally runs — so
+    ring-buffered megabatch arrays/mmaps are released, not pinned."""
+    import threading
+    import time
+
+    released = threading.Event()
+    before = threading.active_count()
+
+    def src():
+        try:
+            for i in range(1000):
+                yield i
+        finally:
+            released.set()
+
+    g = prefetch(src(), size=2)
+    assert next(g) == 0
+    g.close()                      # abandon with the queue full
+    assert released.wait(timeout=5.0), "source generator never closed"
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before, "worker thread leaked"
+
+
+def test_prefetch_break_mid_stream_reaps_worker():
+    """Same contract via a plain ``break`` (GeneratorExit at gc/scope
+    exit) and via a consumer-side exception."""
+    import threading
+    import time
+
+    before = threading.active_count()
+    for stop in ("break", "raise"):
+        try:
+            for x in prefetch(iter(range(1000)), size=1):
+                if x == 3:
+                    if stop == "break":
+                        break
+                    raise RuntimeError("consumer bailed")
+        except RuntimeError:
+            pass
+    deadline = time.time() + 5.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before, "worker thread leaked"
+
+
 def test_prefetch_propagates_reader_exception(setup):
     """A reader-thread failure (row too wide for chunk_nnz, detected while
     building the chunk plan) must surface in the consumer, not truncate

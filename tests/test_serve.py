@@ -244,6 +244,102 @@ def test_batcher_survives_malformed_request():
         assert good.result(timeout=30).shape == (2,)
 
 
+def test_batcher_sheds_over_capacity_submits():
+    """Submits past cfg.max_queue fail fast with RequestShed instead of
+    growing an unbounded backlog; the shed tally lands in snapshot() and
+    the serve.shed registry counter."""
+    from repro.obs import metrics
+    from repro.serve.batcher import RequestShed
+
+    n = 60
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    # not started: the queue holds exactly what we submit (deterministic)
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=4, max_queue=2))
+    with metrics.use_registry() as reg:
+        f1 = mb.submit([1], [1.0])
+        f2 = mb.submit([2], [1.0])
+        f3 = mb.submit([3], [1.0])     # queue at capacity: shed at the door
+        assert not f1.done() and not f2.done()
+        with pytest.raises(RequestShed):
+            f3.result(timeout=1)
+        assert reg.value("serve.shed") == 1
+    assert mb.snapshot()["shed"] == 1
+    with mb:                            # drain the two queued requests
+        assert f1.result(timeout=30).shape == (2,)
+        assert f2.result(timeout=30).shape == (2,)
+    assert mb.snapshot()["shed"] == 1 and mb.snapshot()["timeouts"] == 0
+
+
+def test_batcher_expires_requests_past_deadline():
+    """Requests that overstay cfg.deadline_ms in the queue fail with
+    RequestTimeout at pop time and never occupy a batch slot; fresh
+    requests still resolve."""
+    from repro.obs import metrics
+    from repro.serve.batcher import RequestTimeout
+
+    n = 60
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=4, max_wait_ms=0.5,
+                                             deadline_ms=50.0))
+    with metrics.use_registry() as reg:
+        stale1 = mb.submit([1], [1.0])
+        stale2 = mb.submit([2], [1.0])
+        time.sleep(0.1)                 # both are now past their deadline
+        with mb:                        # serve loop starts popping
+            with pytest.raises(RequestTimeout):
+                stale1.result(timeout=30)
+            with pytest.raises(RequestTimeout):
+                stale2.result(timeout=30)
+            fresh = mb.submit([3, 4], [1.0, 1.0])
+            assert fresh.result(timeout=30).shape == (2,)
+        assert reg.value("serve.timeouts") == 2
+    snap = mb.snapshot()
+    assert snap["timeouts"] == 2 and snap["shed"] == 0
+    assert snap["count"] == 1           # only the fresh request was served
+
+
+def test_registry_skips_corrupt_version_and_rolls_back(tmp_path):
+    """A truncated checkpoint must not crash server startup: load_all
+    skips it with a warning + serve.registry.corrupt count, newest
+    LOADABLE version becomes active, and rollback_to_last_good() steps
+    back one more version."""
+    import os
+
+    from repro.obs import metrics
+
+    n = 150
+    screen = Screen(variances=jnp.ones(n), means=jnp.zeros(n),
+                    count=jnp.asarray(50))
+    reg = ModelRegistry(str(tmp_path), impl="ref")
+    for seed in range(3):
+        reg.register(_fake_components(n, 2, 4, seed=seed), screen,
+                     n_features=n)
+    # corrupt the NEWEST version's data file (what a torn copy leaves)
+    npz = str(tmp_path / "step_000000002" / "host_00000.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 3)
+
+    fresh = ModelRegistry(str(tmp_path), impl="ref")
+    with metrics.use_registry() as mreg:
+        with pytest.warns(RuntimeWarning, match="corrupt version 2"):
+            assert fresh.load_all() == [0, 1]
+        assert mreg.value("serve.registry.corrupt") == 1
+    assert fresh.active().version == 1
+
+    mv = fresh.rollback_to_last_good()
+    assert mv.version == 0 and fresh.active().version == 0
+    with pytest.raises(LookupError, match="no version older"):
+        fresh.rollback_to_last_good()
+
+
+def test_rollback_to_last_good_requires_active():
+    reg = ModelRegistry(None, impl="ref")
+    with pytest.raises(LookupError, match="no active model"):
+        reg.rollback_to_last_good()
+
+
 def test_batcher_stop_fails_stranded_requests():
     """A request that races in behind the shutdown sentinel is failed by
     stop()'s queue drain rather than hanging its future forever."""
