@@ -13,6 +13,15 @@ run when a kernel row regresses by more than the threshold:
 
     PYTHONPATH=src python benchmarks/perf_compare.py --bench \
         benchmarks/BENCH_spca.json fresh.json
+
+History mode: every (non ``--check``) run.py invocation appends its rows
+plus host metadata to ``benchmarks/BENCH_history.jsonl``; this prints each
+row's us_per_call trajectory across those runs (optionally restricted to
+named rows), answering "when did that number start drifting" rather than
+"did this change regress":
+
+    PYTHONPATH=src python benchmarks/perf_compare.py --history \
+        benchmarks/BENCH_history.jsonl [row ...]
 """
 from __future__ import annotations
 
@@ -24,9 +33,21 @@ import sys
 # megabatched streaming passes (host loop + backend reduction), whose
 # pipeline regressions are exactly what the gate must catch; the
 # solver/driver rows wobble with host load and would make a 20% gate
-# flaky.
+# flaky.  GATED_ROWS names individual rows gated by exact match:
+# obs_span_overhead is the per-span tracing cost on the solver hot path —
+# the PR-8 exporter must stay zero-overhead when not installed, and this
+# row is what enforces it.
 GATED_PREFIXES = ("kernel_", "ingest_")
+GATED_ROWS = ("obs_span_overhead",)
 DEFAULT_THRESHOLD = 0.20
+
+
+def is_gated(name: str, *, prefixes: tuple[str, ...] = GATED_PREFIXES,
+             rows: tuple[str, ...] = GATED_ROWS) -> bool:
+    """The ONE gating predicate — `bench_regressions`, the report, and
+    run.py's missing-row check all route through it, so a row can't be
+    gated in one place and invisible in another."""
+    return name.startswith(prefixes) or name in rows
 
 
 def bench_regressions(
@@ -38,7 +59,7 @@ def bench_regressions(
     new benches must be able to land, and retired ones to leave."""
     out = []
     for name in sorted(fresh):
-        if not name.startswith(prefixes) or name not in baseline:
+        if not is_gated(name, prefixes=prefixes) or name not in baseline:
             continue
         base, new = float(baseline[name]), float(fresh[name])
         if base <= 0.0:       # seed rows that never measured anything
@@ -55,9 +76,8 @@ def bench_regressions(
 def print_bench_report(baseline: dict, fresh: dict,
                        regressions: list[dict]) -> None:
     gated = [n for n in sorted(fresh)
-             if n.startswith(GATED_PREFIXES) and n in baseline
-             and float(baseline[n]) > 0.0]
-    print(f"perf gate: {len(gated)} kernel/ingest row(s) compared, "
+             if is_gated(n) and n in baseline and float(baseline[n]) > 0.0]
+    print(f"perf gate: {len(gated)} gated row(s) compared, "
           f"{len(regressions)} regression(s) over "
           f"{DEFAULT_THRESHOLD:.0%}")
     for n in gated:
@@ -65,6 +85,64 @@ def print_bench_report(baseline: dict, fresh: dict,
         flag = "  REGRESSED" if any(r["name"] == n for r in regressions) else ""
         print(f"  {n}: {float(baseline[n]):.1f} -> {float(fresh[n]):.1f} us "
               f"({ratio:.2f}x){flag}")
+
+
+# --------------------------------------------------------------- history
+def load_history(path: str) -> list[dict]:
+    """Parse the BENCH_history.jsonl ledger run.py appends to: one record
+    per benchmark run, ``{"t_unix_s", "rows": {name: us}, "meta": {...}}``.
+    Unparseable lines are skipped (a crash mid-append must not poison the
+    whole trajectory)."""
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    continue
+                if isinstance(rec, dict) and isinstance(rec.get("rows"), dict):
+                    out.append(rec)
+    except OSError:
+        pass
+    return out
+
+
+def history_trend(history: list[dict], names=None) -> dict[str, list]:
+    """name -> [(t_unix_s, us_per_call), ...] in ledger order, restricted
+    to ``names`` when given (None = every row ever recorded)."""
+    trend: dict[str, list] = {}
+    for rec in history:
+        t = float(rec.get("t_unix_s", 0.0))
+        for name, us in rec["rows"].items():
+            if names is not None and name not in names:
+                continue
+            trend.setdefault(name, []).append((t, float(us)))
+    return trend
+
+
+def print_history_report(path: str, names=None) -> None:
+    """Per-row trajectory across every recorded run — where `--check`
+    answers "did THIS change regress", the ledger answers "when did that
+    row start drifting"."""
+    history = load_history(path)
+    if not history:
+        print(f"no history at {path} (run benchmarks/run.py to record)")
+        return
+    trend = history_trend(history, names)
+    print(f"bench history: {len(history)} run(s) in {path}")
+    for name in sorted(trend):
+        pts = trend[name]
+        first, last = pts[0][1], pts[-1][1]
+        drift = (f"{last / first:.2f}x vs first"
+                 if first > 0 else "first run never measured")
+        series = " -> ".join(f"{us:.1f}" for _, us in pts[-8:])
+        tail = " (last 8)" if len(pts) > 8 else ""
+        gate = " [gated]" if is_gated(name) else ""
+        print(f"  {name}{gate}: {series} us{tail}  ({drift})")
 
 
 def index(path):
@@ -109,8 +187,14 @@ def bench_main(base_path: str, new_path: str) -> int:
 
 
 def main():
-    args = [a for a in sys.argv[1:] if a != "--bench"]
-    if "--bench" in sys.argv[1:]:
+    flags = sys.argv[1:]
+    args = [a for a in flags if a not in ("--bench", "--history")]
+    if "--history" in flags:
+        print_history_report(args[0] if args else
+                             "benchmarks/BENCH_history.jsonl",
+                             names=set(args[1:]) or None)
+        return
+    if "--bench" in flags:
         sys.exit(bench_main(args[0], args[1]))
     roofline_main(args[0], args[1])
 

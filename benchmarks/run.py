@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV to stdout and writes the
 machine-readable ``BENCH_spca.json`` (name -> us_per_call) next to this
-file so the perf trajectory can be tracked PR-over-PR.  Roofline tables
-(from the dry-run JSON) are appended when benchmarks/dryrun.json exists.
+file so the perf trajectory can be tracked PR-over-PR.  Each run also
+appends its rows + host metadata to ``BENCH_history.jsonl`` (the per-run
+ledger behind ``perf_compare.py --history``'s trend report).  Roofline
+tables (from the dry-run JSON) are appended when benchmarks/dryrun.json
+exists.
 
 ``--quick`` runs the kernel + convergence suites only (the solver hot
 path; this includes the batched-solver smoke row in the kernels suite);
@@ -50,6 +53,11 @@ def main(argv=None) -> None:
                          "regressions, never rewrite the baseline")
     ap.add_argument("--json", default=os.path.join(_BENCH_DIR, "BENCH_spca.json"),
                     help="path of the machine-readable name->us_per_call dump")
+    ap.add_argument("--history",
+                    default=os.path.join(_BENCH_DIR, "BENCH_history.jsonl"),
+                    help="JSONL ledger appended to after each (non --check) "
+                         "run: rows + host metadata per run, read by "
+                         "perf_compare.py --history ('' disables)")
     args = ap.parse_args(argv)
 
     committed: dict[str, float] = {}
@@ -138,7 +146,7 @@ def main(argv=None) -> None:
         # full run must not demand them.
         missing = [] if args.quick else [
             n for n in sorted(committed)
-            if n.startswith(perf_compare.GATED_PREFIXES)
+            if perf_compare.is_gated(n)
             and "_smoke" not in n
             and float(committed[n]) > 0.0 and n not in results
         ]
@@ -147,7 +155,7 @@ def main(argv=None) -> None:
                   f"{', '.join(missing)}", file=sys.stderr)
             sys.exit(1)
         if regressions:
-            print(f"--check FAILED: {len(regressions)} kernel row(s) "
+            print(f"--check FAILED: {len(regressions)} gated row(s) "
                   "regressed >20%", file=sys.stderr)
             sys.exit(1)
         print("--check passed", file=sys.stderr)
@@ -174,10 +182,30 @@ def main(argv=None) -> None:
     # not a baseline.  Written next to the dump on every refresh, so a
     # PR-over-PR trajectory can tell a real regression from a host change.
     meta_path = os.path.splitext(args.json)[0] + ".meta.json"
+    meta = _run_metadata(suites)
     with open(meta_path, "w") as f:
-        json.dump(_run_metadata(suites), f, indent=2, sort_keys=True)
+        json.dump(meta, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {meta_path}", file=sys.stderr)
+
+    # History ledger: the JSON dump keeps only the LATEST number per row;
+    # the ledger keeps every run (rows + the host that produced them), so
+    # `perf_compare.py --history` can show when a row started drifting.
+    if results and args.history:
+        with open(args.history, "a") as f:
+            json.dump({"t_unix_s": meta["t_unix_s"], "rows": results,
+                       "meta": meta}, f, sort_keys=True)
+            f.write("\n")
+        print(f"appended run #{_history_runs(args.history)} to "
+              f"{args.history}", file=sys.stderr)
+
+
+def _history_runs(path: str) -> int:
+    try:
+        with open(path) as f:
+            return sum(1 for line in f if line.strip())
+    except OSError:
+        return 0
 
 
 def _run_metadata(suites) -> dict:

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.obs import trace
+from repro.obs import metrics, trace
 
 
 class BCDResult(NamedTuple):
@@ -454,6 +454,33 @@ def solve_bcd_many(
             kernel_obj=kernel_objs[k],
         ))
     return out
+
+
+def observe_result_health(res: BCDResult, *, max_sweeps: int) -> tuple[bool, bool]:
+    """Numerical-health monitor over the solver telemetry a `BCDResult`
+    already surfaces: a non-finite objective (the fused kernels' on-chip
+    ``kernel_obj`` when present, else the augmented ``obj``) means the
+    solve produced garbage; ``sweeps == max_sweeps`` means the
+    objective-based early exit never fired (a stall — the result is the
+    budget's best effort, not a converged optimum).
+
+    Increments the ``solver.nonfinite`` / ``solver.stalled`` counters the
+    default `obs.health.solver_rules` pack watches, so a NaN'd fit flips
+    ``/healthz`` to 503 before its components can ship.  Returns
+    ``(nonfinite, stalled)`` for callers that want to act directly.
+
+    Call sites are the driver layers that already concretise the result
+    (`core.spca` reads ``int(res.sweeps)`` and the KKT gap right after
+    every solve), so the host transfer this check rides on has been paid.
+    """
+    obj = res.kernel_obj if res.kernel_obj is not None else res.obj
+    nonfinite = not bool(np.isfinite(np.asarray(obj)))
+    stalled = int(res.sweeps) >= int(max_sweeps)
+    if nonfinite:
+        metrics.counter("solver.nonfinite").inc()
+    if stalled:
+        metrics.counter("solver.stalled").inc()
+    return nonfinite, stalled
 
 
 def leading_sparse_component(Z, *, rel_tol: float = 1e-2):

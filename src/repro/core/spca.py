@@ -319,6 +319,7 @@ def solve_at_lambda(
     nz = np.flatnonzero(x)
     sweeps = int(res.sweeps)
     metrics.histogram("solver.sweeps").observe(sweeps)
+    bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
     return PCResult(
         x=x,
         support=nz,
@@ -603,6 +604,7 @@ def _search_lambda_batched(
             sweeps_i = int(res.sweeps)
             total_sweeps += sweeps_i
             metrics.histogram("solver.sweeps").observe(sweeps_i)
+            bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
             x_red = np.asarray(bcd.leading_sparse_component(
                 res.Z, rel_tol=cfg.support_rel_tol))
             card = int(np.count_nonzero(x_red))
@@ -762,6 +764,7 @@ def _refine_components_batched(
         nz = np.flatnonzero(x)
         sweeps_i = int(res.sweeps)
         metrics.histogram("solver.sweeps").observe(sweeps_i)
+        bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
         out.append(replace(
             r, x=x, support=nz, cardinality=int(nz.size),
             variance=float(x_red @ np.asarray(S) @ x_red), gap=gap,

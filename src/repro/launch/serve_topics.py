@@ -40,6 +40,22 @@ observability examples:
   # Perfetto track) and a serve.* / solver.* metrics snapshot
   python -m repro.launch.serve_topics --smoke \\
       --trace serve_trace.json --metrics serve_metrics.jsonl
+
+live telemetry examples:
+  # background exporter: samples the registry every 2s into the --metrics
+  # JSONL (a TIME SERIES of delta snapshots: per-interval request rate,
+  # window latency percentiles) and serves, while the process runs,
+  #   /metrics   Prometheus text exposition (point a scraper at it)
+  #   /healthz   200 ok / 503 unhealthy from the serving rule pack
+  #              (p99 latency, shed/timeout bursts, drift flag, solver
+  #              nonfinite objectives)
+  #   /varz      registry + live MicroBatcher snapshot (queue depth,
+  #              timeouts, shed) as JSON
+  #   /tracez    recently completed span trees (with --trace)
+  python -m repro.launch.serve_topics --smoke --export-port 9100 \\
+      --export-interval 2 --metrics serve_metrics.jsonl --trace t.json
+  # while it serves:  curl -s localhost:9100/healthz
+  # --export-port 0 picks a free port (printed at startup)
 """
 
 
@@ -139,7 +155,16 @@ def main():
                          "trace-event JSON (Perfetto-loadable)")
     ap.add_argument("--metrics", default="", metavar="PATH",
                     help="append one metrics-registry snapshot (JSON line) "
-                         "at exit")
+                         "at exit (with --export-port: a time series, one "
+                         "line per exporter interval)")
+    ap.add_argument("--export-port", type=int, default=None, metavar="PORT",
+                    help="start the background telemetry exporter and serve "
+                         "/metrics /healthz /varz /tracez on this port "
+                         "(0 = ephemeral; see the live telemetry examples)")
+    ap.add_argument("--export-interval", type=float, default=2.0,
+                    metavar="S",
+                    help="seconds between exporter samples (with "
+                         "--export-port)")
     args = ap.parse_args()
     if args.smoke:
         args.docs = min(args.docs, 3000)
@@ -147,22 +172,47 @@ def main():
         args.components = min(args.components, 3)
         args.queries = max(min(args.queries, 1500), 1000)
 
+    exporter = None
+    if args.export_port is not None:
+        from repro.obs import health
+        from repro.obs.export import TelemetryExporter
+
+        exporter = TelemetryExporter(
+            interval_s=args.export_interval,
+            port=args.export_port,
+            jsonl_path=args.metrics or None,
+            rules=health.serving_rules() + health.solver_rules(),
+            extra={"run": "serve_topics"},
+        )
+
     tracer = trace.install(trace.Tracer()) if args.trace else None
     try:
-        _run(args)
+        if exporter is not None:
+            exporter.start()
+            print(f"telemetry: http://127.0.0.1:{exporter.port}"
+                  "/{metrics,healthz,varz,tracez} "
+                  f"(sampling every {args.export_interval:g}s)")
+        _run(args, exporter)
     finally:
+        if exporter is not None:
+            exporter.stop()
         trace.install(None)
     if tracer is not None:
         tracer.dump_chrome_trace(args.trace)
         print(f"trace: {args.trace} (load at ui.perfetto.dev)")
+    if exporter is not None:
+        print(exporter.health().describe())
     if args.metrics:
-        metrics.get_registry().dump_jsonl(
-            args.metrics, extra={"run": "serve_topics"}
-        )
+        if exporter is None:
+            # One exit snapshot; with the exporter the file is already a
+            # time series (final flush included by exporter.stop()).
+            metrics.get_registry().dump_jsonl(
+                args.metrics, extra={"run": "serve_topics"}
+            )
         print(f"metrics: {args.metrics}")
 
 
-def _run(args):
+def _run(args, exporter=None):
     # 1. fit ---------------------------------------------------------------
     print(f"corpus: {args.docs} docs x {args.words} words")
     corpus = make_corpus(args.docs, args.words, topics=NYTIMES_TOPICS, seed=0)
@@ -189,6 +239,10 @@ def _run(args):
         BatcherConfig(max_batch=args.batch, max_wait_ms=2.0),
         observer=monitor.observe,
     )
+    if exporter is not None:
+        # /varz now shows the live batcher picture (queue depth, timeouts,
+        # shed, p50/p99) next to the registry snapshot.
+        exporter.add_snapshot_provider("serve.batcher", batcher.snapshot)
     with batcher:
         t0 = time.perf_counter()
         served, hist = serve_stream(batcher, iter_docs(queries))

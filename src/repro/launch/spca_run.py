@@ -73,6 +73,20 @@ observability examples:
 
   # device-level jax.profiler trace with annotated kernel dispatch sites
   python -m repro.launch.spca_run --profile-dir /tmp/jaxtrace
+
+live telemetry examples:
+  # background exporter: samples the registry every 2s into m.jsonl (a
+  # TIME SERIES of delta-aware snapshots, not one exit line) and serves
+  #   http://127.0.0.1:9100/metrics   Prometheus text (scrapeable)
+  #   http://127.0.0.1:9100/healthz   200/503 from the solver+ingestion
+  #                                   rule pack (nonfinite objectives,
+  #                                   sweep stalls, prefetch starvation)
+  #   http://127.0.0.1:9100/varz      full registry snapshot as JSON
+  #   http://127.0.0.1:9100/tracez    recent span trees (with --trace)
+  python -m repro.launch.spca_run --streaming --components 3 \\
+      --export-port 9100 --export-interval 2 --metrics m.jsonl
+  # --export-port 0 picks a free ephemeral port (printed at startup);
+  # watch a long fit live:  curl -s localhost:9100/metrics | grep ingest
 """
 
 
@@ -119,22 +133,57 @@ def main():
     ap.add_argument("--profile-dir", default="", metavar="DIR",
                     help="run a jax.profiler device trace into DIR with "
                          "the kernel dispatch sites annotated")
+    ap.add_argument("--export-port", type=int, default=None, metavar="PORT",
+                    help="start the background telemetry exporter and serve "
+                         "/metrics /healthz /varz /tracez on this port "
+                         "(0 = ephemeral; see the live telemetry examples)")
+    ap.add_argument("--export-interval", type=float, default=2.0,
+                    metavar="S",
+                    help="seconds between exporter samples (with "
+                         "--export-port; each interval appends one delta "
+                         "snapshot to --metrics)")
     args = ap.parse_args()
+
+    exporter = None
+    if args.export_port is not None:
+        from repro.obs import health
+        from repro.obs.export import TelemetryExporter
+
+        exporter = TelemetryExporter(
+            interval_s=args.export_interval,
+            port=args.export_port,
+            jsonl_path=args.metrics or None,
+            rules=health.solver_rules() + health.ingestion_rules(),
+            extra={"run": "spca_run", "corpus": args.corpus},
+        )
 
     tracer = trace.install(trace.Tracer()) if args.trace else None
     try:
+        if exporter is not None:
+            exporter.start()
+            print(f"telemetry: http://127.0.0.1:{exporter.port}"
+                  "/{metrics,healthz,varz,tracez} "
+                  f"(sampling every {args.export_interval:g}s)")
         with profile.trace_device(args.profile_dir or None):
             _run(args)
     finally:
+        if exporter is not None:
+            exporter.stop()
         trace.install(None)
     if tracer is not None:
         tracer.dump_chrome_trace(args.trace)
         print(f"trace: {args.trace} (load at ui.perfetto.dev)")
         print(tracer.tree_str(min_s=0.005))
+    if exporter is not None:
+        print(exporter.health().describe())
     if args.metrics:
-        metrics.get_registry().dump_jsonl(
-            args.metrics, extra={"run": "spca_run", "corpus": args.corpus}
-        )
+        if exporter is None:
+            # One exit snapshot.  (With the exporter the file is already a
+            # time series of interval samples, final flush included.)
+            metrics.get_registry().dump_jsonl(
+                args.metrics,
+                extra={"run": "spca_run", "corpus": args.corpus},
+            )
         print(f"metrics: {args.metrics}")
 
 

@@ -147,17 +147,23 @@ class Histogram:
     def total(self) -> float:
         return self._sum
 
+    def window_samples(self) -> list:
+        """A stable copy of the current sample window (oldest first).
+
+        This is the delta-snapshot seam: `obs.export.TelemetryExporter`
+        pairs it with the lifetime ``count`` to recover the samples that
+        arrived since its previous snapshot (the tail of the window), so
+        per-interval percentiles can be computed without the instrument
+        keeping any exporter-specific state."""
+        with self._lock:
+            return list(self._samples)
+
     def percentile(self, q: float) -> float:
         """Clamped nearest-rank quantile of the sample window; ``q`` in
         [0, 100].  0.0 when empty."""
         with self._lock:
-            xs = sorted(self._samples)
-        n = len(xs)
-        if n == 0:
-            return 0.0
-        q_eff = min(q / 100.0, (n - 1) / n)
-        idx = max(0, math.ceil(q_eff * n) - 1)
-        return xs[min(idx, n - 1)]
+            xs = list(self._samples)
+        return percentile_of(xs, q)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -186,6 +192,20 @@ class Histogram:
             self._sum += total
             self._min = min(self._min, mn)
             self._max = max(self._max, mx)
+
+
+def percentile_of(samples, q: float) -> float:
+    """Clamped nearest-rank quantile of an arbitrary sample list — the
+    same estimator `Histogram.percentile` runs on its window, exposed for
+    consumers that hold their own sample sets (the telemetry exporter's
+    per-interval windows, the health engine's trailing windows)."""
+    xs = sorted(samples)
+    n = len(xs)
+    if n == 0:
+        return 0.0
+    q_eff = min(q / 100.0, (n - 1) / n)
+    idx = max(0, math.ceil(q_eff * n) - 1)
+    return xs[min(idx, n - 1)]
 
 
 class Registry:

@@ -34,12 +34,13 @@ import json
 import os
 import threading
 import time
+from collections import deque
 
 
 class Span:
     """One timed region.  ``t0``/``t1`` are perf_counter_ns ticks."""
 
-    __slots__ = ("name", "attrs", "t0", "t1", "children", "tid")
+    __slots__ = ("name", "attrs", "t0", "t1", "children", "tid", "root")
 
     def __init__(self, name: str, attrs: dict, tid: str):
         self.name = name
@@ -48,6 +49,7 @@ class Span:
         self.t0 = time.perf_counter_ns()
         self.t1: int | None = None
         self.children: list[Span] = []
+        self.root = False
 
     # ------------------------------------------------------------- timings
     @property
@@ -109,10 +111,19 @@ class Tracer:
     a span opened while another is active on the same thread nests under
     it, a span opened on a fresh thread becomes a root tagged with that
     thread's name.  The roots list is append-only under one lock.
+
+    Completed-span ring: the newest ``keep_recent`` *root* spans to close
+    (with their full subtree) are kept in a bounded deque, so a live
+    observer — the telemetry exporter's ``/tracez`` endpoint — can render
+    recently finished work on a long-lived process without the unbounded
+    ``_roots`` list being the only view (that list keeps every root for
+    the end-of-run Chrome export; the ring is the "what just happened"
+    window).
     """
 
-    def __init__(self):
+    def __init__(self, *, keep_recent: int = 64):
         self._roots: list[Span] = []
+        self._recent: deque = deque(maxlen=int(keep_recent))
         self._lock = threading.Lock()
         self._local = threading.local()
         self._t_origin = time.perf_counter_ns()
@@ -133,6 +144,7 @@ class Tracer:
         if st:
             st[-1].children.append(sp)
         else:
+            sp.root = True
             with self._lock:
                 self._roots.append(sp)
         st.append(sp)
@@ -147,6 +159,9 @@ class Tracer:
             st.pop()
         if st:
             st.pop()
+        if sp.root:
+            with self._lock:
+                self._recent.append(sp)
 
     # ------------------------------------------------------------ queries
     def roots(self) -> list[Span]:
@@ -226,23 +241,42 @@ class Tracer:
 
     def tree_str(self, *, min_s: float = 0.0) -> str:
         """Human-readable span tree with per-span total/self time."""
-        lines: list[str] = []
+        return _render_tree(self.roots(), min_s=min_s)
 
-        def rec(sp: Span, depth: int):
-            if sp.total_s < min_s:
-                return
-            attrs = " ".join(f"{k}={_jsonable(v)}" for k, v in sp.attrs.items())
-            lines.append(
-                f"{'  ' * depth}{sp.name:<{max(1, 40 - 2 * depth)}} "
-                f"total={sp.total_s * 1e3:9.2f}ms self={sp.self_s * 1e3:9.2f}ms"
-                + (f"  [{attrs}]" if attrs else "")
-            )
-            for c in sp.children:
-                rec(c, depth + 1)
+    # -------------------------------------------------- completed-span ring
+    def recent(self, n: int | None = None) -> list[Span]:
+        """The newest completed root spans (oldest first, up to ``n``)."""
+        with self._lock:
+            spans = list(self._recent)
+        return spans if n is None else spans[-int(n):]
 
-        for r in self.roots():
-            rec(r, 0)
-        return "\n".join(lines)
+    def recent_str(self, *, limit: int = 20, min_s: float = 0.0) -> str:
+        """The completed-span ring rendered as the human tree — what the
+        exporter's ``/tracez`` endpoint serves on a long-lived process."""
+        spans = self.recent(limit)
+        if not spans:
+            return "(no completed spans yet)"
+        return _render_tree(spans, min_s=min_s)
+
+
+def _render_tree(roots: list[Span], *, min_s: float = 0.0) -> str:
+    lines: list[str] = []
+
+    def rec(sp: Span, depth: int):
+        if sp.total_s < min_s:
+            return
+        attrs = " ".join(f"{k}={_jsonable(v)}" for k, v in sp.attrs.items())
+        lines.append(
+            f"{'  ' * depth}{sp.name:<{max(1, 40 - 2 * depth)}} "
+            f"total={sp.total_s * 1e3:9.2f}ms self={sp.self_s * 1e3:9.2f}ms"
+            + (f"  [{attrs}]" if attrs else "")
+        )
+        for c in sp.children:
+            rec(c, depth + 1)
+
+    for r in roots:
+        rec(r, 0)
+    return "\n".join(lines)
 
 
 def _jsonable(v):

@@ -240,18 +240,28 @@ class MicroBatcher:
                 self.batches_served += 1
                 metrics.counter("serve.batches").inc()
                 metrics.histogram("serve.batch_size").observe(len(reqs))
+                # live backlog gauge: what /metrics and /varz scrape while
+                # the server runs — rising depth is the overload signal
+                # *before* deadline/shed tallies start moving
+                metrics.gauge("serve.queue_depth").set(self._q.qsize())
                 if self.observer is not None:  # off the response critical path
                     self.observer(X[: len(reqs)])
 
     def snapshot(self) -> dict:
         """Latency percentiles plus the degradation tallies — the one
-        read-out an operator needs to see overload (rising ``timeouts`` /
-        ``shed``) before it becomes an outage."""
+        read-out an operator needs to see overload (rising ``queue_depth``,
+        then ``timeouts`` / ``shed``) before it becomes an outage.  This
+        dict is what the telemetry exporter's ``/varz`` serves for the
+        batcher, so it must be the *complete* picture: the PR-7 deadline /
+        load-shed counters and the live queue depth are all here."""
         s = self.stats.snapshot()
         s.update(
             batches=self.batches_served,
             timeouts=self.timeouts,
             shed=self.shed,
+            queue_depth=self._q.qsize(),
+            max_queue=self.cfg.max_queue,
+            deadline_ms=self.cfg.deadline_ms,
         )
         return s
 

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import elimination
 from repro.core.elimination import Screen
+from repro.obs import metrics
 
 
 @dataclass(frozen=True)
@@ -94,8 +95,9 @@ class DriftMonitor:
         with self._lock:
             s = self._running
         if s is None or int(s.count) < self.min_docs:
-            return DriftReport(False, 0, np.zeros(0, np.int64), 0.0,
-                               0 if s is None else int(s.count))
+            return self._report(DriftReport(
+                False, 0, np.zeros(0, np.int64), 0.0,
+                0 if s is None else int(s.count)))
         var = np.asarray(s.variances)
         lams = self.lams[:, None]
         # A feature offends component c when it was eliminated from c's
@@ -105,13 +107,26 @@ class DriftMonitor:
         with np.errstate(divide="ignore", invalid="ignore"):
             ratios = np.where(self.eliminated_by, var[None, :] / lams, 0.0)
         max_ratio = float(ratios.max()) if ratios.size else 0.0
-        return DriftReport(
+        return self._report(DriftReport(
             triggered=offending.size > 0,
             n_offending=int(offending.size),
             offending=offending,
             max_ratio=max_ratio,
             docs_seen=int(s.count),
-        )
+        ))
+
+    @staticmethod
+    def _report(rep: DriftReport) -> DriftReport:
+        """Mirror the verdict into the registry: the ``serve.drift.*``
+        gauges are what the telemetry exporter's ``serve_drift`` health
+        rule watches — the first hop from monitoring toward auto-refit (a
+        refit service consumes the same gauge the /healthz rule does)."""
+        metrics.gauge("serve.drift.triggered").set(1.0 if rep.triggered
+                                                   else 0.0)
+        metrics.gauge("serve.drift.max_ratio").set(rep.max_ratio)
+        metrics.gauge("serve.drift.offending").set(rep.n_offending)
+        metrics.gauge("serve.drift.docs_seen").set(rep.docs_seen)
+        return rep
 
     def reset(self) -> None:
         """Forget the running screen (call after acting on a refit flag)."""

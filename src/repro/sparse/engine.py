@@ -64,6 +64,34 @@ def _count(counters: dict | None, key: str, delta) -> None:
         counters[key] = counters.get(key, 0) + delta
 
 
+def _stream_prefetch_stats(pstats: dict, prev: dict) -> None:
+    """Push the prefetch pipeline's stall/occupancy accounting into the
+    registry *incrementally* (delta since the previous megabatch), so a
+    scrape mid-pass sees live read-bound/reduce-bound attribution instead
+    of zeros until the pass ends.  ``pstats`` is written concurrently by
+    the producer/consumer threads; reading monotone floats under the GIL
+    is safe, and deltas make double counting impossible."""
+    if not pstats:
+        return
+    dc = pstats.get("consumer_stall_s", 0.0) - prev.get("consumer_stall_s", 0.0)
+    dp = pstats.get("producer_stall_s", 0.0) - prev.get("producer_stall_s", 0.0)
+    if dc > 0:
+        metrics.counter("ingest.prefetch.consumer_stall_s").inc(dc)
+        prev["consumer_stall_s"] = pstats.get("consumer_stall_s", 0.0)
+    if dp > 0:
+        metrics.counter("ingest.prefetch.producer_stall_s").inc(dp)
+        prev["producer_stall_s"] = pstats.get("producer_stall_s", 0.0)
+    items = pstats.get("items", 0)
+    di = items - prev.get("items", 0)
+    if di > 0:
+        occ = (pstats.get("occupancy_sum", 0)
+               - prev.get("occupancy_sum", 0)) / di
+        metrics.histogram("ingest.prefetch.occupancy").observe(occ)
+        metrics.gauge("ingest.prefetch.queue_depth").set(occ)
+        prev["items"] = items
+        prev["occupancy_sum"] = pstats.get("occupancy_sum", 0)
+
+
 def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
            prefetch_depth, host_id, num_hosts, counters, launch_key,
            checkpointer: PassCheckpointer | None = None, kind: str = ""):
@@ -114,6 +142,7 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
         start_batch=start_batch,
     )
     pstats: dict = {}
+    pprev: dict = {}
     if prefetch_depth > 0:
         it = prefetch(it, size=prefetch_depth, stats=pstats)
     done = start_batch
@@ -125,6 +154,10 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
                 tuple(getattr(acc, f) for f in acc._acc_fields)
             )
         _bump(counters, **{launch_key: 1, "chunks": mb.n_chunks})
+        # Stream prefetch stall/occupancy into the registry NOW, not at
+        # pass end: a multi-hour Gram pass scraped over /metrics shows its
+        # read-vs-reduce attribution mid-flight instead of zeros.
+        _stream_prefetch_stats(pstats, pprev)
         done += 1
         if checkpointer is not None and done % checkpointer.every == 0:
             with trace.span("ingest.resume.checkpoint", kind=launch_key,
@@ -140,20 +173,18 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
     if dr:
         _count(counters, "io_retries", dr)
     if pstats:
-        cstall = pstats.get("consumer_stall_s", 0.0)
-        wstall = pstats.get("producer_stall_s", 0.0)
+        # Registry got its share incrementally above; flush whatever the
+        # producer thread recorded after the last megabatch, then write
+        # the pass TOTALS into the diagnostics dict (which, unlike the
+        # registry, is per-call and so wants totals, not deltas).
+        _stream_prefetch_stats(pstats, pprev)
         if counters is not None:
             counters["prefetch_consumer_stall_s"] = (
-                counters.get("prefetch_consumer_stall_s", 0.0) + cstall)
+                counters.get("prefetch_consumer_stall_s", 0.0)
+                + pstats.get("consumer_stall_s", 0.0))
             counters["prefetch_producer_stall_s"] = (
-                counters.get("prefetch_producer_stall_s", 0.0) + wstall)
-        metrics.counter("ingest.prefetch.consumer_stall_s").inc(cstall)
-        metrics.counter("ingest.prefetch.producer_stall_s").inc(wstall)
-        items = pstats.get("items", 0)
-        if items:
-            mean_occ = pstats.get("occupancy_sum", 0) / items
-            metrics.histogram("ingest.prefetch.occupancy").observe(mean_occ)
-            metrics.gauge("ingest.prefetch.queue_depth").set(mean_occ)
+                counters.get("prefetch_producer_stall_s", 0.0)
+                + pstats.get("producer_stall_s", 0.0))
     return acc
 
 

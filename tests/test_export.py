@@ -1,0 +1,473 @@
+"""Live-telemetry layer: delta-aware exporter, HTTP endpoints, health
+rules, and the numerical-health monitors on the solver path.
+
+Covers the PR-8 acceptance surface: /metrics serves valid Prometheus text
+exposition for every instrument type, /healthz flips 200 -> 503 when a
+critical rule (forced ``solver.nonfinite``) fires, the JSONL sink holds a
+>= 2-point timestamped delta series per run, delta samples stay
+consistent while worker threads hammer ``Histogram.observe`` and
+``Registry.merge`` mid-snapshot, and every ``trace.span(...)`` call site
+in the tree uses a ``<subsystem>.<event>`` name that the ROADMAP naming
+table documents."""
+import json
+import re
+import threading
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.obs import health, metrics, trace
+from repro.obs.export import (
+    TelemetryExporter, _DeltaTracker, _prom_name, _prom_num,
+)
+from repro.obs.health import HealthEngine, HealthRule
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture()
+def fresh_registry():
+    with metrics.use_registry() as reg:
+        yield reg
+
+
+def _get(port, path):
+    """(status, body) for a local GET — urllib raises on 4xx/5xx, but a
+    503 /healthz is a *successful* observation here."""
+    try:
+        r = urllib.request.urlopen(f"http://127.0.0.1:{port}{path}", timeout=10)
+        return r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+# ------------------------------------------------------------- delta samples
+
+def test_delta_tracker_counter_delta_and_rate(fresh_registry):
+    reg = fresh_registry
+    reg.counter("ingest.chunks").inc(10)
+    tr = _DeltaTracker()
+    s1 = tr.sample(reg, 2.0)
+    assert s1["ingest.chunks"]["value"] == 10.0
+    assert s1["ingest.chunks"]["delta"] == 10.0
+    assert s1["ingest.chunks"]["rate"] == pytest.approx(5.0)
+    reg.counter("ingest.chunks").inc(4)
+    s2 = tr.sample(reg, 2.0)
+    assert s2["ingest.chunks"]["value"] == 14.0
+    assert s2["ingest.chunks"]["delta"] == 4.0          # interval, not lifetime
+    s3 = tr.sample(reg, 2.0)
+    assert s3["ingest.chunks"]["delta"] == 0.0
+
+
+def test_delta_tracker_histogram_interval_percentiles(fresh_registry):
+    reg = fresh_registry
+    h = reg.histogram("serve.latency_s")
+    tr = _DeltaTracker()
+    h.observe_many([1.0, 1.0, 1.0])
+    s1 = tr.sample(reg, 1.0)
+    assert s1["serve.latency_s"]["count_delta"] == 3
+    assert s1["serve.latency_s"]["p99"] == 1.0
+    # the second interval's percentiles must see ONLY the new samples
+    h.observe_many([5.0, 5.0])
+    s2 = tr.sample(reg, 1.0)
+    rec = s2["serve.latency_s"]
+    assert rec["count_delta"] == 2
+    assert rec["p50"] == 5.0 and rec["p99"] == 5.0
+    assert rec["samples"] == [5.0, 5.0]
+    assert rec["count"] == 5                            # lifetime kept too
+    # an idle interval reports empty evidence, not stale percentiles
+    s3 = tr.sample(reg, 1.0)
+    assert s3["serve.latency_s"]["count_delta"] == 0
+    assert s3["serve.latency_s"]["samples"] == []
+
+
+def test_delta_tracker_survives_window_overflow(fresh_registry):
+    reg = fresh_registry
+    h = reg.histogram("solver.sweeps")
+    h._samples = h._samples.__class__(h._samples, maxlen=4)  # tiny window
+    tr = _DeltaTracker()
+    tr.sample(reg, 1.0)
+    h.observe_many([1, 2, 3, 4, 5, 6])   # 6 new, window holds 4
+    rec = tr.sample(reg, 1.0)["solver.sweeps"]
+    assert rec["count_delta"] == 6
+    assert rec["samples"] == [3, 4, 5, 6]  # best available evidence
+
+
+def test_prom_name_and_num():
+    assert _prom_name("serve.latency_s") == "serve_latency_s"
+    assert _prom_name("kernel.launches.gram") == "kernel_launches_gram"
+    assert _prom_name("0bad") == "_0bad"
+    assert _prom_num(5.0) == "5"
+    assert _prom_num(0.25) == "0.25"
+    assert _prom_num(float("nan")) == "NaN"
+    assert _prom_num(float("inf")) == "+Inf"
+
+
+# ------------------------------------------------------------- health engine
+
+def _counter_rec(value, delta, dt=1.0):
+    return {"type": "counter", "value": float(value), "delta": float(delta),
+            "rate": float(delta) / dt, "dt_s": dt}
+
+
+def test_health_rule_validation():
+    with pytest.raises(ValueError):
+        HealthRule("r", "m", "!=", 1.0)
+    with pytest.raises(ValueError):
+        HealthRule("r", "m", ">", 1.0, aspect="p75")
+    with pytest.raises(ValueError):
+        HealthRule("r", "m", ">", 1.0, severity="fatal")
+
+
+def test_health_engine_severity_ladder():
+    eng = HealthEngine([
+        HealthRule("crit", "a", ">=", 1.0, severity="critical"),
+        HealthRule("warn", "b", ">=", 1.0, severity="warn"),
+    ])
+    hs = eng.evaluate({"a": _counter_rec(0, 0), "b": _counter_rec(0, 0)}, t=100.0)
+    assert hs.status == "ok" and hs.ok and hs.http_status == 200
+    hs = eng.evaluate({"a": _counter_rec(0, 0), "b": _counter_rec(1, 1)}, t=101.0)
+    assert hs.status == "degraded" and hs.http_status == 200
+    hs = eng.evaluate({"a": _counter_rec(1, 1), "b": _counter_rec(1, 1)}, t=102.0)
+    assert hs.status == "unhealthy" and hs.http_status == 503
+    assert {f.rule for f in hs.firing} == {"crit", "warn"}
+    assert "crit" in hs.describe()
+
+
+def test_health_engine_missing_metric_does_not_fire():
+    eng = HealthEngine([HealthRule("r", "never.recorded", ">=", 0.0)])
+    hs = eng.evaluate({}, t=1.0)
+    assert hs.ok and hs.rules_evaluated == 1
+
+
+def test_health_engine_delta_sums_over_window():
+    eng = HealthEngine([HealthRule("burst", "c", ">=", 5.0,
+                                   window_s=10.0, aspect="delta")])
+    for i in range(3):   # 2 per interval: any single interval is below 5
+        hs = eng.evaluate({"c": _counter_rec(2 * (i + 1), 2)}, t=100.0 + i)
+    assert hs.status == "unhealthy"
+    assert hs.firing[0].value == pytest.approx(6.0)
+    # ...and samples outside the window age out of the aggregate
+    hs = eng.evaluate({"c": _counter_rec(6, 0)}, t=200.0)
+    assert hs.ok
+
+
+def test_health_engine_percentile_min_count_suppresses():
+    rule = HealthRule("p99", "h", ">", 0.5, window_s=60.0, aspect="p99",
+                      min_count=20)
+    eng = HealthEngine([rule])
+    hist = {"type": "histogram", "count": 5, "sum": 5.0, "count_delta": 5,
+            "dt_s": 1.0, "samples": [9.0] * 5}
+    hs = eng.evaluate({"h": hist}, t=100.0)
+    assert hs.ok                       # 5 samples < min_count=20: no verdict
+    for i in range(4):
+        hs = eng.evaluate({"h": hist}, t=101.0 + i)
+    assert hs.status == "unhealthy"    # 25 pooled samples, p99=9.0 > 0.5
+
+
+def test_solver_nonfinite_rule_latches_on_lifetime_value():
+    eng = HealthEngine(health.solver_rules())
+    hs = eng.evaluate({"solver.nonfinite": _counter_rec(1, 1)}, t=100.0)
+    assert hs.status == "unhealthy"
+    # the fit that NaN'd is long past (delta 0) — still unhealthy
+    hs = eng.evaluate({"solver.nonfinite": _counter_rec(1, 0)}, t=500.0)
+    assert hs.status == "unhealthy"
+
+
+def test_default_rule_packs_are_wellformed():
+    rules = health.default_rules()
+    assert len({r.name for r in rules}) == len(rules)
+    for r in rules:
+        assert re.fullmatch(r"[a-z0-9_]+", r.name)
+
+
+# ----------------------------------------------------- numerical-health hooks
+
+def test_observe_result_health_counts_nonfinite_and_stall(fresh_registry):
+    from repro.core.bcd import BCDResult, observe_result_health
+
+    def res(obj, sweeps, kernel_obj=None):
+        eye = np.eye(3)
+        return BCDResult(X=eye, Z=eye / 3.0, obj=np.float64(obj),
+                         phi=np.float64(0.0), history=np.zeros(8),
+                         sweeps=np.int32(sweeps), kernel_obj=kernel_obj)
+
+    nf, st = observe_result_health(res(1.0, 2), max_sweeps=8)
+    assert (nf, st) == (False, False)
+    nf, st = observe_result_health(res(float("nan"), 8), max_sweeps=8)
+    assert (nf, st) == (True, True)
+    assert fresh_registry.value("solver.nonfinite") == 1
+    assert fresh_registry.value("solver.stalled") == 1
+    # the kernel's on-chip objective wins when present
+    nf, _ = observe_result_health(res(1.0, 2, kernel_obj=float("inf")),
+                                  max_sweeps=8)
+    assert nf
+    assert fresh_registry.value("solver.nonfinite") == 2
+
+
+def test_fit_records_solver_health_counters(fresh_registry):
+    """A healthy fit must evaluate the monitors and record zero faults."""
+    from repro.core import SPCAConfig, fit_components
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(80, 50))
+    A[:, :5] += 2.5 * rng.normal(size=(80, 1))
+    fit_components(A, 1, 4,
+                   cfg=SPCAConfig(max_sweeps=32, lam_search_evals=4))
+    assert fresh_registry.value("solver.nonfinite", default=0) == 0
+    # stalls may legitimately occur; the instrument just has to be sane
+    assert fresh_registry.value("solver.stalled", default=0) >= 0
+
+
+# ------------------------------------------------------------- exporter core
+
+def test_exporter_jsonl_is_a_delta_series(tmp_path, fresh_registry):
+    path = str(tmp_path / "m.jsonl")
+    reg = fresh_registry
+    reg.counter("ingest.chunks").inc(3)
+    exp = TelemetryExporter(reg, interval_s=60.0, jsonl_path=path,
+                            extra={"run": "t"})
+    exp.start()                 # baseline sample
+    reg.counter("ingest.chunks").inc(2)
+    exp.sample_now()
+    exp.stop()                  # final flush
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) >= 3
+    for rec in lines:
+        assert rec["run"] == "t"
+        assert rec["t_unix_s"] > 0 and "metrics" in rec and "health" in rec
+    assert lines[0]["metrics"]["ingest.chunks"]["delta"] == 3.0
+    assert lines[1]["metrics"]["ingest.chunks"]["delta"] == 2.0
+    assert lines[2]["metrics"]["ingest.chunks"]["delta"] == 0.0
+    assert [r["t_unix_s"] for r in lines] == sorted(
+        r["t_unix_s"] for r in lines)
+
+
+def test_exporter_no_thread_until_started(fresh_registry):
+    before = threading.active_count()
+    exp = TelemetryExporter(fresh_registry, interval_s=0.01)
+    assert threading.active_count() == before     # zero overhead uninstalled
+    assert exp.port is None
+    with exp:
+        pass
+    assert threading.active_count() == before
+
+
+def test_exporter_background_loop_samples(fresh_registry):
+    exp = TelemetryExporter(fresh_registry, interval_s=0.02)
+    with exp:
+        deadline = time.time() + 5.0
+        while exp.samples_taken < 3 and time.time() < deadline:
+            time.sleep(0.01)
+    assert exp.samples_taken >= 3
+
+
+# ------------------------------------------------------------ HTTP endpoints
+
+_PROM_LINE = re.compile(
+    r'^[A-Za-z_][A-Za-z0-9_]*(\{quantile="0\.\d+"\})? '
+    r"(NaN|[+-]Inf|-?\d+(\.\d+)?([eE][+-]?\d+)?)$"
+)
+
+
+def test_http_endpoints_end_to_end(tmp_path, fresh_registry):
+    reg = fresh_registry
+    reg.counter("serve.requests").inc(7)
+    reg.gauge("serve.queue_depth").set(2)
+    reg.histogram("serve.latency_s").observe_many([0.01, 0.02])
+    path = str(tmp_path / "m.jsonl")
+    exp = TelemetryExporter(reg, interval_s=30.0, port=0, jsonl_path=path,
+                            rules=health.default_rules())
+    exp.add_snapshot_provider("serve.batcher",
+                              lambda: {"queue_depth": 0, "shed": 0})
+    exp.add_snapshot_provider("broken", lambda: 1 / 0)
+    with trace.enable() as t, exp:
+        port = exp.port
+        assert port and port > 0
+
+        # /metrics: valid exposition for every instrument type
+        st, body = _get(port, "/metrics")
+        assert st == 200
+        assert "serve_requests_total 7" in body
+        assert "serve_queue_depth 2" in body
+        assert '# TYPE serve_latency_s summary' in body
+        assert 'serve_latency_s{quantile="0.99"}' in body
+        assert "serve_latency_s_count 2" in body
+        for line in body.strip().splitlines():
+            if line.startswith("#"):
+                assert re.match(r"^# TYPE [A-Za-z_][A-Za-z0-9_]* "
+                                r"(counter|gauge|summary)$", line), line
+            else:
+                assert _PROM_LINE.match(line), line
+
+        # /healthz: ok -> 503 once a fault-injected critical rule fires
+        st, _ = _get(port, "/healthz")
+        assert st == 200
+        reg.counter("solver.nonfinite").inc()
+        exp.sample_now()
+        st, hz = _get(port, "/healthz")
+        assert st == 503
+        hz = json.loads(hz)
+        assert hz["status"] == "unhealthy"
+        assert [f["rule"] for f in hz["firing"]] == ["solver_nonfinite"]
+
+        # /varz: registry + providers, provider errors contained
+        st, vz = _get(port, "/varz")
+        assert st == 200
+        v = json.loads(vz)
+        assert v["metrics"]["serve.requests"] == 7
+        assert v["serve.batcher"] == {"queue_depth": 0, "shed": 0}
+        assert "ZeroDivisionError" in v["broken"]["error"]
+        assert v["health"]["status"] == "unhealthy"
+
+        # /tracez: completed spans show up
+        with trace.span("serve.batch", batch=4):
+            pass
+        st, tz = _get(port, "/tracez")
+        assert st == 200 and "serve.batch" in tz
+
+        st, _ = _get(port, "/nope")
+        assert st == 404
+    assert exp.port is None          # socket closed on stop
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) >= 2           # acceptance: a >=2-point series
+
+
+def test_tracez_without_tracer(fresh_registry):
+    exp = TelemetryExporter(fresh_registry)
+    assert "no tracer installed" in exp.tracez()
+
+
+# ------------------------------------------------- thread-safety (satellite)
+
+def test_snapshot_loop_under_concurrent_observe_and_merge(fresh_registry):
+    """The exporter's delta snapshots must stay internally consistent while
+    worker threads observe into the histogram AND merge foreign registries
+    into the exported one — the exact traffic pattern of a streaming fit
+    (per-shard registries merged in) under live scraping."""
+    reg = fresh_registry
+    exp = TelemetryExporter(reg, interval_s=0.001)
+    N_THREADS, N_OBS = 4, 300
+    stop = threading.Event()
+    errors: list = []
+
+    def observer():
+        h = reg.histogram("serve.latency_s")
+        for i in range(N_OBS):
+            h.observe(float(i % 7))
+            reg.counter("serve.requests").inc()
+
+    def merger():
+        for _ in range(50):
+            other = metrics.Registry()
+            other.counter("serve.requests").inc(2)
+            other.histogram("serve.latency_s").observe_many([1.0, 2.0])
+            reg.merge(other)
+
+    def sampler():
+        tr = _DeltaTracker()
+        total_delta = 0.0
+        while not stop.is_set():
+            s = tr.sample(reg, 0.001)
+            rec = s.get("serve.requests")
+            if rec is not None:
+                if rec["delta"] < 0:
+                    errors.append(f"negative delta {rec['delta']}")
+                total_delta += rec["delta"]
+            hrec = s.get("serve.latency_s")
+            if hrec is not None and hrec["count_delta"] < 0:
+                errors.append("negative histogram count_delta")
+        s = tr.sample(reg, 0.001)
+        total_delta += s["serve.requests"]["delta"]
+        if total_delta != reg.value("serve.requests"):
+            errors.append(
+                f"delta sum {total_delta} != lifetime "
+                f"{reg.value('serve.requests')}")
+
+    with exp:   # the exporter's own loop runs concurrently too
+        threads = [threading.Thread(target=observer) for _ in range(N_THREADS)]
+        threads += [threading.Thread(target=merger)]
+        st = threading.Thread(target=sampler)
+        st.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        st.join()
+    assert not errors
+    expect = N_THREADS * N_OBS + 50 * 2
+    assert reg.value("serve.requests") == expect
+    assert reg.get("serve.latency_s").count == N_THREADS * N_OBS + 50 * 2
+
+
+# ----------------------------------------------------- dump_jsonl (satellite)
+
+def test_dump_jsonl_multi_run_append(tmp_path):
+    """Repeated dumps APPEND — the file is a cross-run series, and each
+    line stays independently parseable with its own timestamp/extras."""
+    path = str(tmp_path / "m.jsonl")
+    r1 = metrics.Registry()
+    r1.counter("ingest.chunks").inc(5)
+    r1.dump_jsonl(path, extra={"run": "a"})
+    r2 = metrics.Registry()
+    r2.counter("ingest.chunks").inc(9)
+    r2.dump_jsonl(path, extra={"run": "b"})
+    r2.dump_jsonl(path)
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) == 3
+    assert [l.get("run") for l in lines] == ["a", "b", None]
+    assert [l["metrics"]["ingest.chunks"] for l in lines] == [5, 9, 9]
+    assert all(l["t_unix_s"] > 0 for l in lines)
+
+
+# ------------------------------------------------------- tracer ring + lint
+
+def test_tracer_keeps_ring_of_recent_roots():
+    tr = trace.Tracer(keep_recent=3)
+    trace.install(tr)
+    try:
+        for i in range(5):
+            with trace.span("serve.batch", i=i):
+                with trace.span("solver.solve"):
+                    pass
+    finally:
+        trace.install(None)
+    recent = tr.recent()
+    assert len(recent) == 3                     # ring bounded
+    assert [s.attrs["i"] for s in recent] == [2, 3, 4]
+    assert all(s.name == "serve.batch" for s in recent)
+    out = tr.recent_str()
+    assert "serve.batch" in out and "solver.solve" in out
+    assert trace.Tracer().recent_str() == "(no completed spans yet)"
+
+
+_SPAN_NAME = re.compile(r'trace\.span\(\s*[fr]?"([^"]+)"')
+
+
+def test_span_names_match_scheme_and_roadmap_table():
+    """Every trace.span(...) call site in src/ must use a dotted
+    ``<subsystem>.<event>`` name, and the ROADMAP naming table (between
+    the span-naming-table markers) must document it — the table is the
+    contract dashboards and health rules key on."""
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    m = re.search(r"<!-- span-naming-table:begin -->(.*?)"
+                  r"<!-- span-naming-table:end -->", roadmap, re.S)
+    assert m, "ROADMAP.md lost its span-naming-table markers"
+    documented = set(re.findall(r"`([a-z0-9_.]+)`", m.group(1)))
+
+    found = {}
+    for path in sorted((REPO / "src").rglob("*.py")):
+        for name in _SPAN_NAME.findall(path.read_text()):
+            found.setdefault(name, []).append(path.name)
+    assert found, "no trace.span call sites found under src/"
+    for name, sites in sorted(found.items()):
+        assert re.fullmatch(r"[a-z0-9_]+(\.[a-z0-9_]+)+", name), (
+            f"span name {name!r} at {sites} breaks <subsystem>.<event>")
+        assert name in documented, (
+            f"span name {name!r} at {sites} missing from the ROADMAP "
+            "span-naming table")

@@ -502,3 +502,59 @@ def test_end_to_end_fit_register_serve_drift():
         assert mb.stats.snapshot()["count"] == 600
         assert mv.projector.trace_count == 1
         assert not mon.check().triggered
+
+
+def test_batcher_snapshot_carries_live_queue_picture():
+    """snapshot() is what /varz serves for the batcher, so it must hold
+    the complete overload picture: degradation tallies, queue depth, and
+    the configured limits — not just latency percentiles."""
+    n = 60
+    pack = pack_components(_fake_components(n, 2, 4), n_features=n)
+    proj = TopicProjector(pack, impl="ref")
+    mb = MicroBatcher(proj, n, BatcherConfig(max_batch=4, max_wait_ms=0.5,
+                                             deadline_ms=75.0, max_queue=16))
+    snap = mb.snapshot()
+    assert snap["queue_depth"] == 0
+    assert snap["max_queue"] == 16 and snap["deadline_ms"] == 75.0
+    assert {"timeouts", "shed", "batches", "count"} <= set(snap)
+    mb._q.put(object())                    # un-popped backlog is visible
+    assert mb.snapshot()["queue_depth"] == 1
+    mb._q.get_nowait()
+    from repro.obs import metrics
+    with metrics.use_registry() as reg:
+        with mb:
+            assert mb.submit([1, 2], [1.0, 1.0]).result(timeout=30).shape \
+                == (2,)
+        # the serve loop mirrors the depth into the live gauge
+        assert reg.value("serve.queue_depth", default=None) == 0
+
+
+def test_drift_check_mirrors_verdict_into_gauges():
+    """DriftMonitor.check() sets the serve.drift.* gauges the exporter's
+    serve_drift health rule watches — both verdict polarities."""
+    from repro.obs import metrics
+
+    corpus, screen = _zipf_fit_screen()
+    n = corpus.n_words
+    lam = float(np.sort(np.asarray(screen.variances))[::-1][30])
+    with metrics.use_registry() as reg:
+        mon = DriftMonitor(screen, lam, min_docs=100)
+        fresh = make_corpus(400, n, topics=None, seed=99)
+        for X in fresh.batches(128):
+            mon.observe(X)
+        rep = mon.check()
+        assert not rep.triggered
+        assert reg.value("serve.drift.triggered") == 0.0
+        assert reg.value("serve.drift.docs_seen") == 400
+        rng = np.random.default_rng(7)
+        hot = np.arange(n - 4, n)
+        for X in fresh.batches(128):
+            X = X.copy()
+            X[:, hot] += rng.poisson(3.0, size=(X.shape[0], hot.size))
+            mon.observe(X)
+        rep = mon.check()
+        assert rep.triggered
+        assert reg.value("serve.drift.triggered") == 1.0
+        assert reg.value("serve.drift.max_ratio") == pytest.approx(
+            rep.max_ratio)
+        assert reg.value("serve.drift.offending") == rep.n_offending
