@@ -37,7 +37,7 @@ import sys
 # obs_span_overhead is the per-span tracing cost on the solver hot path —
 # the PR-8 exporter must stay zero-overhead when not installed, and this
 # row is what enforces it.
-GATED_PREFIXES = ("kernel_", "ingest_")
+GATED_PREFIXES = ("kernel_", "ingest_", "mesh_")
 GATED_ROWS = ("obs_span_overhead",)
 DEFAULT_THRESHOLD = 0.20
 

@@ -393,6 +393,7 @@ def solve_bcd_many(
     tau_iters: int = 80,
     panel_rows: int = 0,
     impl: str = "auto",
+    devices: int = 0,
 ) -> list[BCDResult]:
     """Solve B independent problems of (possibly) different sizes in ONE
     batched launch (`ops.bcd_solve_batched`).
@@ -405,6 +406,10 @@ def solve_bcd_many(
     solve.  This is the launch-economics primitive behind the batched
     lambda search and the batched deflation round: O(1) launches for a
     whole bracket/grid or component set instead of O(B).
+
+    ``devices > 1`` fans the padded batch out across the local device mesh
+    (`ops.bcd_solve_batched devices=`): each device solves its B/D slice,
+    still one dispatch, traced as a ``solver.device_grid`` span.
     """
     B = len(Sigmas)
     if B == 0:
@@ -428,15 +433,25 @@ def solve_bcd_many(
         Xp[k, :n, :n] = np.eye(n) if X0s[k] is None else np.asarray(X0s[k])
     from repro.kernels import ops as kernel_ops
 
-    with trace.span("solver.solve_many", batch=B, n_pad=n_pad, impl=impl):
+    def _dispatch():
         X, kernel_objs, sweeps, hist = kernel_ops.bcd_solve_batched(
             jnp.asarray(Sp, dtype), jnp.asarray(lams, dtype),
             jnp.asarray(betas, dtype), jnp.asarray(Xp, dtype),
             jnp.asarray(sizes, jnp.int32), max_sweeps=max_sweeps,
             qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
-            panel_rows=panel_rows, impl=impl,
+            panel_rows=panel_rows, impl=impl, devices=devices,
         )
         trace.device_sync(X)
+        return X, kernel_objs, sweeps, hist
+
+    if devices and int(devices) > 1:
+        with trace.span("solver.device_grid", batch=B, n_pad=n_pad,
+                        impl=impl, devices=int(devices)):
+            X, kernel_objs, sweeps, hist = _dispatch()
+    else:
+        with trace.span("solver.solve_many", batch=B, n_pad=n_pad,
+                        impl=impl):
+            X, kernel_objs, sweeps, hist = _dispatch()
     out: list[BCDResult] = []
     for k, n in enumerate(sizes):
         Xk = X[k, :n, :n]

@@ -35,6 +35,42 @@ def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+@functools.lru_cache(maxsize=None)
+def _pooled_fn(mesh: Mesh, axes: tuple, ndims: tuple):
+    """Jitted psum pooling, cached on (mesh, axes, leaf ranks).  Eager
+    shard_map retraces AND recompiles on every call (~hundreds of ms on
+    CPU), which would tax every pass finalize; under this cache the
+    compile is paid once per shape family."""
+
+    def pool(*xs):
+        return tuple(jax.lax.psum(x[0], axes) for x in xs)
+
+    in_specs = tuple(P(axes, *(None,) * (nd - 1)) for nd in ndims)
+    out_specs = tuple(P(*(None,) * (nd - 1)) for nd in ndims)
+    return jax.jit(
+        _shard_map(pool, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+
+
+def psum_partials(partials, mesh: Mesh, *, axes=None):
+    """Pool per-device partial reductions device-side — THE merge step.
+
+    ``partials`` is a pytree of arrays whose leading axis is stacked one
+    slot per device along ``axes`` (so a leaf is ``(D, ...)`` sharded or
+    shardable to ``P(axes, None, ...)``).  Each device contributes its slot
+    and one psum finishes the job; the result is the replicated sum with
+    the leading device axis dropped.  This is the same math
+    ``combine_screens`` / ``StreamingGram.merge`` guarantee on the host —
+    every distributed pooling in the repo (the dense passes below, the
+    sparse mesh passes in ``sparse/mesh_engine.py``) routes through here so
+    there is exactly one implementation of partial pooling.
+    """
+    axes = data_axes_of(mesh) if axes is None else tuple(axes)
+    flat, treedef = jax.tree_util.tree_flatten(partials)
+    fn = _pooled_fn(mesh, axes, tuple(x.ndim for x in flat))
+    return jax.tree_util.tree_unflatten(treedef, fn(*flat))
+
+
 def distributed_variances(A, mesh: Mesh, *, center: bool = True) -> Screen:
     """Per-feature variances with documents sharded over the data axes.
 
@@ -45,18 +81,18 @@ def distributed_variances(A, mesh: Mesh, *, center: bool = True) -> Screen:
     spec_in = P(axes, None)
 
     def local(a):
-        s = jnp.sum(a, axis=0)
-        ss = jnp.sum(a * a, axis=0)
-        cnt = jnp.full((1,), a.shape[0], a.dtype)
-        s = jax.lax.psum(s, axes)
-        ss = jax.lax.psum(ss, axes)
-        cnt = jax.lax.psum(cnt, axes)
+        # Stack this device's partial moments in its slot of the (D, ...)
+        # partials; pooling happens once in psum_partials.
+        s = jnp.sum(a, axis=0)[None]
+        ss = jnp.sum(a * a, axis=0)[None]
+        cnt = jnp.full((1, 1), a.shape[0], a.dtype)
         return s, ss, cnt
 
     shard_fn = _shard_map(
-        local, mesh=mesh, in_specs=(spec_in,), out_specs=(P(None), P(None), P(None))
+        local, mesh=mesh, in_specs=(spec_in,),
+        out_specs=(P(axes, None), P(axes, None), P(axes, None)),
     )
-    s, ss, cnt = shard_fn(A)
+    s, ss, cnt = psum_partials(shard_fn(A), mesh, axes=axes)
     m = cnt[0]
     mean = s / m if center else jnp.zeros_like(s)
     var = jnp.maximum(ss / m - mean * mean, 0.0)
@@ -73,14 +109,15 @@ def distributed_gram(A_red, mesh: Mesh, *, means=None) -> jax.Array:
     spec_in = P(axes, None)
 
     def local(a):
-        g = a.T @ a
-        cnt = jnp.full((1,), a.shape[0], a.dtype)
-        return jax.lax.psum(g, axes), jax.lax.psum(cnt, axes)
+        g = (a.T @ a)[None]
+        cnt = jnp.full((1, 1), a.shape[0], a.dtype)
+        return g, cnt
 
     shard_fn = _shard_map(
-        local, mesh=mesh, in_specs=(spec_in,), out_specs=(P(None, None), P(None))
+        local, mesh=mesh, in_specs=(spec_in,),
+        out_specs=(P(axes, None, None), P(axes, None)),
     )
-    g, cnt = shard_fn(A_red)
+    g, cnt = psum_partials(shard_fn(A_red), mesh, axes=axes)
     m = cnt[0]
     if means is not None:
         g = g - m * jnp.outer(means, means)

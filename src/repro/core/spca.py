@@ -94,6 +94,17 @@ class SPCAConfig:
     io_backoff_s: float = 0.05   # initial retry backoff (doubles per attempt)
     resume_dir: str | None = None  # pass-checkpoint root (None = no resume)
     checkpoint_every: int = 16   # megabatches between pass checkpoints
+    # Device-mesh data parallelism (sparse/mesh_engine.py + the
+    # `ops.bcd_solve_batched devices=` leg).  ``mesh_devices > 1``
+    # partitions work across the first D local devices (a 1-D 'data'
+    # mesh — off-TPU force the topology with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=D before jax
+    # inits): the batched lambda search solves B·D evals per round
+    # (ceil(evals/(B·D)) launches), and with ``data_parallel`` the
+    # streaming corpus passes shard megabatches lane-per-device
+    # (ceil(B/D) ingest dispatches per pass).
+    mesh_devices: int = 0        # 0/1 = single device (the default path)
+    data_parallel: bool = True   # also shard the corpus passes, not just solves
 
 
 def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
@@ -108,9 +119,21 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
     pass/launch tallies (see `repro.sparse.engine`).
     """
     if hasattr(data, "iter_chunks"):
-        from repro.sparse import engine
+        from repro.sparse import engine, mesh_engine
 
         cfg = cfg if cfg is not None else SPCAConfig()
+        devices = int(getattr(cfg, "mesh_devices", 0) or 0)
+        if devices > 1 and getattr(cfg, "data_parallel", True):
+            return mesh_engine.mesh_sparse_stats(
+                data, devices=devices, center=center, impl=cfg.csr_impl,
+                chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
+                megabatch=cfg.megabatch_chunks,
+                prefetch_depth=cfg.ingest_prefetch,
+                counters=counters,
+                io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
+                resume_dir=cfg.resume_dir,
+                checkpoint_every=cfg.checkpoint_every,
+            )
         return engine.sparse_stats(
             data, center=center, impl=cfg.csr_impl,
             chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
@@ -563,7 +586,11 @@ def _search_lambda_batched(
     Sigma_perm = np.asarray(Sigma_base)[np.ix_(order, order)]
     dtype = np.asarray(Sigma_base).dtype
 
-    B = cfg.batch_evals
+    # A device mesh widens each round: D devices solve B problems each, so
+    # one launch covers B·D evaluations and a bracket search over E evals
+    # costs ceil(E/(B·D)) sequential launches.
+    D = max(1, int(getattr(cfg, "mesh_devices", 0) or 1))
+    B = cfg.batch_evals * D
     rounds = max(1, -(-cfg.lam_search_evals // B))
     better = _card_better(cfg, target_card)
     best: dict | None = None
@@ -596,6 +623,7 @@ def _search_lambda_batched(
                 tol=cfg.tol, tau_iters=cfg.tau_iters,
                 panel_rows=cfg.panel_rows,
                 impl=_batched_impl(cfg.solver_impl),
+                devices=D if D > 1 else 0,
             )
         launches += 1
         evals += len(solved)
@@ -658,6 +686,8 @@ def _search_lambda_batched(
             solve_launches=launches,
             batched=True,
         )
+        if D > 1:
+            diagnostics["devices"] = D
     return PCResult(
         x=x,
         support=nz,
@@ -744,6 +774,7 @@ def _refine_components_batched(
         else build(r.reduced_support)
         for r in results
     ]
+    D = max(1, int(getattr(cfg, "mesh_devices", 0) or 1))
     with trace.span("solver.batched_refine", components=len(results)):
         solved = bcd.solve_bcd_many(
             Sigmas, [r.lam for r in results],
@@ -752,6 +783,7 @@ def _refine_components_batched(
             max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps, tol=cfg.tol,
             tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
             impl=_batched_impl(cfg.solver_impl),
+            devices=D if D > 1 else 0,
         )
     metrics.counter("solver.launches").inc()
     out: list[PCResult] = []

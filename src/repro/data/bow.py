@@ -38,6 +38,19 @@ from repro.core.elimination import Screen, select_support
 from repro.kernels import ops
 
 
+def local_support_cols(support: np.ndarray, col_ids: np.ndarray) -> np.ndarray:
+    """Map global column ids to support positions (support is sorted — it
+    comes from flatnonzero); entries off the support get the >= n_hat
+    sentinel the kernel/oracle drop.  Vectorized over any entry-array shape
+    (one chunk, a megabatch, or a mesh superbatch).  The single
+    implementation behind ``StreamingGram`` and the mesh Gram pass."""
+    support = np.asarray(support)
+    k = support.size
+    pos = np.searchsorted(support, col_ids)
+    pos_c = np.minimum(pos, max(k - 1, 0))
+    return np.where(support[pos_c] == col_ids, pos_c, k).astype(np.int32)
+
+
 class StreamingAccumulator:
     """Shared update/merge/finalize protocol for one-pass reductions.
 
@@ -219,12 +232,7 @@ class StreamingGram(StreamingAccumulator):
         it comes from flatnonzero); entries off the support get the
         >= n_hat sentinel the kernel/oracle drop.  Vectorized over any
         entry-array shape (one chunk or a whole megabatch)."""
-        k = self.support.size
-        pos = np.searchsorted(self.support, col_ids)
-        pos_c = np.minimum(pos, k - 1)
-        return np.where(
-            self.support[pos_c] == col_ids, pos_c, k
-        ).astype(np.int32)
+        return local_support_cols(self.support, col_ids)
 
     def _check_rows(self, n_rows: int) -> None:
         if n_rows > self.chunk_rows:

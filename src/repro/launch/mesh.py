@@ -46,3 +46,27 @@ def make_dev_mesh(shape=(2, 2), axes=("data", "model")):
     devices = jax.devices()[:n]
     dev_array = np.asarray(devices).reshape(shape)
     return jax.sharding.Mesh(dev_array, axes, **_axis_type_kwargs(len(axes)))
+
+
+def make_data_mesh(n_devices: int = 0, *, axis: str = "data"):
+    """1-D pure data-parallel mesh over the first ``n_devices`` local devices.
+
+    This is the mesh the sparse leg uses (sparse/mesh_engine.py sharded
+    corpus passes, ops.bcd_solve_batched ``devices=`` lambda-grid fan-out):
+    documents / lambda-grid problems shard along the single ``data`` axis and
+    nothing is model-parallel.  ``n_devices`` of 0 means all local devices.
+    Off-TPU the device count comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``, which must be set
+    before the first jax init (device topology is locked at that point).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = int(n_devices) if n_devices else len(devices)
+    if n > len(devices):
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+        )
+    dev_array = np.asarray(devices[:n])
+    return jax.sharding.Mesh(dev_array, (axis,), **_axis_type_kwargs(1))

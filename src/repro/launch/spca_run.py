@@ -14,9 +14,14 @@ even load them into memory" regime.  The per-component lines and the
 final total report the solve-launch AND corpus-pass/ingest-launch
 economics.
 
-With --mesh NxM (and XLA_FLAGS device count) the variance/gram passes run
-as shard_map collectives over the data axes (core/distributed.py) — the
-same program a 512-chip run would execute per pod.
+With ``--devices D`` (and, off-TPU, ``XLA_FLAGS=
+--xla_force_host_platform_device_count=D`` set before launch — the device
+topology is locked at first jax init) the fit goes data-parallel over a
+1-D device mesh (``repro.sparse.mesh_engine`` + the batched solver's
+``devices=`` leg): each corpus pass drains superbatches of D megabatches
+in ceil(B/D) sharded dispatches with per-device resident accumulators
+merged once at finalize, and every lambda-search round solves
+batch_evals·D evaluations in one launch.  Pass economics stay 1 + 1.
 
 Serving
 -------
@@ -123,6 +128,12 @@ def main():
     ap.add_argument("--batch-evals", type=int, default=0,
                     help=">1: run each lambda-search round as ONE batched "
                          "solve launch of this many evaluations")
+    ap.add_argument("--devices", type=int, default=0,
+                    help=">1: partition the streaming passes and the "
+                         "batched solves across the first D local devices "
+                         "(1-D data mesh; off-TPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=D before "
+                         "launching)")
     ap.add_argument("--trace", default="", metavar="PATH",
                     help="write the host span timeline as Chrome "
                          "trace-event JSON (Perfetto-loadable) and print "
@@ -198,18 +209,32 @@ def _run(args):
                          seed=exp.seed)
     print(f"  nnz={corpus.nnz} ({time.time() - t0:.1f}s)")
 
+    devices = max(0, args.devices)
+    if devices > 1:
+        import jax
+
+        avail = jax.local_device_count()
+        if avail < devices:
+            print(f"  --devices {devices} requested but only {avail} local "
+                  f"device(s) exist — falling back to {avail} (set "
+                  "XLA_FLAGS=--xla_force_host_platform_device_count="
+                  f"{devices} before launching to force the topology)")
+            devices = avail
+
     cfg = SPCAConfig(max_sweeps=8, lam_search_evals=8,
                      chunk_nnz=args.chunk_nnz, chunk_rows=args.chunk_rows,
                      megabatch_chunks=args.megabatch,
                      batch_evals=args.batch_evals,
                      io_retries=args.io_retries,
                      resume_dir=args.resume or None,
-                     checkpoint_every=args.checkpoint_every)
+                     checkpoint_every=args.checkpoint_every,
+                     mesh_devices=devices)
 
     ingest: dict = {}
     if args.streaming:
         from repro.sparse import write_corpus
         from repro.sparse.engine import sparse_stats
+        from repro.sparse.mesh_engine import mesh_sparse_stats
 
         store_dir = args.store_dir or tempfile.mkdtemp(prefix="csr_store_")
         t0 = time.time()
@@ -218,8 +243,8 @@ def _run(args):
         print(f"  wrote CSR store: {store.n_shards} shard(s), {mb:.1f} MB "
               f"at {store_dir} ({time.time() - t0:.1f}s)")
         t0 = time.time()
-        var, build = sparse_stats(
-            store, chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
+        pass_kw = dict(
+            chunk_nnz=cfg.chunk_nnz, chunk_rows=cfg.chunk_rows,
             megabatch=cfg.megabatch_chunks,
             prefetch_depth=cfg.ingest_prefetch,
             impl=cfg.csr_impl, counters=ingest,
@@ -227,6 +252,12 @@ def _run(args):
             resume_dir=cfg.resume_dir,
             checkpoint_every=cfg.checkpoint_every,
         )
+        if devices > 1 and cfg.data_parallel:
+            print(f"  sharding passes across {devices} device(s) "
+                  "(1-D data mesh)")
+            var, build = mesh_sparse_stats(store, devices=devices, **pass_kw)
+        else:
+            var, build = sparse_stats(store, **pass_kw)
         resumed = ingest.get("resumed_megabatches", 0)
         print(f"  out-of-core variance screen: {time.time() - t0:.1f}s "
               f"(one pass over {store.nnz} nnz, "

@@ -7,6 +7,10 @@
   engine.py — streaming screen/Gram over a store through the CSR Pallas
               kernels, multi-host merge via combine_screens, and the
               (variances, build) stats pair the SPCA driver consumes
+  mesh_engine.py — the same passes partitioned across the local device
+              mesh: superbatches of D megabatches, one sharded dispatch
+              each, per-device resident accumulators merged once at
+              finalize via core.distributed.psum_partials
   resume.py — atomic accumulator+cursor checkpoints at megabatch
               boundaries, so a killed pass restarts where it stopped
               instead of re-streaming the corpus
@@ -19,6 +23,9 @@ from .engine import (
     screen_and_gram_sparse, sparse_feature_variances, sparse_reduced_covariance,
     sparse_stats,
 )
+from .mesh_engine import (
+    mesh_feature_variances, mesh_reduced_covariance, mesh_sparse_stats,
+)
 from .resume import DEFAULT_CHECKPOINT_EVERY, PassCheckpointer, pass_fingerprint
 from .store import (
     CSRChunk, CSRMegaBatch, CSRStoreWriter, DEFAULT_CHUNK_NNZ,
@@ -30,5 +37,6 @@ __all__ = [
     "DEFAULT_CHUNK_ROWS", "DEFAULT_CHECKPOINT_EVERY", "PassCheckpointer",
     "ShardCorruptionError", "SparseCorpus", "pass_fingerprint",
     "write_corpus", "screen_and_gram_sparse", "sparse_feature_variances",
-    "sparse_reduced_covariance", "sparse_stats",
+    "sparse_reduced_covariance", "sparse_stats", "mesh_feature_variances",
+    "mesh_reduced_covariance", "mesh_sparse_stats",
 ]

@@ -49,10 +49,13 @@ DEFAULT_CHECKPOINT_EVERY = 16
 
 def pass_fingerprint(kind: str, store, *, chunk_nnz: int, chunk_rows: int,
                      megabatch: int, host_id: int, num_hosts: int,
-                     signature: dict) -> dict:
+                     signature: dict, n_devices: int = 1) -> dict:
     """Everything a saved cursor is only valid against, as a JSON-able
     dict.  Two passes with equal fingerprints stream identical megabatch
-    sequences into state-compatible accumulators."""
+    sequences into state-compatible accumulators.  ``n_devices`` is the
+    local device topology (mirrors the host topology fields): a mesh pass
+    shards its accumulator state across D devices, so a checkpoint written
+    at one D cannot restore at another."""
     fp = {
         "kind": str(kind),
         "n_rows": int(store.n_rows),
@@ -64,6 +67,7 @@ def pass_fingerprint(kind: str, store, *, chunk_nnz: int, chunk_rows: int,
         "megabatch": int(megabatch),
         "host_id": int(host_id),
         "num_hosts": int(num_hosts),
+        "n_devices": int(n_devices),
     }
     for k, v in signature.items():
         fp[f"acc_{k}"] = v

@@ -70,6 +70,56 @@ def test_distributed_screen_and_gram_pipeline():
     assert "PIPE-OK" in out
 
 
+def test_psum_partials_matches_host_pooling():
+    """The ONE partial-pooling implementation (core.distributed.psum_partials,
+    shared by the dense passes and sparse/mesh_engine): a device-side psum
+    over stacked per-device moments must equal combine_screens' host-side
+    merge of the same shards."""
+    out = _run("""
+    jax.config.update("jax_enable_x64", True)   # f64 partials end-to-end
+    from repro.core.distributed import psum_partials
+    from repro.core.elimination import combine_screens
+    from repro.data.bow import StreamingStats
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(7)
+    D, rows, n = 8, 16, 40
+    A = rng.normal(size=(D, rows, n))
+
+    # host-side truth: per-shard StreamingStats merged via combine_screens
+    parts = []
+    for d in range(D):
+        acc = StreamingStats(n)
+        acc.update(A[d])
+        parts.append(acc.finalize())
+    truth = combine_screens(parts)
+
+    # device-side: stacked partial moments pooled in ONE psum
+    s = jnp.asarray(A.sum(axis=1))                 # (D, n) per-device sums
+    ss = jnp.asarray((A * A).sum(axis=1))
+    cnt = jnp.full((D, 1), float(rows))
+    sharding = NamedSharding(mesh, P("data", None))
+    s, ss, cnt = (jax.device_put(x, sharding) for x in (s, ss, cnt))
+    ps, pss, pcnt = psum_partials((s, ss, cnt), mesh, axes=("data",))
+    m = float(pcnt[0])
+    assert m == D * rows
+    # host truth folds through the column-stats kernel (f32-level), so the
+    # agreement bar matches the dense distributed tests above
+    mean = np.asarray(ps) / m
+    var = np.asarray(pss) / m - mean * mean
+    np.testing.assert_allclose(mean, np.asarray(truth.means),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.maximum(var, 0.0),
+                               np.asarray(truth.variances),
+                               rtol=1e-5, atol=1e-6)
+    # second call with the same shapes reuses the cached compiled pool
+    ps2, _, _ = psum_partials((s, ss, cnt), mesh, axes=("data",))
+    np.testing.assert_array_equal(np.asarray(ps2), np.asarray(ps))
+    print("PSUM-OK")
+    """)
+    assert "PSUM-OK" in out
+
+
 def test_compressed_pmean_error_feedback():
     out = _run("""
     from repro.launch.mesh import make_dev_mesh
