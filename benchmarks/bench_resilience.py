@@ -1,0 +1,135 @@
+"""Resilience layer priced, not just asserted.
+
+``fit_resume_overhead_*`` is the gated row: a K-component dense fit with
+whole-fit checkpointing ON (fresh resume root per rep, so nothing is
+ever skipped and every checkpoint is actually written) vs the stock fit.
+The checkpointed time is the gated number; the stock time, the overhead
+ratio, and the checkpoint count ride in ``derived`` so a regression
+report shows WHERE the time went — mirroring ``ingest_resume_overhead_*``
+one layer up (PR 7 priced the pass checkpoints, this prices the solver
+cursor).
+
+``run_smoke`` is the --quick leg: ONE injected-fault fit end-to-end —
+a ``fused_ref`` solve is forced non-finite mid-search, the supervisor
+re-solves it on the jnp oracle path, and the fit must come back finite
+with ``solver_fallbacks >= 1``.  That exercises the fallback ladder on
+every --quick run, not only under pytest.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import SPCAConfig, fit_components
+
+
+def _bench_fit(fn, reps: int = 3) -> float:
+    """Seconds per full fit (host loop + device work)."""
+    fn()   # warm-up: jit traces for the fixed problem shape
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _dense(n_docs: int, n_feat: int, seed: int = 0) -> np.ndarray:
+    """Dense corpus with a handful of correlated lead columns so the
+    searches have real structure to find."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_docs, n_feat))
+    base = rng.normal(size=n_docs)
+    for j in range(5):
+        X[:, j] = base + 0.35 * rng.normal(size=n_docs)
+    return X
+
+
+def _resume_overhead_row(X, *, K, target_card, cfg_kw, tag):
+    def stock():
+        return fit_components(X, K, target_card=target_card,
+                              cfg=SPCAConfig(**cfg_kw))
+
+    from repro.obs import metrics
+
+    saves = {"n": 0}
+
+    def checkpointed():
+        with tempfile.TemporaryDirectory() as rd:
+            before = metrics.counter("fit.resume.checkpoints").value
+            out = fit_components(
+                X, K, target_card=target_card,
+                cfg=SPCAConfig(resume_dir=rd, fit_checkpoint_every=1,
+                               **cfg_kw),
+            )
+            saves["n"] = int(
+                metrics.counter("fit.resume.checkpoints").value - before
+            )
+            return out
+
+    t_stock = _bench_fit(stock)
+    t_ckpt = _bench_fit(checkpointed)
+    return {
+        "name": f"fit_resume_overhead_{tag}",
+        "us_per_call": t_ckpt * 1e6,
+        "derived": (
+            f"stock={t_stock * 1e6:.0f}us overhead={t_ckpt / t_stock:.3f}x "
+            f"cadence=1 ckpts={saves['n']} K={K}"
+        ),
+    }
+
+
+def _fallback_row(X, *, K, target_card, cfg_kw, tag):
+    """One injected-fault fit, end-to-end: the first fused solve of the
+    fit returns non-finite, the supervisor must land it on the oracle
+    path, and the finished components must be finite."""
+    from repro.testing import SolverFaultInjector, install_solver, nonfinite_solve
+
+    cfg = SPCAConfig(solver_impl="fused_ref", **cfg_kw)
+
+    def faulted():
+        with install_solver(SolverFaultInjector(
+            nonfinite_solve(n=0, match="bcd_solve*", times=1),
+        )):
+            diag: dict = {}
+            pcs = fit_components(X, K, target_card=target_card, cfg=cfg,
+                                 diagnostics=diag)
+            if not all(np.isfinite(p.x).all() for p in pcs):
+                raise AssertionError("fallback fit produced non-finite loadings")
+            if int(diag.get("solver_fallbacks", 0)) < 1:
+                raise AssertionError("injected fault did not trigger a fallback")
+            return diag
+
+    t = _bench_fit(faulted, reps=1)
+    diag = faulted()
+    return {
+        "name": f"fit_fallback_{tag}",
+        "us_per_call": t * 1e6,
+        "derived": (
+            f"fallbacks={diag.get('solver_fallbacks')} finite=1 "
+            f"solve_launches={diag.get('solve_launches')} K={K}"
+        ),
+    }
+
+
+def run(n_docs: int = 800, n_feat: int = 128):
+    """Full row: the gated whole-fit checkpoint overhead."""
+    X = _dense(n_docs, n_feat)
+    cfg_kw = dict(max_sweeps=10, lam_search_evals=8)
+    return [
+        _resume_overhead_row(X, K=3, target_card=6, cfg_kw=cfg_kw,
+                             tag=f"{n_docs}x{n_feat}"),
+    ]
+
+
+def run_smoke(n_docs: int = 300, n_feat: int = 48):
+    """--quick rows: resume overhead on a small fit + the injected-fault
+    fallback fit (``_smoke`` suffix keeps them out of the full-run
+    missing-row gate)."""
+    X = _dense(n_docs, n_feat)
+    cfg_kw = dict(max_sweeps=8, lam_search_evals=6)
+    return [
+        _resume_overhead_row(X, K=2, target_card=4, cfg_kw=cfg_kw,
+                             tag="smoke"),
+        _fallback_row(X, K=2, target_card=4, cfg_kw=cfg_kw, tag="smoke"),
+    ]

@@ -36,8 +36,10 @@ import sys
 # flaky.  GATED_ROWS names individual rows gated by exact match:
 # obs_span_overhead is the per-span tracing cost on the solver hot path —
 # the PR-8 exporter must stay zero-overhead when not installed, and this
-# row is what enforces it.
-GATED_PREFIXES = ("kernel_", "ingest_", "mesh_")
+# row is what enforces it.  fit_resume_* prices the whole-fit
+# checkpoint/resume layer: the solver-phase cursor must stay off the hot
+# loop the same way the pass checkpoints (ingest_resume_overhead_*) do.
+GATED_PREFIXES = ("kernel_", "ingest_", "mesh_", "fit_resume_")
 GATED_ROWS = ("obs_span_overhead",)
 DEFAULT_THRESHOLD = 0.20
 

@@ -40,7 +40,8 @@ jax.config.update("jax_enable_x64", True)
 
 _BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 _QUICK_SUITES = {"Fig1 convergence", "Fig1 history", "kernels",
-                 "ingest smoke", "mesh smoke", "obs smoke"}
+                 "ingest smoke", "mesh smoke", "obs smoke",
+                 "resilience smoke"}
 
 
 def main(argv=None) -> None:
@@ -72,7 +73,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_complexity, bench_convergence, bench_elimination, bench_ingest,
         bench_kernels, bench_lambda_search, bench_mesh, bench_obs,
-        bench_serve, bench_topics,
+        bench_resilience, bench_serve, bench_topics,
     )
 
     suites = [
@@ -90,6 +91,8 @@ def main(argv=None) -> None:
         ("lambda search", bench_lambda_search.run),
         ("serving", bench_serve.run),
         ("obs smoke", bench_obs.run_smoke),
+        ("resilience smoke", bench_resilience.run_smoke),
+        ("resilience", bench_resilience.run),
     ]
     if args.quick:
         suites = [s for s in suites if s[0] in _QUICK_SUITES]

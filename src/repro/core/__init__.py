@@ -7,18 +7,27 @@ Public API:
   spca.solve_at_lambda / search_lambda / fit_components      (driver)
   validate.duality_gap                                       (certificate)
   distributed.distributed_variances / distributed_gram       (multi-pod stats)
+  fitstate.FitCheckpointer / fit_fingerprint                 (solver resume)
 """
-from . import baselines, bcd, distributed, elimination, first_order, spca, validate
-from .bcd import BCDResult, leading_sparse_component, solve_bcd
+from . import (
+    baselines, bcd, distributed, elimination, first_order, fitstate, spca,
+    validate,
+)
+from .bcd import (
+    BCDResult, SolverDivergenceError, leading_sparse_component, solve_bcd,
+)
 from .elimination import eliminate, feature_variances, safe_support
 from .first_order import solve_first_order
+from .fitstate import FitCheckpointer, FitState, fit_fingerprint
 from .spca import PCResult, SPCAConfig, fit_components, search_lambda, solve_at_lambda
 from .validate import cardinality, duality_gap
 
 __all__ = [
-    "baselines", "bcd", "distributed", "elimination", "first_order", "spca",
-    "validate", "BCDResult", "leading_sparse_component", "solve_bcd",
-    "eliminate", "feature_variances", "safe_support", "solve_first_order",
+    "baselines", "bcd", "distributed", "elimination", "first_order",
+    "fitstate", "spca", "validate", "BCDResult", "SolverDivergenceError",
+    "leading_sparse_component", "solve_bcd", "eliminate",
+    "feature_variances", "safe_support", "solve_first_order",
+    "FitCheckpointer", "FitState", "fit_fingerprint",
     "PCResult", "SPCAConfig", "fit_components", "search_lambda",
     "solve_at_lambda", "cardinality", "duality_gap",
 ]

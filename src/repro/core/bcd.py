@@ -28,6 +28,8 @@ The coordinate loop carries ``w = Y @ u`` and refreshes it incrementally
 from __future__ import annotations
 
 import functools
+import itertools
+import os
 from typing import NamedTuple
 
 import jax
@@ -35,6 +37,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import metrics, trace
+
+
+class SolverDivergenceError(RuntimeError):
+    """A solve produced a non-finite objective on EVERY available path
+    (fused kernel and the jnp oracle fallback) — the problem itself is
+    numerically bad, not the backend.  Carries the repro coordinates and,
+    when a debris dir was configured, the path of the dumped
+    (Sigma_hat, lam, X0, n_valid) bundle."""
+
+    def __init__(self, msg: str, *, lam: float | None = None,
+                 n: int | None = None, debris_path: str | None = None):
+        super().__init__(msg)
+        self.lam = lam
+        self.n = n
+        self.debris_path = debris_path
+
+
+def is_dispatch_error(e: BaseException) -> bool:
+    """Whether ``e`` is a retriable device-dispatch failure.  XLA runtime
+    errors (and the injected test double) subclass RuntimeError; data
+    corruption (`sparse.store.ShardCorruptionError`) and
+    `SolverDivergenceError` are permanent-and-loud and must propagate
+    untouched, never be retried at fewer devices."""
+    if not isinstance(e, RuntimeError) or isinstance(e, SolverDivergenceError):
+        return False
+    from repro.sparse.store import ShardCorruptionError
+
+    return not isinstance(e, ShardCorruptionError)
+
+
+_DEBRIS_SEQ = itertools.count()
+
+
+def _dump_debris(debris_dir: str, *, Sigma, lam, X0, n_valid,
+                 tag: str = "solve") -> str:
+    """Dump a self-contained repro bundle for a diverged problem — the
+    exact (Sigma_hat, lam, X0, n_valid) the failing solve saw, loadable
+    with one ``np.load`` to replay it offline."""
+    os.makedirs(debris_dir, exist_ok=True)
+    Sigma = np.asarray(Sigma)
+    n = Sigma.shape[0]
+    while True:
+        path = os.path.join(
+            debris_dir, f"debris_{tag}_{next(_DEBRIS_SEQ):04d}.npz"
+        )
+        if not os.path.exists(path):
+            break
+    np.savez(
+        path,
+        Sigma_hat=Sigma,
+        lam=np.asarray(float(lam), np.float64),
+        X0=np.asarray(X0) if X0 is not None else np.eye(n, dtype=Sigma.dtype),
+        n_valid=np.asarray(int(n_valid if n_valid is not None else n)),
+    )
+    return path
 
 
 class BCDResult(NamedTuple):
@@ -394,6 +451,8 @@ def solve_bcd_many(
     panel_rows: int = 0,
     impl: str = "auto",
     devices: int = 0,
+    min_devices: int = 1,
+    counters: dict | None = None,
 ) -> list[BCDResult]:
     """Solve B independent problems of (possibly) different sizes in ONE
     batched launch (`ops.bcd_solve_batched`).
@@ -433,25 +492,41 @@ def solve_bcd_many(
         Xp[k, :n, :n] = np.eye(n) if X0s[k] is None else np.asarray(X0s[k])
     from repro.kernels import ops as kernel_ops
 
-    def _dispatch():
+    def _dispatch(D: int):
         X, kernel_objs, sweeps, hist = kernel_ops.bcd_solve_batched(
             jnp.asarray(Sp, dtype), jnp.asarray(lams, dtype),
             jnp.asarray(betas, dtype), jnp.asarray(Xp, dtype),
             jnp.asarray(sizes, jnp.int32), max_sweeps=max_sweeps,
             qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
-            panel_rows=panel_rows, impl=impl, devices=devices,
+            panel_rows=panel_rows, impl=impl, devices=D,
         )
         trace.device_sync(X)
         return X, kernel_objs, sweeps, hist
 
-    if devices and int(devices) > 1:
-        with trace.span("solver.device_grid", batch=B, n_pad=n_pad,
-                        impl=impl, devices=int(devices)):
-            X, kernel_objs, sweeps, hist = _dispatch()
-    else:
-        with trace.span("solver.solve_many", batch=B, n_pad=n_pad,
-                        impl=impl):
-            X, kernel_objs, sweeps, hist = _dispatch()
+    # Degraded-mode device grid: a failed sharded dispatch (an XLA/runtime
+    # error — NOT corruption, which propagates untouched) retries the round
+    # at D/2, halving down to ``min_devices``.  Each problem's result is a
+    # pure function of its inputs, so a narrower grid changes launch
+    # economics only, never the solves.
+    D = min(max(int(devices or 0), 0), B)
+    while True:
+        span_name = "solver.device_grid" if D > 1 else "solver.solve_many"
+        kw = {"devices": D} if D > 1 else {}
+        try:
+            with trace.span(span_name, batch=B, n_pad=n_pad, impl=impl,
+                            **kw):
+                X, kernel_objs, sweeps, hist = _dispatch(D)
+            break
+        except RuntimeError as e:
+            nD = max(int(min_devices), 1, D // 2)
+            if D <= 1 or nD >= D or not is_dispatch_error(e):
+                raise
+            metrics.counter("mesh.degraded").inc()
+            if counters is not None:
+                counters["mesh_degraded"] = (
+                    counters.get("mesh_degraded", 0) + 1
+                )
+            D = nD
     out: list[BCDResult] = []
     for k, n in enumerate(sizes):
         Xk = X[k, :n, :n]
@@ -496,6 +571,138 @@ def observe_result_health(res: BCDResult, *, max_sweeps: int) -> tuple[bool, boo
     if stalled:
         metrics.counter("solver.stalled").inc()
     return nonfinite, stalled
+
+
+def solve_bcd_supervised(
+    Sigma,
+    lam: float,
+    *,
+    beta: float | None = None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tol: float = 1e-7,
+    tau_iters: int = 80,
+    X0=None,
+    qp_impl: str = "jnp",
+    solver_impl: str = "jnp",
+    panel_rows: int = 0,
+    fallback: bool = True,
+    debris_dir: str | None = None,
+) -> tuple[BCDResult, int]:
+    """`solve_bcd` under the fallback ladder: solve, observe health, and
+    when the FUSED path reports a non-finite objective or a max-sweeps
+    stall, transparently re-solve the same problem on the jnp oracle
+    (counted as ``solver.fallbacks``, traced as a ``solver.fallback``
+    span).  A problem that is non-finite on both paths raises
+    `SolverDivergenceError` after dumping its repro bundle to
+    ``debris_dir`` (``solver.divergence``).  Returns ``(result,
+    fallbacks_taken)``; a stall on the oracle path is kept as the budget's
+    best effort, exactly like the unsupervised driver."""
+    res = solve_bcd(
+        Sigma, lam, beta=beta, max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+        tol=tol, tau_iters=tau_iters, X0=X0, qp_impl=qp_impl,
+        solver_impl=solver_impl, panel_rows=panel_rows,
+    )
+    nonfinite, stalled = observe_result_health(res, max_sweeps=max_sweeps)
+    Sigma_j = jnp.asarray(Sigma)
+    n = int(Sigma_j.shape[0])
+    impl = _resolve_solver_impl(solver_impl, n, Sigma_j.dtype.itemsize)
+    fallbacks = 0
+    if (nonfinite or stalled) and fallback and impl in ("fused", "fused_ref"):
+        fallbacks = 1
+        metrics.counter("solver.fallbacks").inc()
+        with trace.span("solver.fallback", n=n,
+                        reason="nonfinite" if nonfinite else "stall"):
+            res = solve_bcd(
+                Sigma, lam, beta=beta, max_sweeps=max_sweeps,
+                qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters, X0=X0,
+                qp_impl=qp_impl, solver_impl="jnp",
+            )
+        nonfinite, _ = observe_result_health(res, max_sweeps=max_sweeps)
+    if nonfinite:
+        metrics.counter("solver.divergence").inc()
+        path = None
+        if debris_dir:
+            path = _dump_debris(debris_dir, Sigma=Sigma, lam=lam, X0=X0,
+                                n_valid=None)
+        raise SolverDivergenceError(
+            f"solve diverged on every path (n={n}, lam={float(lam):.6g}"
+            + (f"; repro bundle at {path}" if path else ")"),
+            lam=float(lam), n=n, debris_path=path,
+        )
+    return res, fallbacks
+
+
+def supervise_many(
+    results: list[BCDResult],
+    Sigmas,
+    lams,
+    *,
+    X0s=None,
+    max_sweeps: int = 20,
+    qp_sweeps: int = 4,
+    tol: float = 1e-7,
+    tau_iters: int = 80,
+    fallback: bool = True,
+    debris_dir: str | None = None,
+) -> tuple[list[BCDResult], int]:
+    """The fallback ladder over a batched round: observe every result's
+    health and individually re-solve the unhealthy ones on the jnp oracle
+    (the batched launch always runs a kernel-family backend, so the
+    oracle re-solve is a genuinely independent path).  Returns the patched
+    result list and the number of fallbacks taken; a problem that is
+    non-finite on both paths raises `SolverDivergenceError`."""
+    out = list(results)
+    n_fallbacks = 0
+    for k, res in enumerate(out):
+        nonfinite, stalled = observe_result_health(res, max_sweeps=max_sweeps)
+        if not (nonfinite or stalled):
+            continue
+        if not fallback:
+            if nonfinite:
+                metrics.counter("solver.divergence").inc()
+                n_k = int(jnp.asarray(Sigmas[k]).shape[0])
+                path = None
+                if debris_dir:
+                    path = _dump_debris(
+                        debris_dir, Sigma=Sigmas[k], lam=lams[k],
+                        X0=None if X0s is None else X0s[k], n_valid=None,
+                        tag="batched",
+                    )
+                raise SolverDivergenceError(
+                    f"batched solve {k} diverged (n={n_k}, "
+                    f"lam={float(lams[k]):.6g})",
+                    lam=float(lams[k]), n=n_k, debris_path=path,
+                )
+            continue
+        n_fallbacks += 1
+        metrics.counter("solver.fallbacks").inc()
+        n_k = int(jnp.asarray(Sigmas[k]).shape[0])
+        with trace.span("solver.fallback", n=n_k, batch_index=k,
+                        reason="nonfinite" if nonfinite else "stall"):
+            patched = solve_bcd(
+                Sigmas[k], lams[k], beta=res.beta, max_sweeps=max_sweeps,
+                qp_sweeps=qp_sweeps, tol=tol, tau_iters=tau_iters,
+                X0=None if X0s is None else X0s[k], solver_impl="jnp",
+            )
+        still_bad, _ = observe_result_health(patched, max_sweeps=max_sweeps)
+        if still_bad:
+            metrics.counter("solver.divergence").inc()
+            path = None
+            if debris_dir:
+                path = _dump_debris(
+                    debris_dir, Sigma=Sigmas[k], lam=lams[k],
+                    X0=None if X0s is None else X0s[k], n_valid=None,
+                    tag="batched",
+                )
+            raise SolverDivergenceError(
+                f"batched solve {k} diverged on every path (n={n_k}, "
+                f"lam={float(lams[k]):.6g})"
+                + (f"; repro bundle at {path}" if path else ""),
+                lam=float(lams[k]), n=n_k, debris_path=path,
+            )
+        out[k] = patched
+    return out, n_fallbacks
 
 
 def leading_sparse_component(Z, *, rel_tol: float = 1e-2):

@@ -16,6 +16,7 @@ default deflation removes the selected words from the dictionary and re-runs
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 
 import jax.numpy as jnp
@@ -36,6 +37,7 @@ class PCResult:
     reduced_n: int           # problem size after safe elimination
     gap: float               # duality-gap certificate on the reduced problem
     sweeps: int = 0
+    fallbacks: int = 0       # oracle re-solves the supervisor took (see bcd.solve_bcd_supervised)
     # Reduced-problem state for lambda-search warm starts and the batched
     # deflation re-polish: the feature indices of Sigma_hat's rows, and
     # (only when requested via ``keep_reduced``) the solver iterate X plus
@@ -92,8 +94,27 @@ class SPCAConfig:
     # pass checkpoints — see ROADMAP "Reliability"):
     io_retries: int = 2          # transient-OSError read retries per shard file
     io_backoff_s: float = 0.05   # initial retry backoff (doubles per attempt)
-    resume_dir: str | None = None  # pass-checkpoint root (None = no resume)
+    resume_dir: str | None = None  # pass+fit checkpoint root (None = no resume)
     checkpoint_every: int = 16   # megabatches between pass checkpoints
+    # Supervised fit runtime (core/fitstate.py + bcd.solve_bcd_supervised —
+    # see ROADMAP "Reliability"): with ``resume_dir`` the solver phase
+    # checkpoints too (completed components always, the active search
+    # cursor every ``fit_checkpoint_every`` evals/rounds), so a killed fit
+    # resumes at the last component/eval boundary.  ``solver_fallback``
+    # re-solves an unhealthy fused result on the jnp oracle; a problem bad
+    # on both paths raises SolverDivergenceError after dumping its repro
+    # bundle to ``debris_dir`` (default ``<resume_dir>/debris``).
+    solver_fallback: bool = True
+    debris_dir: str | None = None
+    fit_checkpoint_every: int = 1  # search evals/rounds between fit checkpoints
+    # Degraded-mode mesh: a failed sharded dispatch retries at D/2, halving
+    # down to this floor (corruption errors propagate untouched).
+    mesh_min_devices: int = 1
+    # Watchdogs (obs.health.Watchdog): optional wall-clock budgets; a
+    # streaming pass / solve round that exceeds its budget raises the typed
+    # PassDeadlineError / SolveDeadlineError.  None disables.
+    pass_deadline_s: float | None = None
+    solve_deadline_s: float | None = None
     # Device-mesh data parallelism (sparse/mesh_engine.py + the
     # `ops.bcd_solve_batched devices=` leg).  ``mesh_devices > 1``
     # partitions work across the first D local devices (a 1-D 'data'
@@ -133,6 +154,8 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
                 io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
                 resume_dir=cfg.resume_dir,
                 checkpoint_every=cfg.checkpoint_every,
+                min_devices=getattr(cfg, "mesh_min_devices", 1),
+                pass_deadline_s=getattr(cfg, "pass_deadline_s", None),
             )
         return engine.sparse_stats(
             data, center=center, impl=cfg.csr_impl,
@@ -143,6 +166,7 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
             io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
             resume_dir=cfg.resume_dir,
             checkpoint_every=cfg.checkpoint_every,
+            pass_deadline_s=getattr(cfg, "pass_deadline_s", None),
         )
     if is_covariance:
         Sigma = jnp.asarray(data)
@@ -164,6 +188,49 @@ def _as_stats(data, is_covariance: bool, center: bool, cfg=None,
         return elimination.reduced_covariance(cols)
 
     return np.asarray(screen.variances), build
+
+
+def _debris_dir(cfg: "SPCAConfig") -> str | None:
+    """Where diverged solves dump their repro bundles: the configured
+    ``debris_dir``, else a ``debris/`` dir under the resume root, else
+    nowhere (the typed error still carries the coordinates)."""
+    if cfg.debris_dir:
+        return cfg.debris_dir
+    if cfg.resume_dir:
+        return os.path.join(cfg.resume_dir, "debris")
+    return None
+
+
+def _pack_pc(r: PCResult) -> dict:
+    """PCResult -> the JSON+ndarray tree `core.fitstate` serializes."""
+    d = {
+        "x": np.asarray(r.x), "support": np.asarray(r.support),
+        "lam": float(r.lam), "variance": float(r.variance),
+        "cardinality": int(r.cardinality), "reduced_n": int(r.reduced_n),
+        "gap": float(r.gap), "sweeps": int(r.sweeps),
+        "fallbacks": int(r.fallbacks),
+    }
+    for name in ("reduced_support", "X_reduced", "Sigma_reduced"):
+        val = getattr(r, name)
+        if val is not None:
+            d[name] = np.asarray(val)
+    return d
+
+
+def _unpack_pc(d: dict) -> PCResult:
+    def arr(name):
+        v = d.get(name)
+        return None if v is None else np.asarray(v)
+
+    return PCResult(
+        x=np.asarray(d["x"]), support=np.asarray(d["support"], np.int64),
+        lam=float(d["lam"]), variance=float(d["variance"]),
+        cardinality=int(d["cardinality"]), reduced_n=int(d["reduced_n"]),
+        gap=float(d["gap"]), sweeps=int(d["sweeps"]),
+        fallbacks=int(d.get("fallbacks", 0)),
+        reduced_support=arr("reduced_support"), X_reduced=arr("X_reduced"),
+        Sigma_reduced=arr("Sigma_reduced"),
+    )
 
 
 def _variance_order(v: np.ndarray) -> np.ndarray:
@@ -320,21 +387,42 @@ def solve_at_lambda(
     X0 = None
     if warm is not None and cfg.warm_start:
         X0 = _warm_x0(support, warm[0], warm[1], Sigma_hat.dtype)
+    fallbacks = 0
     with trace.span("solver.eval", lam=float(lam), n_hat=int(support.size),
                     warm=X0 is not None):
-        res = bcd.solve_bcd(
-            Sigma_hat,
-            lam,
-            beta=cfg.beta,
-            max_sweeps=cfg.max_sweeps,
-            qp_sweeps=cfg.qp_sweeps,
-            tol=cfg.tol,
-            tau_iters=cfg.tau_iters,
-            X0=X0,
-            qp_impl=cfg.qp_impl,
-            solver_impl=cfg.solver_impl,
-            panel_rows=cfg.panel_rows,
-        )
+        if cfg.solver_fallback:
+            # Supervised solve: health is observed inside the ladder (so
+            # no second observe below), an unhealthy fused result re-runs
+            # on the jnp oracle, and a both-paths failure raises the typed
+            # SolverDivergenceError with its debris bundle.
+            res, fallbacks = bcd.solve_bcd_supervised(
+                Sigma_hat,
+                lam,
+                beta=cfg.beta,
+                max_sweeps=cfg.max_sweeps,
+                qp_sweeps=cfg.qp_sweeps,
+                tol=cfg.tol,
+                tau_iters=cfg.tau_iters,
+                X0=X0,
+                qp_impl=cfg.qp_impl,
+                solver_impl=cfg.solver_impl,
+                panel_rows=cfg.panel_rows,
+                debris_dir=_debris_dir(cfg),
+            )
+        else:
+            res = bcd.solve_bcd(
+                Sigma_hat,
+                lam,
+                beta=cfg.beta,
+                max_sweeps=cfg.max_sweeps,
+                qp_sweeps=cfg.qp_sweeps,
+                tol=cfg.tol,
+                tau_iters=cfg.tau_iters,
+                X0=X0,
+                qp_impl=cfg.qp_impl,
+                solver_impl=cfg.solver_impl,
+                panel_rows=cfg.panel_rows,
+            )
     x_red = bcd.leading_sparse_component(res.Z, rel_tol=cfg.support_rel_tol)
     gap = float(validate.kkt_gap(res.X, Sigma_hat, lam, res.beta)[0])
     x = np.zeros(variances.shape[0])
@@ -342,7 +430,8 @@ def solve_at_lambda(
     nz = np.flatnonzero(x)
     sweeps = int(res.sweeps)
     metrics.histogram("solver.sweeps").observe(sweeps)
-    bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
+    if not cfg.solver_fallback:
+        bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
     return PCResult(
         x=x,
         support=nz,
@@ -352,6 +441,7 @@ def solve_at_lambda(
         reduced_n=int(support.size),
         gap=gap,
         sweeps=sweeps,
+        fallbacks=fallbacks,
         reduced_support=support,
         X_reduced=np.asarray(res.X) if keep_reduced else None,
         Sigma_reduced=np.asarray(Sigma_hat) if keep_reduced else None,
@@ -429,6 +519,8 @@ def search_lambda(
     diagnostics: dict | None = None,
     keep_reduced: bool = False,
     cov_cache: ReducedCovarianceCache | None = None,
+    fit_ckpt=None,
+    component_k: int = 0,
 ) -> PCResult:
     """Bisection on lambda for a solution with cardinality ~ target_card.
 
@@ -466,7 +558,7 @@ def search_lambda(
         return _search_lambda_batched(
             target_card, cfg=cfg, active_mask=active_mask, stats=stats,
             diagnostics=diagnostics, keep_reduced=keep_reduced,
-            cov_cache=cov_cache,
+            cov_cache=cov_cache, fit_ckpt=fit_ckpt, component_k=component_k,
         )
     variances, build = stats
     v = variances.copy()
@@ -479,8 +571,32 @@ def search_lambda(
         cache = ReducedCovarianceCache(build)
     builds0 = cache.builds if cache is not None else 0
     slices0 = cache.slices if cache is not None else 0
+
+    # Resume: a saved cursor restores the bracket, the eval count, the
+    # incumbent best and the warm block — the restored search then runs
+    # the EXACT remaining iterations of the uninterrupted one (the bracket
+    # already includes the probe's tightening, so the probe is skipped).
+    best: PCResult | None = None
+    warm: tuple | None = None
+    start_eval = evals_skipped = 0
+    hit = False
+    fallbacks = 0
+    cursor = fit_ckpt.search_cursor(component_k) if fit_ckpt is not None \
+        else None
+    if cursor is not None:
+        lo, hi = float(cursor["lo"]), float(cursor["hi"])
+        start_eval = evals_skipped = int(cursor["evals"])
+        hit = bool(cursor.get("done", False))
+        fallbacks = int(cursor.get("fallbacks", 0))
+        if cursor.get("best") is not None:
+            best = _unpack_pc(cursor["best"])
+        if cfg.warm_start and cursor.get("warm_X") is not None:
+            warm = (np.asarray(cursor["warm_X"]),
+                    np.asarray(cursor["warm_support"], np.int64))
+        metrics.counter("fit.resume.evals_skipped").inc(evals_skipped)
+
     probe_launches = 0
-    if cfg.lam_grid_probe > 1:
+    if cursor is None and cfg.lam_grid_probe > 1:
         # The probe solves on the support at the smallest bracketed lambda.
         # Check the size guard BEFORE building anything, and eager-seed the
         # cache only when the probe actually runs (every later evaluation is
@@ -493,14 +609,20 @@ def search_lambda(
             lo, hi = _grid_probe_bracket(base, lo, hi, target_card, cfg)
             probe_launches = 1
 
-    best: PCResult | None = None
-    warm: tuple | None = None
     evals = 0
     warm_starts = 0
     total_sweeps = 0
     better = _card_better(cfg, target_card)
 
-    for _ in range(cfg.lam_search_evals):
+    for i in range(start_eval, cfg.lam_search_evals):
+        if hit:
+            break
+        wd = None
+        if cfg.solve_deadline_s is not None:
+            from repro.obs import health as _health
+
+            wd = _health.Watchdog(cfg.solve_deadline_s, what="solve round",
+                                  exc=_health.SolveDeadlineError)
         lam = float(np.sqrt(lo * hi))  # geometric bisection: variances span decades
         r = solve_at_lambda(
             data, lam, is_covariance=is_covariance, cfg=cfg,
@@ -510,18 +632,36 @@ def search_lambda(
         )
         evals += 1
         total_sweeps += r.sweeps
+        fallbacks += r.fallbacks
         if warm is not None and cfg.warm_start:
             warm_starts += 1
         if cfg.warm_start:
             warm = (r.X_reduced, r.reduced_support)
         if better(r, best):
             best = r
-        if target_card <= r.cardinality <= target_card + cfg.card_slack:
+        hit = target_card <= r.cardinality <= target_card + cfg.card_slack
+        if not hit:
+            if r.cardinality > target_card:
+                lo = lam   # too dense -> raise lambda
+            else:
+                hi = lam   # too sparse -> lower lambda
+        if fit_ckpt is not None:
+            # Checkpoint BEFORE the watchdog can raise: a deadline kill
+            # must be as resumable as any other.
+            fit_ckpt.record_search({
+                "k": int(component_k), "evals": i + 1,
+                "lo": float(lo), "hi": float(hi), "done": bool(hit),
+                "fallbacks": int(fallbacks),
+                "best": _pack_pc(best),
+                "warm_X": None if warm is None or warm[0] is None
+                else np.asarray(warm[0]),
+                "warm_support": None if warm is None or warm[1] is None
+                else np.asarray(warm[1]),
+            })
+        if wd is not None:
+            wd.check()
+        if hit:
             break
-        if r.cardinality > target_card:
-            lo = lam   # too dense -> raise lambda
-        else:
-            hi = lam   # too sparse -> lower lambda
     assert best is not None
     # Registry mirror of the diagnostics dict (same code path, same
     # numbers — the dict stays a view; see obs.metrics module doc).
@@ -538,11 +678,48 @@ def search_lambda(
             # one solver launch per evaluation, plus the probe's
             solve_launches=evals + probe_launches,
             batched=False,
+            evals_skipped=evals_skipped,
+            fallbacks=fallbacks,
         )
+    best = replace(best, fallbacks=fallbacks)
     if keep_reduced:
         return best
     # drop the O(n_hat^2) reduced state
     return replace(best, X_reduced=None, Sigma_reduced=None)
+
+
+def _pack_batched_best(best: dict) -> dict:
+    """The batched search's incumbent, as a serializable tree: the winning
+    iterate X plus the scalars the final PCResult assembly reads."""
+    res = best["res"]
+    return {
+        "lam": float(best["lam"]), "t": int(best["t"]),
+        "cardinality": int(best["cardinality"]),
+        "variance": float(best["variance"]),
+        "x_red": np.asarray(best["x_red"]),
+        "X": np.asarray(res.X), "beta": float(res.beta),
+        "sweeps": int(res.sweeps),
+    }
+
+
+def _unpack_batched_best(d: dict, cfg: SPCAConfig) -> dict:
+    """Inverse of `_pack_batched_best`: rebuilds the minimal BCDResult the
+    search tail needs (X, beta, sweeps — obj/phi/history were consumed by
+    the eval that produced them and are not re-derivable without a solve,
+    so they restore as NaN placeholders)."""
+    X = jnp.asarray(np.asarray(d["X"]))
+    res = bcd.BCDResult(
+        X=X, Z=X / jnp.trace(X), obj=jnp.asarray(np.nan, X.dtype),
+        phi=jnp.asarray(np.nan, X.dtype),
+        history=jnp.full((cfg.max_sweeps,), np.nan, X.dtype),
+        sweeps=jnp.asarray(int(d["sweeps"])), beta=float(d["beta"]),
+    )
+    return {
+        "lam": float(d["lam"]), "t": int(d["t"]), "res": res,
+        "x_red": np.asarray(d["x_red"]),
+        "cardinality": int(d["cardinality"]),
+        "variance": float(d["variance"]),
+    }
 
 
 def _search_lambda_batched(
@@ -554,6 +731,8 @@ def _search_lambda_batched(
     diagnostics: dict | None,
     keep_reduced: bool = False,
     cov_cache: ReducedCovarianceCache | None = None,
+    fit_ckpt=None,
+    component_k: int = 0,
 ) -> PCResult:
     """Lambda search as O(rounds) batched launches instead of O(evals).
 
@@ -596,8 +775,39 @@ def _search_lambda_batched(
     best: dict | None = None
     warm: tuple | None = None     # (X on prefix, prefix length)
     evals = launches = warm_starts = total_sweeps = 0
+    mesh_ctr: dict = {}
 
-    for _ in range(rounds):
+    # Resume: the cursor restores the tightened bracket, round/eval
+    # counts, the incumbent and the warm block.  The base support was
+    # computed above at the INITIAL bracket lo — exactly as in the
+    # uninterrupted run — so restored prefix lengths index the same
+    # feat_perm order.
+    start_round = evals_skipped = 0
+    hit = False
+    fallbacks = 0
+    cursor = fit_ckpt.search_cursor(component_k) if fit_ckpt is not None \
+        else None
+    if cursor is not None:
+        lo, hi = float(cursor["lo"]), float(cursor["hi"])
+        start_round = int(cursor.get("rounds", 0))
+        evals_skipped = int(cursor["evals"])
+        hit = bool(cursor.get("done", False))
+        fallbacks = int(cursor.get("fallbacks", 0))
+        if cursor.get("best") is not None:
+            best = _unpack_batched_best(cursor["best"], cfg)
+        if cfg.warm_start and cursor.get("warm_X") is not None:
+            warm = (np.asarray(cursor["warm_X"]), int(cursor["warm_t"]))
+        metrics.counter("fit.resume.evals_skipped").inc(evals_skipped)
+
+    for rd in range(start_round, rounds):
+        if hit:
+            break
+        wd = None
+        if cfg.solve_deadline_s is not None:
+            from repro.obs import health as _health
+
+            wd = _health.Watchdog(cfg.solve_deadline_s, what="solve round",
+                                  exc=_health.SolveDeadlineError)
         lams = np.geomspace(lo, hi, B + 2)[1:-1]
         sizes = [
             _support_at(v, la, cfg.max_reduced, _buckets_of(cfg)).size
@@ -624,7 +834,20 @@ def _search_lambda_batched(
                 panel_rows=cfg.panel_rows,
                 impl=_batched_impl(cfg.solver_impl),
                 devices=D if D > 1 else 0,
+                min_devices=getattr(cfg, "mesh_min_devices", 1),
+                counters=mesh_ctr,
             )
+        if cfg.solver_fallback:
+            # Health is observed inside supervise_many (so not again
+            # below); unhealthy problems individually re-solve on the jnp
+            # oracle path.
+            solved, fb = bcd.supervise_many(
+                solved, [Sigma_perm[:t, :t] for t in sizes], lams, X0s=X0s,
+                max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps,
+                tol=cfg.tol, tau_iters=cfg.tau_iters,
+                debris_dir=_debris_dir(cfg),
+            )
+            fallbacks += fb
         launches += 1
         evals += len(solved)
         cards = []
@@ -632,7 +855,8 @@ def _search_lambda_batched(
             sweeps_i = int(res.sweeps)
             total_sweeps += sweeps_i
             metrics.histogram("solver.sweeps").observe(sweeps_i)
-            bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
+            if not cfg.solver_fallback:
+                bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
             x_red = np.asarray(bcd.leading_sparse_component(
                 res.Z, rel_tol=cfg.support_rel_tol))
             card = int(np.count_nonzero(x_red))
@@ -646,17 +870,36 @@ def _search_lambda_batched(
                 best = cand
         if cfg.warm_start:
             warm = (np.asarray(best["res"].X), best["t"])
-        if target_card <= best["cardinality"] <= target_card + cfg.card_slack:
+        hit = (target_card <= best["cardinality"]
+               <= target_card + cfg.card_slack)
+        if not hit:
+            # Tighten the bracket from the whole round at once.
+            too_dense = [la for la, c in zip(lams, cards)
+                         if c > target_card + cfg.card_slack]
+            too_sparse = [la for la, c in zip(lams, cards)
+                          if c < target_card]
+            new_lo = max(too_dense) if too_dense else lo
+            new_hi = min(too_sparse) if too_sparse else hi
+            if new_lo >= new_hi:
+                hit = True        # bracket collapsed: no finer lambda left
+            else:
+                lo, hi = float(new_lo), float(new_hi)
+        if fit_ckpt is not None:
+            # Checkpoint before the watchdog can raise (deadline kills
+            # must resume like any other).
+            fit_ckpt.record_search({
+                "k": int(component_k), "rounds": rd + 1,
+                "evals": evals_skipped + evals,
+                "lo": float(lo), "hi": float(hi), "done": bool(hit),
+                "fallbacks": int(fallbacks),
+                "best": _pack_batched_best(best),
+                "warm_X": None if warm is None else np.asarray(warm[0]),
+                "warm_t": None if warm is None else int(warm[1]),
+            })
+        if wd is not None:
+            wd.check()
+        if hit:
             break
-        # Tighten the bracket from the whole round at once.
-        too_dense = [la for la, c in zip(lams, cards)
-                     if c > target_card + cfg.card_slack]
-        too_sparse = [la for la, c in zip(lams, cards) if c < target_card]
-        new_lo = max(too_dense) if too_dense else lo
-        new_hi = min(too_sparse) if too_sparse else hi
-        if new_lo >= new_hi:
-            break
-        lo, hi = float(new_lo), float(new_hi)
 
     assert best is not None
     t = best["t"]
@@ -685,6 +928,9 @@ def _search_lambda_batched(
             cov_slices=cache.slices - slices0 if cache is not None else 0,
             solve_launches=launches,
             batched=True,
+            evals_skipped=evals_skipped,
+            fallbacks=fallbacks,
+            mesh_degraded=mesh_ctr.get("mesh_degraded", 0),
         )
         if D > 1:
             diagnostics["devices"] = D
@@ -697,6 +943,7 @@ def _search_lambda_batched(
         reduced_n=t,
         gap=gap,
         sweeps=int(res.sweeps),
+        fallbacks=fallbacks,
         reduced_support=support_sorted,
         X_reduced=X_sorted if keep_reduced else None,
         Sigma_reduced=Sigma_sorted if keep_reduced else None,
@@ -756,6 +1003,7 @@ def _union_base_support(v: np.ndarray, target_card: int, n_components: int,
 
 def _refine_components_batched(
     results: list[PCResult], stats, cfg: SPCAConfig,
+    counters: dict | None = None,
 ) -> list[PCResult]:
     """Re-polish all fitted components in ONE batched launch.
 
@@ -775,6 +1023,7 @@ def _refine_components_batched(
         for r in results
     ]
     D = max(1, int(getattr(cfg, "mesh_devices", 0) or 1))
+    mesh_ctr: dict = {}
     with trace.span("solver.batched_refine", components=len(results)):
         solved = bcd.solve_bcd_many(
             Sigmas, [r.lam for r in results],
@@ -784,6 +1033,22 @@ def _refine_components_batched(
             tau_iters=cfg.tau_iters, panel_rows=cfg.panel_rows,
             impl=_batched_impl(cfg.solver_impl),
             devices=D if D > 1 else 0,
+            min_devices=getattr(cfg, "mesh_min_devices", 1),
+            counters=mesh_ctr,
+        )
+    if cfg.solver_fallback:
+        solved, fb = bcd.supervise_many(
+            solved, Sigmas, [r.lam for r in results],
+            X0s=[r.X_reduced for r in results],
+            max_sweeps=cfg.max_sweeps, qp_sweeps=cfg.qp_sweeps,
+            tol=cfg.tol, tau_iters=cfg.tau_iters,
+            debris_dir=_debris_dir(cfg),
+        )
+        if counters is not None:
+            counters["fallbacks"] = counters.get("fallbacks", 0) + fb
+    if counters is not None and mesh_ctr.get("mesh_degraded"):
+        counters["mesh_degraded"] = (
+            counters.get("mesh_degraded", 0) + mesh_ctr["mesh_degraded"]
         )
     metrics.counter("solver.launches").inc()
     out: list[PCResult] = []
@@ -796,7 +1061,8 @@ def _refine_components_batched(
         nz = np.flatnonzero(x)
         sweeps_i = int(res.sweeps)
         metrics.histogram("solver.sweeps").observe(sweeps_i)
-        bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
+        if not cfg.solver_fallback:
+            bcd.observe_result_health(res, max_sweeps=cfg.max_sweeps)
         out.append(replace(
             r, x=x, support=nz, cardinality=int(nz.size),
             variance=float(x_red @ np.asarray(S) @ x_red), gap=gap,
@@ -878,8 +1144,37 @@ def _fit_components(
             stats = _as_stats(data, is_covariance, cfg.center, cfg,
                               counters=ingest)
         mask = np.ones(stats[0].shape[0], dtype=bool)
+
+        # Whole-fit checkpointing (core/fitstate.py): restore completed
+        # components BEFORE any covariance work, so a fully-restored fit
+        # never seeds the cache — an out-of-core resume of a finished fit
+        # streams zero Gram passes.
+        fit_ckpt = None
+        restored: list[PCResult] = []
+        if cfg.resume_dir:
+            from . import fitstate
+
+            fit_ckpt = fitstate.FitCheckpointer(
+                cfg.resume_dir, every=cfg.fit_checkpoint_every
+            )
+            fstate = fit_ckpt.open(fitstate.fit_fingerprint(
+                stats[0], n_components=n_components,
+                target_card=target_card, deflation=deflation, cfg=cfg,
+            ))
+            restored = [
+                _unpack_pc(p) for p in fstate.components[:n_components]
+            ]
+            for r in restored:
+                results.append(r)
+                mask[r.support] = False
+                per_comp.append({
+                    "restored": True, "evals": 0, "warm_starts": 0,
+                    "total_sweeps": 0, "cov_builds": 0, "cov_slices": 0,
+                    "solve_launches": 0, "evals_skipped": 0,
+                    "fallbacks": 0, "batched": cfg.batch_evals > 1,
+                })
         cache: ReducedCovarianceCache | None = None
-        if cfg.reuse_covariance:
+        if cfg.reuse_covariance and len(results) < n_components:
             # Cross-component cache: deflation only masks features, so one
             # eager build on the union support serves every search below
             # via principal-submatrix slices — on a store handle this is
@@ -889,22 +1184,38 @@ def _fit_components(
                                        cfg)
             if base.size:
                 cache.get(base)
-        for k in range(n_components):
+        for k in range(len(results), n_components):
             d: dict = {}
             with trace.span("fit.component", k=k):
                 r = search_lambda(
                     data, target_card, is_covariance=is_covariance, cfg=cfg,
                     active_mask=mask, stats=stats, diagnostics=d,
                     keep_reduced=cfg.batch_deflation, cov_cache=cache,
+                    fit_ckpt=fit_ckpt, component_k=k,
                 )
             per_comp.append(d)
             results.append(r)
             mask[r.support] = False
+            if fit_ckpt is not None:
+                fit_ckpt.record_component(_pack_pc(r))
+        if fit_ckpt is not None:
+            fit_ckpt.finish()
         refine_launches = 0
+        refine_ctr: dict = {}
         if cfg.batch_deflation and results:
-            results = _refine_components_batched(results, stats, cfg)
+            results = _refine_components_batched(results, stats, cfg,
+                                                 counters=refine_ctr)
             refine_launches = 1
         if diagnostics is not None:
+            total_fallbacks = (
+                sum(d.get("fallbacks", 0) for d in per_comp)
+                + refine_ctr.get("fallbacks", 0)
+            )
+            total_degraded = (
+                sum(d.get("mesh_degraded", 0) for d in per_comp)
+                + refine_ctr.get("mesh_degraded", 0)
+                + ingest.get("mesh_degraded", 0)
+            )
             diagnostics.update(
                 components=per_comp,
                 refine_launches=refine_launches,
@@ -913,6 +1224,15 @@ def _fit_components(
                 cov_builds=cache.builds if cache is not None else sum(
                     d.get("cov_builds", 0) for d in per_comp),
                 cov_slices=cache.slices if cache is not None else 0,
+                solver_fallbacks=total_fallbacks,
+                mesh_degraded=total_degraded,
+                fit_resume={
+                    "components_restored": len(restored),
+                    "evals_skipped": sum(
+                        d.get("evals_skipped", 0) for d in per_comp),
+                    "fallbacks": total_fallbacks,
+                    "mesh_degraded": total_degraded,
+                },
             )
             if ingest:
                 diagnostics.update(

@@ -40,6 +40,30 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Solver-fault seam (mirror of ``sparse.store.FILE_IO``): tests install a
+# `repro.testing.faults.SolverFaultInjector` here to perturb solve results
+# (non-finite objective, stalled sweep count) or raise dispatch errors at
+# exact call occurrences, targeted by site name ("bcd_solve",
+# "bcd_solve_batched", and the mesh pass sites "mesh.screen"/"mesh.gram").
+# ``None`` (production) costs one attribute check per wrapper call.
+SOLVER_FAULTS = None
+
+
+def solver_fault_before(site: str) -> None:
+    """Dispatch-error injection point — call sites that launch device work
+    consult this first; an installed injector may raise here."""
+    if SOLVER_FAULTS is not None:
+        SOLVER_FAULTS.before(site)
+
+
+def solver_fault_after(site: str, out, *, max_sweeps: int):
+    """Result-perturbation injection point — wraps a solve's returned
+    ``(X, obj, sweeps, history)`` tuple (single or batched)."""
+    if SOLVER_FAULTS is not None:
+        return SOLVER_FAULTS.after(site, out, max_sweeps=max_sweeps)
+    return out
+
+
 def _launch(op: str):
     """Per-op dispatch accounting at the wrapper boundary: bump the
     ``kernel.launches.<op>`` registry counter and open an ``ops.<op>``
@@ -399,25 +423,29 @@ def bcd_solve(Sigma, lam, beta, X0=None, *, max_sweeps: int = 20,
         impl == "auto" and _on_tpu() and Sigma.dtype.itemsize <= 4
     )) and resolved is not None
     with _launch("bcd_solve"):
+        solver_fault_before("bcd_solve")
         if not use_pallas:
             if n_valid is None:
-                return _bcd_solve_ref_jit(
+                out = _bcd_solve_ref_jit(
                     Sigma, lam, beta, X0, tol,
                     max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
                     tau_iters=tau_iters,
                 )
-            return _bcd_solve_masked_ref_jit(
-                Sigma, lam, beta, X0, tol, n_valid,
+            else:
+                out = _bcd_solve_masked_ref_jit(
+                    Sigma, lam, beta, X0, tol, n_valid,
+                    max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+                    tau_iters=tau_iters,
+                )
+        else:
+            kscheme, kpanel = resolved
+            out = bcd_solve_pallas(
+                Sigma, lam, beta, X0, tol,
                 max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
-                tau_iters=tau_iters,
+                tau_iters=tau_iters, n_valid=n_valid, scheme=kscheme,
+                panel_rows=panel_rows or kpanel, interpret=not _on_tpu(),
             )
-        kscheme, kpanel = resolved
-        return bcd_solve_pallas(
-            Sigma, lam, beta, X0, tol,
-            max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
-            n_valid=n_valid, scheme=kscheme, panel_rows=panel_rows or kpanel,
-            interpret=not _on_tpu(),
-        )
+    return solver_fault_after("bcd_solve", out, max_sweeps=max_sweeps)
 
 
 @functools.lru_cache(maxsize=None)
@@ -520,27 +548,35 @@ def bcd_solve_batched(Sigmas, lams, betas, X0s, n_valids, *,
             n_valids = jnp.concatenate(
                 [n_valids, jnp.broadcast_to(n_valids[:1], (pad,))])
         with _launch("bcd_solve_batched"):
+            solver_fault_before("bcd_solve_batched")
             fn = _sharded_batched_solve(
                 D, use_pallas, kscheme, kpanel,
                 max_sweeps, qp_sweeps, tau_iters, panel_rows,
             )
             X, obj, sweeps, hist = fn(Sigmas, lams, betas, X0s, tol,
                                       n_valids)
-        return X[:B], obj[:B], sweeps[:B], hist[:B]
+        return solver_fault_after(
+            "bcd_solve_batched", (X[:B], obj[:B], sweeps[:B], hist[:B]),
+            max_sweeps=max_sweeps,
+        )
     with _launch("bcd_solve_batched"):
+        solver_fault_before("bcd_solve_batched")
         if not use_pallas:
-            return _bcd_solve_batched_ref_jit(
+            out = _bcd_solve_batched_ref_jit(
                 Sigmas, lams, betas, X0s, tol, n_valids,
                 max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
                 tau_iters=tau_iters,
             )
-        kscheme, kpanel = resolved
-        return bcd_solve_batched_pallas(
-            Sigmas, lams, betas, X0s, tol, n_valids,
-            max_sweeps=max_sweeps, qp_sweeps=qp_sweeps, tau_iters=tau_iters,
-            scheme=kscheme, panel_rows=panel_rows or kpanel,
-            interpret=not _on_tpu(),
-        )
+        else:
+            kscheme, kpanel = resolved
+            out = bcd_solve_batched_pallas(
+                Sigmas, lams, betas, X0s, tol, n_valids,
+                max_sweeps=max_sweeps, qp_sweeps=qp_sweeps,
+                tau_iters=tau_iters, scheme=kscheme,
+                panel_rows=panel_rows or kpanel, interpret=not _on_tpu(),
+            )
+    return solver_fault_after("bcd_solve_batched", out,
+                              max_sweeps=max_sweeps)
 
 
 def qp_sweeps(Y, s, lam, u0, j, *, sweeps: int = 4, impl: str = "auto"):

@@ -115,9 +115,12 @@ def main():
     ap.add_argument("--megabatch", type=int, default=8,
                     help="chunks per ingest launch (grid=(C,) batch)")
     ap.add_argument("--resume", default="", metavar="DIR",
-                    help="checkpoint streaming passes into DIR and resume "
-                         "a killed fit from the last completed megabatch "
-                         "boundary (see the reliability examples below)")
+                    help="checkpoint the fit into DIR and resume a killed "
+                         "run: streaming passes restart at the last "
+                         "completed megabatch boundary AND the solver "
+                         "phase restarts at the last completed "
+                         "component/eval boundary (see the reliability "
+                         "examples below)")
     ap.add_argument("--checkpoint-every", type=int, default=16,
                     help="megabatches between pass checkpoints (with "
                          "--resume)")
@@ -125,6 +128,20 @@ def main():
                     help="transient shard-read OSError retries before "
                          "giving up (exponential backoff; corruption is "
                          "never retried)")
+    ap.add_argument("--pass-deadline-s", type=float, default=None,
+                    metavar="S",
+                    help="wall-clock budget per streaming corpus pass; "
+                         "expiry raises PassDeadlineError at a resumable "
+                         "megabatch boundary")
+    ap.add_argument("--solve-deadline-s", type=float, default=None,
+                    metavar="S",
+                    help="wall-clock budget per lambda-search solve round; "
+                         "expiry raises SolveDeadlineError at a "
+                         "checkpointed eval boundary")
+    ap.add_argument("--no-solver-fallback", action="store_true",
+                    help="disable the fused->oracle solver fallback ladder "
+                         "(an unhealthy fused solve then raises instead of "
+                         "re-solving on the jnp path)")
     ap.add_argument("--batch-evals", type=int, default=0,
                     help=">1: run each lambda-search round as ONE batched "
                          "solve launch of this many evaluations")
@@ -164,7 +181,8 @@ def main():
             interval_s=args.export_interval,
             port=args.export_port,
             jsonl_path=args.metrics or None,
-            rules=health.solver_rules() + health.ingestion_rules(),
+            rules=(health.solver_rules() + health.ingestion_rules()
+                   + health.runtime_rules()),
             extra={"run": "spca_run", "corpus": args.corpus},
         )
 
@@ -228,7 +246,10 @@ def _run(args):
                      io_retries=args.io_retries,
                      resume_dir=args.resume or None,
                      checkpoint_every=args.checkpoint_every,
-                     mesh_devices=devices)
+                     mesh_devices=devices,
+                     solver_fallback=not args.no_solver_fallback,
+                     pass_deadline_s=args.pass_deadline_s,
+                     solve_deadline_s=args.solve_deadline_s)
 
     ingest: dict = {}
     if args.streaming:
@@ -251,11 +272,14 @@ def _run(args):
             io_retries=cfg.io_retries, io_backoff_s=cfg.io_backoff_s,
             resume_dir=cfg.resume_dir,
             checkpoint_every=cfg.checkpoint_every,
+            pass_deadline_s=cfg.pass_deadline_s,
         )
         if devices > 1 and cfg.data_parallel:
             print(f"  sharding passes across {devices} device(s) "
                   "(1-D data mesh)")
-            var, build = mesh_sparse_stats(store, devices=devices, **pass_kw)
+            var, build = mesh_sparse_stats(store, devices=devices,
+                                           min_devices=cfg.mesh_min_devices,
+                                           **pass_kw)
         else:
             var, build = sparse_stats(store, **pass_kw)
         resumed = ingest.get("resumed_megabatches", 0)
@@ -303,15 +327,28 @@ def _run(args):
               f"{1 + args.components}), ingest launches: "
               f"{ingest.get('screen_launches', 0) + ingest.get('gram_launches', 0)} "
               f"over {ingest.get('chunks', 0)} chunk(s)")
-        extras = []
-        if ingest.get("resumed_megabatches"):
-            extras.append(f"resumed {ingest['resumed_megabatches']} "
-                          "megabatch(es) from checkpoint")
-        if ingest.get("io_retries"):
-            extras.append(f"absorbed {ingest['io_retries']} transient "
-                          "read error(s)")
-        if extras:
-            print("reliability: " + "; ".join(extras))
+    extras = []
+    if ingest.get("resumed_megabatches"):
+        extras.append(f"resumed {ingest['resumed_megabatches']} "
+                      "megabatch(es) from checkpoint")
+    fr = diag.get("fit_resume") or {}
+    if fr.get("components_restored"):
+        extras.append(f"restored {fr['components_restored']} completed "
+                      "component(s) from fit checkpoint")
+    if fr.get("evals_skipped"):
+        extras.append(f"skipped {fr['evals_skipped']} already-solved "
+                      "lambda eval(s)")
+    if diag.get("solver_fallbacks"):
+        extras.append(f"took {diag['solver_fallbacks']} solver "
+                      "fallback(s) to the oracle path")
+    if diag.get("mesh_degraded"):
+        extras.append(f"degraded the device mesh {diag['mesh_degraded']} "
+                      "time(s)")
+    if ingest.get("io_retries"):
+        extras.append(f"absorbed {ingest['io_retries']} transient "
+                      "read error(s)")
+    if extras:
+        print("reliability: " + "; ".join(extras))
 
 
 if __name__ == "__main__":

@@ -21,6 +21,12 @@ non-finite objective is terminal-critical, a stall burst warns).
 Thresholds are keyword-tunable so launchers can ship SLOs without
 subclassing anything.
 
+Beyond the declarative rules, this module carries the fit runtime's
+WATCHDOGS: a `Watchdog` is a cooperative wall-clock budget (`check()` at
+work boundaries — megabatches, solve rounds) that raises a typed
+`WatchdogTimeout` subclass when exceeded, incrementing the
+``watchdog.expired`` counter the `runtime_rules` pack escalates on.
+
 Stdlib only, like the rest of ``repro.obs``.
 """
 from __future__ import annotations
@@ -29,7 +35,62 @@ import time
 from collections import deque
 from dataclasses import dataclass
 
+from . import metrics as _metrics
 from .metrics import percentile_of
+
+
+class WatchdogTimeout(TimeoutError):
+    """A cooperative wall-clock budget was exceeded.  Typed (and
+    subclassed per budget) so drivers can catch exactly the deadline they
+    armed; carries what was being watched and the elapsed/budget pair."""
+
+    def __init__(self, what: str, *, budget_s: float, elapsed_s: float):
+        super().__init__(
+            f"{what} exceeded its {budget_s:.3g}s wall-clock budget "
+            f"({elapsed_s:.3g}s elapsed)"
+        )
+        self.what = what
+        self.budget_s = float(budget_s)
+        self.elapsed_s = float(elapsed_s)
+
+
+class PassDeadlineError(WatchdogTimeout):
+    """A streaming corpus pass blew ``SPCAConfig.pass_deadline_s``."""
+
+
+class SolveDeadlineError(WatchdogTimeout):
+    """A solve round blew ``SPCAConfig.solve_deadline_s``."""
+
+
+class Watchdog:
+    """Cooperative deadline: arm at the start of a bounded piece of work,
+    `check()` at internal boundaries.  A check past the budget increments
+    ``watchdog.expired`` and raises ``exc`` (a `WatchdogTimeout`
+    subclass).  Cooperative on purpose — the work it guards is a JAX
+    dispatch or a file read, neither of which can be safely interrupted
+    mid-flight, and the checkpointers sit exactly at the boundaries where
+    `check` runs, so an expiry is always resumable."""
+
+    def __init__(self, budget_s: float, *, what: str = "work",
+                 exc: type = WatchdogTimeout, clock=time.monotonic):
+        self.budget_s = float(budget_s)
+        self.what = str(what)
+        self.exc = exc
+        self._clock = clock
+        self._t0 = clock()
+
+    def elapsed_s(self) -> float:
+        return self._clock() - self._t0
+
+    def expired(self) -> bool:
+        return self.elapsed_s() > self.budget_s
+
+    def check(self) -> None:
+        elapsed = self.elapsed_s()
+        if elapsed > self.budget_s:
+            _metrics.counter("watchdog.expired").inc()
+            raise self.exc(self.what, budget_s=self.budget_s,
+                           elapsed_s=elapsed)
 
 _OPS = {
     ">": lambda a, b: a > b,
@@ -292,6 +353,30 @@ def ingestion_rules(*, occupancy_floor: float = 0.25,
     ]
 
 
+def runtime_rules(*, fallback_burst: float = 4.0,
+                  fallback_window_s: float = 120.0) -> list[HealthRule]:
+    """SLOs for the supervised fit runtime: the fallback ladder and
+    watchdogs.  A fallback is a *survived* fault — the fused solve went
+    bad and the oracle path patched it — so a burst only DEGRADES the fit
+    (``/healthz`` stays 200, results are still sound).  Divergence (both
+    rungs failed; the fit raised after dumping a repro bundle) and an
+    expired watchdog are critical: the fit is dead or past its budget and
+    an operator has to act.  Degraded-mode mesh execution warns: the fit
+    is finishing, just on fewer devices than it was given."""
+    return [
+        HealthRule("solver_fallback_burst", "solver.fallbacks", ">=",
+                   fallback_burst, window_s=fallback_window_s,
+                   severity="warn", aspect="delta"),
+        HealthRule("solver_divergence", "solver.divergence", ">=", 1.0,
+                   severity="critical", aspect="value"),
+        HealthRule("watchdog_expired", "watchdog.expired", ">=", 1.0,
+                   severity="critical", aspect="value"),
+        HealthRule("mesh_degraded", "mesh.degraded", ">=", 1.0,
+                   severity="warn", aspect="value"),
+    ]
+
+
 def default_rules() -> list[HealthRule]:
     """Everything: what a process that both ingests and serves should run."""
-    return solver_rules() + serving_rules() + ingestion_rules()
+    return (solver_rules() + serving_rules() + ingestion_rules()
+            + runtime_rules())

@@ -94,7 +94,8 @@ def _stream_prefetch_stats(pstats: dict, prev: dict) -> None:
 
 def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
            prefetch_depth, host_id, num_hosts, counters, launch_key,
-           checkpointer: PassCheckpointer | None = None, kind: str = ""):
+           checkpointer: PassCheckpointer | None = None, kind: str = "",
+           pass_deadline_s: float | None = None):
     """One streaming pass of ``acc`` over this host's shard slice: packed
     megabatches, prefetched one batch ahead, one dispatch per batch.
 
@@ -117,7 +118,17 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
     accounting lands in ``counters`` (``prefetch_consumer_stall_s`` /
     ``prefetch_producer_stall_s``) and the ``ingest.prefetch.*`` registry
     instruments — consumer stall means the pass is read-bound, producer
-    stall means it is reduce-bound."""
+    stall means it is reduce-bound.
+
+    ``pass_deadline_s`` arms a cooperative wall-clock watchdog checked at
+    every megabatch boundary (AFTER the checkpoint cadence runs, so an
+    expired pass is resumable at the boundary it died on); expiry raises
+    the typed `obs.health.PassDeadlineError`."""
+    wd = None
+    if pass_deadline_s is not None:
+        from repro.obs import health as _health
+        wd = _health.Watchdog(pass_deadline_s, what=f"{kind or launch_key} pass",
+                              exc=_health.PassDeadlineError)
     start_batch = 0
     fp = None
     if checkpointer is not None:
@@ -165,6 +176,8 @@ def _drain(store: SparseCorpus, acc, *, chunk_nnz, chunk_rows, megabatch,
                 checkpointer.save(fp, done, acc.state_dict())
             metrics.counter("ingest.resume.checkpoints").inc()
             _count(counters, "resume_checkpoints", 1)
+        if wd is not None:
+            wd.check()
     if checkpointer is not None:
         checkpointer.save(fp, done, acc.state_dict(), complete=True)
         metrics.counter("ingest.resume.checkpoints").inc()
@@ -214,6 +227,7 @@ def sparse_feature_variances(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    pass_deadline_s: float | None = None,
 ) -> Screen:
     """One streaming pass: the Thm 2.1 screen input from CSR chunks.
 
@@ -235,6 +249,7 @@ def sparse_feature_variances(
                 host_id=h, num_hosts=num_hosts, counters=counters,
                 launch_key="screen_launches",
                 checkpointer=ckpt, kind="screen",
+                pass_deadline_s=pass_deadline_s,
             )
             partials.append(acc.finalize(center=center))
         _bump(counters, screen_passes=1)
@@ -259,6 +274,7 @@ def sparse_reduced_covariance(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    pass_deadline_s: float | None = None,
 ):
     """One streaming pass: Sigma_hat = A_S^T A_S / m (centred when
     ``means`` is given) on the surviving columns, straight from chunks.
@@ -278,6 +294,7 @@ def sparse_reduced_covariance(
                 host_id=h, num_hosts=num_hosts, counters=counters,
                 launch_key="gram_launches",
                 checkpointer=ckpt, kind="gram",
+                pass_deadline_s=pass_deadline_s,
             )
             accs.append(acc)
         _bump(counters, gram_passes=1)
@@ -304,6 +321,7 @@ def sparse_stats(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    pass_deadline_s: float | None = None,
 ):
     """The ``(variances, build)`` pair `core.spca` drives the lambda
     search with, computed out-of-core.  ``build(support)`` is one more
@@ -321,6 +339,7 @@ def sparse_stats(
         prefetch_depth=prefetch_depth, num_hosts=num_hosts,
         counters=counters, io_retries=io_retries, io_backoff_s=io_backoff_s,
         resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+        pass_deadline_s=pass_deadline_s,
     )
     means = np.asarray(screen.means) if center else None
 
@@ -332,6 +351,7 @@ def sparse_stats(
             num_hosts=num_hosts, counters=counters,
             io_retries=io_retries, io_backoff_s=io_backoff_s,
             resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+            pass_deadline_s=pass_deadline_s,
         )
 
     return np.asarray(screen.variances), build
@@ -354,6 +374,7 @@ def screen_and_gram_sparse(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    pass_deadline_s: float | None = None,
 ):
     """Two-pass out-of-core pipeline at a fixed lambda — the sparse twin
     of `data.bow.screen_and_gram_streaming`.  Returns
@@ -364,6 +385,7 @@ def screen_and_gram_sparse(
         prefetch_depth=prefetch_depth, num_hosts=num_hosts,
         counters=counters, io_retries=io_retries, io_backoff_s=io_backoff_s,
         resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+        pass_deadline_s=pass_deadline_s,
     )
     support = select_support(screen.variances, lam, max_reduced)
     Sigma_hat = sparse_reduced_covariance(
@@ -374,5 +396,6 @@ def screen_and_gram_sparse(
         num_hosts=num_hosts, counters=counters,
         io_retries=io_retries, io_backoff_s=io_backoff_s,
         resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+        pass_deadline_s=pass_deadline_s,
     )
     return Sigma_hat, support, screen

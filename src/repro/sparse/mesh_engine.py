@@ -36,6 +36,16 @@ snapshots.
 Resume: checkpoints store the stacked (D, ...) per-device moments at
 superbatch boundaries; `pass_fingerprint` gains the device topology
 (``n_devices``), so a cursor written at one D never restores at another.
+
+Degraded mode: a sharded pass that dies with a runtime dispatch error
+(XLA OOM, transfer failure — anything `core.bcd.is_dispatch_error`
+accepts) is retried WHOLE at half the device count, halving down to
+``min_devices`` and finally falling to the single-device engine path.
+Each step records ``mesh.degraded`` (registry + ``counters``) and, because
+the fingerprint carries ``n_devices``, restarts cleanly at the new
+topology rather than restoring a cursor shaped for the old one.  Data
+corruption (`store.ShardCorruptionError`) propagates untouched — fewer
+devices cannot fix bad bytes.
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ from repro.core.distributed import _shard_map, psum_partials
 from repro.core.elimination import Screen, combine_screens
 from repro.data.bow import local_support_cols
 from repro.data.pipeline import prefetch
+from repro.kernels import ops as kernel_ops
 from repro.kernels import ref
 from repro.kernels.csr_gram import csr_gram_batched_pallas
 from repro.kernels.csr_stats import csr_column_stats_pallas
@@ -416,16 +427,39 @@ class MeshGram:
 # the sharded drain
 
 
+def _degrade_step(e: BaseException, D: int, min_devices: int,
+                  counters: dict | None) -> int | None:
+    """The next rung of the degraded-mode ladder for a sharded pass that
+    died with ``e`` at ``D`` devices: half the topology (floored at
+    ``min_devices``), or None when the error is not a retryable dispatch
+    failure / the ladder is exhausted (caller re-raises)."""
+    from repro.core.bcd import is_dispatch_error
+    nD = max(int(min_devices), 1, D // 2)
+    if nD >= D or not is_dispatch_error(e):
+        return None
+    metrics.counter("mesh.degraded").inc()
+    _count(counters, "mesh_degraded", 1)
+    return nD
+
+
 def _mesh_drain(store: SparseCorpus, acc, *, devices, chunk_nnz, chunk_rows,
                 megabatch, prefetch_depth, host_id, num_hosts, counters,
-                launch_key, checkpointer=None, kind: str = ""):
+                launch_key, checkpointer=None, kind: str = "",
+                pass_deadline_s: float | None = None):
     """One sharded streaming pass: superbatches of D megabatches,
     prefetched one ahead, ONE dispatch per superbatch — ceil(B/D) launches
     for a pass `engine._drain` does in B.  Mirrors `_drain`'s resume,
     retry, and prefetch accounting; counter keys are identical
     (``screen_launches`` / ``gram_launches`` count *dispatches*, so the
-    amortization is visible in the same diagnostics)."""
+    amortization is visible in the same diagnostics).  ``pass_deadline_s``
+    arms the same cooperative watchdog as `engine._drain`, checked at
+    superbatch boundaries after the checkpoint cadence runs."""
     D = int(devices)
+    wd = None
+    if pass_deadline_s is not None:
+        from repro.obs import health as _health
+        wd = _health.Watchdog(pass_deadline_s, what=f"{kind or launch_key} pass",
+                              exc=_health.PassDeadlineError)
     start_batch = 0
     fp = None
     if checkpointer is not None:
@@ -460,6 +494,9 @@ def _mesh_drain(store: SparseCorpus, acc, *, devices, chunk_nnz, chunk_rows,
         for sb in it:
             with trace.span("ingest.megabatch", kind=launch_key,
                             chunks=int(sb.n_chunks), lanes=int(sb.lanes)):
+                # Fault seam: lets tests kill THIS dispatch the way a real
+                # XLA runtime error would, exercising the degrade ladder.
+                kernel_ops.solver_fault_before(f"mesh.{kind or launch_key}")
                 acc.update_superbatch(sb)
                 trace.device_sync(
                     tuple(getattr(acc, f) for f in acc._acc_fields)
@@ -479,6 +516,8 @@ def _mesh_drain(store: SparseCorpus, acc, *, devices, chunk_nnz, chunk_rows,
                     checkpointer.save(fp, done, acc.state_dict())
                 metrics.counter("ingest.resume.checkpoints").inc()
                 _count(counters, "resume_checkpoints", 1)
+            if wd is not None:
+                wd.check()
         if checkpointer is not None:
             checkpointer.save(fp, done, acc.state_dict(), complete=True)
             metrics.counter("ingest.resume.checkpoints").inc()
@@ -523,11 +562,15 @@ def mesh_feature_variances(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    min_devices: int = 1,
+    pass_deadline_s: float | None = None,
 ) -> Screen:
     """The Thm 2.1 screen input, computed in one D-device sharded pass.
 
     ``devices <= 1`` falls back to the single-device engine, so callers
-    can pass the config knob straight through."""
+    can pass the config knob straight through.  A dispatch failure retries
+    the whole pass at D/2 (see the module docstring's degraded-mode
+    contract) down to ``min_devices``."""
     if int(devices) <= 1:
         from . import engine
         return engine.sparse_feature_variances(
@@ -537,29 +580,44 @@ def mesh_feature_variances(
             counters=counters, io_retries=io_retries,
             io_backoff_s=io_backoff_s, resume_dir=resume_dir,
             checkpoint_every=checkpoint_every,
+            pass_deadline_s=pass_deadline_s,
         )
-    metrics.gauge("mesh.devices").set(int(devices))
-    ckpt = _reliability(store, io_retries, io_backoff_s,
-                        resume_dir, checkpoint_every)
-    partials = []
-    with trace.span("ingest.screen_pass", nnz=int(store.nnz),
-                    num_hosts=num_hosts, megabatch=megabatch,
-                    devices=int(devices)):
-        for h in range(num_hosts):
-            acc = MeshStats(store.n_cols, devices=devices, impl=impl)
-            _mesh_drain(
-                store, acc, devices=devices, chunk_nnz=chunk_nnz,
-                chunk_rows=chunk_rows, megabatch=megabatch,
-                prefetch_depth=prefetch_depth, host_id=h,
-                num_hosts=num_hosts, counters=counters,
-                launch_key="screen_launches", checkpointer=ckpt,
-                kind="screen",
-            )
-            partials.append(acc.finalize(center=center))
-        _bump(counters, screen_passes=1)
-        if len(partials) == 1:
-            return partials[0]
-        return combine_screens(partials)
+    try:
+        metrics.gauge("mesh.devices").set(int(devices))
+        ckpt = _reliability(store, io_retries, io_backoff_s,
+                            resume_dir, checkpoint_every)
+        partials = []
+        with trace.span("ingest.screen_pass", nnz=int(store.nnz),
+                        num_hosts=num_hosts, megabatch=megabatch,
+                        devices=int(devices)):
+            for h in range(num_hosts):
+                acc = MeshStats(store.n_cols, devices=devices, impl=impl)
+                _mesh_drain(
+                    store, acc, devices=devices, chunk_nnz=chunk_nnz,
+                    chunk_rows=chunk_rows, megabatch=megabatch,
+                    prefetch_depth=prefetch_depth, host_id=h,
+                    num_hosts=num_hosts, counters=counters,
+                    launch_key="screen_launches", checkpointer=ckpt,
+                    kind="screen", pass_deadline_s=pass_deadline_s,
+                )
+                partials.append(acc.finalize(center=center))
+            _bump(counters, screen_passes=1)
+            if len(partials) == 1:
+                return partials[0]
+            return combine_screens(partials)
+    except RuntimeError as e:
+        nD = _degrade_step(e, int(devices), min_devices, counters)
+        if nD is None:
+            raise
+        return mesh_feature_variances(
+            store, devices=nD, center=center, impl=impl,
+            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
+            prefetch_depth=prefetch_depth, num_hosts=num_hosts,
+            counters=counters, io_retries=io_retries,
+            io_backoff_s=io_backoff_s, resume_dir=resume_dir,
+            checkpoint_every=checkpoint_every, min_devices=min_devices,
+            pass_deadline_s=pass_deadline_s,
+        )
 
 
 def mesh_reduced_covariance(
@@ -579,6 +637,8 @@ def mesh_reduced_covariance(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    min_devices: int = 1,
+    pass_deadline_s: float | None = None,
 ):
     """Sigma_hat on the surviving columns in one D-device sharded pass."""
     if int(devices) <= 1:
@@ -590,33 +650,49 @@ def mesh_reduced_covariance(
             counters=counters, io_retries=io_retries,
             io_backoff_s=io_backoff_s, resume_dir=resume_dir,
             checkpoint_every=checkpoint_every,
+            pass_deadline_s=pass_deadline_s,
         )
-    metrics.gauge("mesh.devices").set(int(devices))
-    ckpt = _reliability(store, io_retries, io_backoff_s,
-                        resume_dir, checkpoint_every)
-    support = np.asarray(support)
-    accs = []
-    with trace.span("ingest.gram_pass", n_hat=int(support.size),
-                    num_hosts=num_hosts, megabatch=megabatch,
-                    devices=int(devices)):
-        for h in range(num_hosts):
-            acc = MeshGram(support, devices=devices, impl=impl,
-                           chunk_rows=chunk_rows)
-            _mesh_drain(
-                store, acc, devices=devices, chunk_nnz=chunk_nnz,
-                chunk_rows=chunk_rows, megabatch=megabatch,
-                prefetch_depth=prefetch_depth, host_id=h,
-                num_hosts=num_hosts, counters=counters,
-                launch_key="gram_launches", checkpointer=ckpt, kind="gram",
-            )
-            accs.append(acc)
-        _bump(counters, gram_passes=1)
-        acc = accs[0]
-        for other in accs[1:]:
-            acc.merge(other)
-        out = jnp.asarray(acc.finalize(means=means))
-        trace.device_sync(out)
-    return out
+    try:
+        metrics.gauge("mesh.devices").set(int(devices))
+        ckpt = _reliability(store, io_retries, io_backoff_s,
+                            resume_dir, checkpoint_every)
+        support = np.asarray(support)
+        accs = []
+        with trace.span("ingest.gram_pass", n_hat=int(support.size),
+                        num_hosts=num_hosts, megabatch=megabatch,
+                        devices=int(devices)):
+            for h in range(num_hosts):
+                acc = MeshGram(support, devices=devices, impl=impl,
+                               chunk_rows=chunk_rows)
+                _mesh_drain(
+                    store, acc, devices=devices, chunk_nnz=chunk_nnz,
+                    chunk_rows=chunk_rows, megabatch=megabatch,
+                    prefetch_depth=prefetch_depth, host_id=h,
+                    num_hosts=num_hosts, counters=counters,
+                    launch_key="gram_launches", checkpointer=ckpt,
+                    kind="gram", pass_deadline_s=pass_deadline_s,
+                )
+                accs.append(acc)
+            _bump(counters, gram_passes=1)
+            acc = accs[0]
+            for other in accs[1:]:
+                acc.merge(other)
+            out = jnp.asarray(acc.finalize(means=means))
+            trace.device_sync(out)
+        return out
+    except RuntimeError as e:
+        nD = _degrade_step(e, int(devices), min_devices, counters)
+        if nD is None:
+            raise
+        return mesh_reduced_covariance(
+            store, support, devices=nD, means=means, impl=impl,
+            chunk_nnz=chunk_nnz, chunk_rows=chunk_rows, megabatch=megabatch,
+            prefetch_depth=prefetch_depth, num_hosts=num_hosts,
+            counters=counters, io_retries=io_retries,
+            io_backoff_s=io_backoff_s, resume_dir=resume_dir,
+            checkpoint_every=checkpoint_every, min_devices=min_devices,
+            pass_deadline_s=pass_deadline_s,
+        )
 
 
 def mesh_sparse_stats(
@@ -635,6 +711,8 @@ def mesh_sparse_stats(
     io_backoff_s: float | None = None,
     resume_dir: str | None = None,
     checkpoint_every: int = DEFAULT_CHECKPOINT_EVERY,
+    min_devices: int = 1,
+    pass_deadline_s: float | None = None,
 ):
     """The ``(variances, build)`` pair `core.spca._as_stats` consumes,
     computed with D-device sharded passes — same 1 + 1 corpus-pass
@@ -646,6 +724,7 @@ def mesh_sparse_stats(
         prefetch_depth=prefetch_depth, num_hosts=num_hosts,
         counters=counters, io_retries=io_retries, io_backoff_s=io_backoff_s,
         resume_dir=resume_dir, checkpoint_every=checkpoint_every,
+        min_devices=min_devices, pass_deadline_s=pass_deadline_s,
     )
     means = np.asarray(screen.means) if center else None
 
@@ -657,6 +736,7 @@ def mesh_sparse_stats(
             num_hosts=num_hosts, counters=counters, io_retries=io_retries,
             io_backoff_s=io_backoff_s, resume_dir=resume_dir,
             checkpoint_every=checkpoint_every,
+            min_devices=min_devices, pass_deadline_s=pass_deadline_s,
         )
 
     return np.asarray(screen.variances), build

@@ -1,12 +1,17 @@
 """Test/bench support utilities — deterministic fault injection for the
-out-of-core reliability layer (`repro.testing.faults`)."""
+out-of-core reliability layer and the solver runtime
+(`repro.testing.faults`)."""
 from .faults import (
-    FaultInjector, InjectedReadError, InjectedWriteError, corrupt_file,
-    fail_nth_read, flip_bytes, install, slow_read, torn_write, truncate_file,
+    FaultInjector, InjectedDispatchError, InjectedReadError,
+    InjectedWriteError, SolverFaultInjector, corrupt_file, dispatch_error,
+    fail_nth_read, flip_bytes, install, install_solver, nonfinite_solve,
+    slow_read, stalled_solve, torn_write, truncate_file,
 )
 
 __all__ = [
-    "FaultInjector", "InjectedReadError", "InjectedWriteError",
-    "corrupt_file", "fail_nth_read", "flip_bytes", "install", "slow_read",
+    "FaultInjector", "InjectedDispatchError", "InjectedReadError",
+    "InjectedWriteError", "SolverFaultInjector", "corrupt_file",
+    "dispatch_error", "fail_nth_read", "flip_bytes", "install",
+    "install_solver", "nonfinite_solve", "slow_read", "stalled_solve",
     "torn_write", "truncate_file",
 ]

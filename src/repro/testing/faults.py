@@ -36,6 +36,23 @@ Usage::
     with install(inj):
         ... stream a pass; reads 3 and 4 of values shards fail ...
     assert inj.injected["read_fail"] == 2
+
+A second seam targets the SOLVER (``repro.kernels.ops.SOLVER_FAULTS``):
+`SolverFaultInjector` perturbs what `bcd_solve` / `bcd_solve_batched`
+return — a non-finite objective (``nonfinite_solve``), a sweep counter
+pinned at the budget (``stalled_solve``) — or raises an
+`InjectedDispatchError` (a RuntimeError, like a real XLA dispatch
+failure) before the launch (``dispatch_error``).  Rules fnmatch the call
+SITE ("bcd_solve", "bcd_solve_batched", "mesh.screen", "mesh.gram") with
+the same 0-based occurrence windows as the I/O rules, so a test can say
+"the 9th single solve goes non-finite" and replay it exactly.  This is
+the surface the solver fallback ladder and degraded-mode mesh tests
+drive::
+
+    with install_solver(SolverFaultInjector(
+            nonfinite_solve(2, match="bcd_solve"))):
+        ... the 3rd fused solve reports obj=NaN; the supervisor must
+        ... fall back to the jnp oracle and finish finite ...
 """
 from __future__ import annotations
 
@@ -215,6 +232,117 @@ def install(injector: FaultInjector):
         yield injector
     finally:
         _store.FILE_IO = prev
+
+
+# -- solver-fault seam (repro.kernels.ops.SOLVER_FAULTS) ------------------
+
+
+class InjectedDispatchError(RuntimeError):
+    """The injected device-dispatch failure.  A RuntimeError — NOT a
+    corruption error — so the degraded-mode mesh ladder treats it exactly
+    like a real XLA runtime failure: retry at fewer devices."""
+
+
+@dataclass
+class _NonfiniteSolve(_Rule):
+    op: str = "nonfinite"
+    problem: int | None = None    # batched: which problem (None = seeded)
+
+
+@dataclass
+class _StalledSolve(_Rule):
+    op: str = "stall"
+    problem: int | None = None
+
+
+@dataclass
+class _DispatchError(_Rule):
+    op: str = "dispatch"
+
+
+def nonfinite_solve(n: int = 0, *, match: str = "*", times: int = 1,
+                    problem: int | None = None) -> _Rule:
+    """Matching solve calls ``n .. n+times-1`` report a NaN objective
+    (batched calls poison ``problem``, or a seeded index when None) —
+    what a diverged fused kernel looks like to `observe_result_health`."""
+    return _NonfiniteSolve(match=match, n=n, times=times, problem=problem)
+
+
+def stalled_solve(n: int = 0, *, match: str = "*", times: int = 1,
+                  problem: int | None = None) -> _Rule:
+    """Matching solve calls return ``sweeps == max_sweeps`` — a solve that
+    burned its whole budget without converging."""
+    return _StalledSolve(match=match, n=n, times=times, problem=problem)
+
+
+def dispatch_error(n: int = 0, *, match: str = "*", times: int = 1) -> _Rule:
+    """Matching calls raise InjectedDispatchError BEFORE any device work —
+    a lost device / failed ``shard_map`` dispatch, as far as the caller
+    can tell."""
+    return _DispatchError(match=match, n=n, times=times)
+
+
+class SolverFaultInjector:
+    """An ``ops.SOLVER_FAULTS`` occupant applying a deterministic schedule
+    of solver faults.  ``before(site)`` may raise a dispatch error;
+    ``after(site, out, max_sweeps=...)`` perturbs the returned
+    ``(X, obj, sweeps, history)`` tuple (single or batched) in place of
+    the real kernel result."""
+
+    def __init__(self, *rules: _Rule, seed: int = 0):
+        self.rules = list(rules)
+        self.rng = np.random.default_rng(seed)
+        self.calls: dict[str, int] = {}
+        self.injected: dict[str, int] = {
+            "nonfinite": 0, "stall": 0, "dispatch": 0,
+        }
+
+    def before(self, site: str) -> None:
+        self.calls[site] = self.calls.get(site, 0) + 1
+        for r in self.rules:
+            if r.op == "dispatch" and r._due(site):
+                self.injected["dispatch"] += 1
+                raise InjectedDispatchError(
+                    f"injected dispatch failure at {site}"
+                )
+
+    def after(self, site: str, out, *, max_sweeps: int):
+        X, obj, sweeps, hist = out
+        for r in self.rules:
+            if r.op not in ("nonfinite", "stall") or not r._due(site):
+                continue
+            obj = np.array(obj, copy=True)
+            sweeps = np.array(sweeps, copy=True)
+            if obj.ndim == 0:          # single solve
+                if r.op == "nonfinite":
+                    obj = np.asarray(np.nan, obj.dtype)
+                else:
+                    sweeps = np.asarray(max_sweeps, sweeps.dtype)
+            else:                      # batched: poison one problem
+                b = r.problem
+                if b is None:
+                    b = int(self.rng.integers(0, obj.shape[0]))
+                if r.op == "nonfinite":
+                    obj[b] = np.nan
+                else:
+                    sweeps[b] = max_sweeps
+            self.injected[r.op] += 1
+            out = (X, obj, sweeps, hist)
+        return out
+
+
+@contextmanager
+def install_solver(injector: SolverFaultInjector):
+    """Swap ``repro.kernels.ops.SOLVER_FAULTS`` for ``injector`` within
+    the block."""
+    from repro.kernels import ops as _ops
+
+    prev = _ops.SOLVER_FAULTS
+    _ops.SOLVER_FAULTS = injector
+    try:
+        yield injector
+    finally:
+        _ops.SOLVER_FAULTS = prev
 
 
 # -- on-disk damage helpers (no seam needed) ------------------------------

@@ -1,0 +1,479 @@
+"""Supervised fit runtime: whole-fit checkpoint/resume (`core.fitstate`),
+the solver fallback ladder (`core.bcd.solve_bcd_supervised` /
+`supervise_many`), wall-clock watchdogs (`obs.health.Watchdog`), and the
+kill-and-resume proofs at every phase boundary — all driven by the seeded
+solver-fault seam (`repro.testing` nonfinite/stall/dispatch rules), never
+by timing.  The degraded-mode device mesh is covered in
+tests/test_mesh_engine.py (it needs forced multi-device topology)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FitCheckpointer, SolverDivergenceError, SPCAConfig, bcd, fit_components,
+    fitstate,
+)
+from repro.data import make_corpus
+from repro.obs import health, metrics
+from repro.sparse import write_corpus
+from repro.testing import (
+    InjectedDispatchError, SolverFaultInjector, dispatch_error,
+    install_solver, nonfinite_solve, stalled_solve, truncate_file,
+)
+
+TOPICS = {"t0": ["w0", "w1"], "t1": ["w2", "w3"], "t2": ["w4", "w5"]}
+
+
+def _dense(n_docs=200, n_feat=40, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((n_docs, n_feat))
+    A[:, :5] += 3 * rng.standard_normal((n_docs, 1))
+    return A
+
+
+def _sigma(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    B = rng.standard_normal((3 * n, n))
+    return jnp.asarray(B.T @ B / (3 * n))
+
+
+def _cfg(**kw):
+    kw.setdefault("max_sweeps", 8)
+    kw.setdefault("lam_search_evals", 6)
+    kw.setdefault("solver_impl", "fused_ref")  # route through the ops seam
+    return SPCAConfig(**kw)
+
+
+# ------------------------------------------------------- solver-fault seam
+
+
+def test_injector_nonfinite_targets_scheduled_occurrence():
+    S = _sigma()
+    inj = SolverFaultInjector(nonfinite_solve(n=1, match="bcd_solve", times=2))
+    objs = []
+    with install_solver(inj):
+        for _ in range(4):
+            r = bcd.solve_bcd(S, 0.1, max_sweeps=6, solver_impl="fused_ref")
+            objs.append(float(np.asarray(
+                r.kernel_obj if r.kernel_obj is not None else r.obj)))
+    # occurrences 1 and 2 (0-based) poisoned, 0 and 3 untouched
+    assert np.isfinite(objs[0]) and np.isfinite(objs[3])
+    assert not np.isfinite(objs[1]) and not np.isfinite(objs[2])
+    assert inj.injected["nonfinite"] == 2
+    assert inj.calls["bcd_solve"] == 4
+
+
+def test_injector_stall_pins_sweeps_at_budget():
+    S = _sigma()
+    inj = SolverFaultInjector(stalled_solve(n=0, match="bcd_solve"))
+    with install_solver(inj):
+        r = bcd.solve_bcd(S, 0.1, max_sweeps=6, solver_impl="fused_ref")
+    assert int(r.sweeps) == 6
+    assert inj.injected["stall"] == 1
+
+
+def test_injector_dispatch_raises_typed_and_site_scoped():
+    S = _sigma()
+    inj = SolverFaultInjector(dispatch_error(n=0, match="bcd_solve_batched"))
+    with install_solver(inj):
+        # wrong site: untouched
+        bcd.solve_bcd(S, 0.1, max_sweeps=4, solver_impl="fused_ref")
+        with pytest.raises(InjectedDispatchError):
+            bcd.solve_bcd_many([S, S], [0.1, 0.2], max_sweeps=4)
+    assert inj.injected["dispatch"] == 1
+    assert isinstance(InjectedDispatchError("x"), RuntimeError)
+    assert bcd.is_dispatch_error(InjectedDispatchError("x"))
+    assert not bcd.is_dispatch_error(ValueError("x"))
+    assert not bcd.is_dispatch_error(SolverDivergenceError("x"))
+
+
+def test_corruption_is_not_a_dispatch_error():
+    from repro.sparse import ShardCorruptionError
+    assert not bcd.is_dispatch_error(ShardCorruptionError("bad shard"))
+
+
+# ------------------------------------------------------- fitstate mechanics
+
+
+def test_fitstate_codec_round_trips_nested_arrays(tmp_path):
+    ck = FitCheckpointer(str(tmp_path))
+    fp = {"kind": "fit", "x": 1}
+    ck.open(fp)
+    comp = {"x": np.arange(5.0), "support": np.arange(5, dtype=np.int64),
+            "lam": 0.25, "nested": {"Sigma": np.eye(3), "tag": "a"},
+            "none": None, "flag": True}
+    ck.record_component(comp)
+    ck.record_search({"k": 1, "evals": 1, "lo": 0.1, "hi": 0.9,
+                      "done": False, "warm_X": np.ones((2, 2))})
+    ck2 = FitCheckpointer(str(tmp_path))
+    st = ck2.open(fp)
+    assert len(st.components) == 1 and not st.complete
+    got = st.components[0]
+    np.testing.assert_array_equal(got["x"], comp["x"])
+    np.testing.assert_array_equal(got["support"], comp["support"])
+    assert got["support"].dtype == np.int64
+    np.testing.assert_array_equal(got["nested"]["Sigma"], np.eye(3))
+    assert got["lam"] == 0.25 and got["none"] is None and got["flag"] is True
+    assert ck2.search_cursor(1)["evals"] == 1
+    assert ck2.search_cursor(0) is None  # stale component index
+    np.testing.assert_array_equal(ck2.search_cursor(1)["warm_X"],
+                                  np.ones((2, 2)))
+
+
+def test_fitstate_fingerprint_guard_and_corruption(tmp_path):
+    ck = FitCheckpointer(str(tmp_path))
+    fp = fitstate.fit_fingerprint(np.arange(10.0), n_components=2,
+                                  target_card=4, deflation="projection",
+                                  cfg=_cfg())
+    json.dumps(fp)  # JSON-able, tuple cfg fields included
+    ck.open(fp)
+    ck.record_component({"x": np.ones(3)})
+    ck.finish()
+
+    # any fingerprint drift is a different fit -> fresh state
+    fp2 = fitstate.fit_fingerprint(np.arange(10.0), n_components=2,
+                                   target_card=4, deflation="projection",
+                                   cfg=_cfg(lam_search_evals=7))
+    assert fp2 != fp
+    st = FitCheckpointer(str(tmp_path)).open(fp2)
+    assert st.components == [] and not st.complete
+
+    # torn state / torn meta both load as "nothing", never raise
+    st = FitCheckpointer(str(tmp_path)).open(fp)
+    assert st.complete and len(st.components) == 1
+    d = ck._dir()
+    truncate_file(os.path.join(d, fitstate.STATE_NAME), frac=0.3)
+    assert FitCheckpointer(str(tmp_path)).open(fp).components == []
+    ck.open(fp)
+    ck.record_component({"x": np.ones(3)})
+    truncate_file(os.path.join(d, fitstate.META_NAME), frac=0.3)
+    assert FitCheckpointer(str(tmp_path)).open(fp).components == []
+    ck.clear()
+    assert not os.path.exists(d)
+
+
+def test_fitstate_checkpoint_cadence(tmp_path):
+    ck = FitCheckpointer(str(tmp_path), every=3)
+    ck.open({"kind": "fit"})
+    for e in range(1, 5):
+        ck.record_search({"k": 0, "evals": e, "done": False})
+    assert ck.saves == 1  # only evals=3 hit the cadence
+    ck.record_search({"k": 0, "evals": 5, "done": True})
+    assert ck.saves == 2  # done always persists
+    ck.record_component({"x": np.ones(2)})
+    assert ck.saves == 3  # component boundaries always persist
+
+
+# ------------------------------------------------------- fallback ladder
+
+
+def test_supervised_solve_falls_back_to_oracle_on_injected_nonfinite():
+    S = _sigma()
+    inj = SolverFaultInjector(nonfinite_solve(n=0, match="bcd_solve"))
+    with metrics.use_registry() as reg, install_solver(inj):
+        res, fallbacks = bcd.solve_bcd_supervised(
+            S, 0.1, max_sweeps=12, solver_impl="fused_ref")
+        assert fallbacks == 1
+        assert reg.value("solver.fallbacks") == 1
+        assert reg.value("solver.divergence") == 0
+    assert np.isfinite(float(np.asarray(res.obj)))
+
+
+def test_supervised_solve_divergence_raises_typed_with_debris(tmp_path):
+    n = 16
+    S = np.eye(n)
+    S[0, 0] = np.nan  # genuinely bad input: NaN on every path
+    debris = str(tmp_path / "debris")
+    with metrics.use_registry() as reg:
+        with pytest.raises(SolverDivergenceError) as ei:
+            bcd.solve_bcd_supervised(jnp.asarray(S), 0.1, max_sweeps=6,
+                                     solver_impl="fused_ref",
+                                     debris_dir=debris)
+        assert reg.value("solver.divergence") == 1
+    e = ei.value
+    assert e.n == n and e.lam == pytest.approx(0.1)
+    assert e.debris_path and os.path.exists(e.debris_path)
+    with np.load(e.debris_path) as z:
+        assert set(z.files) == {"Sigma_hat", "lam", "X0", "n_valid"}
+        assert z["Sigma_hat"].shape == (n, n)
+        assert int(z["n_valid"]) == n
+
+
+def test_supervise_many_patches_only_unhealthy_problems():
+    Ss = [_sigma(seed=s) for s in range(3)]
+    lams = [0.1, 0.15, 0.2]
+    inj = SolverFaultInjector(
+        nonfinite_solve(n=0, match="bcd_solve_batched", problem=1))
+    with metrics.use_registry() as reg, install_solver(inj):
+        raw = bcd.solve_bcd_many(Ss, lams, max_sweeps=60)
+        bad = [not np.isfinite(float(np.asarray(
+            r.kernel_obj if r.kernel_obj is not None else r.obj)))
+            for r in raw]
+        assert bad == [False, True, False]
+        patched, nfb = bcd.supervise_many(raw, Ss, lams, max_sweeps=60)
+        assert nfb >= 1
+        assert reg.value("solver.fallbacks") == nfb
+    for r in patched:
+        assert np.isfinite(float(np.asarray(r.obj)))
+    # healthy problems keep their original results
+    np.testing.assert_array_equal(np.asarray(patched[0].X),
+                                  np.asarray(raw[0].X))
+
+
+def test_fit_with_injected_nonfinite_completes_with_fallbacks():
+    """Acceptance (b), solver half: a fit whose fused solves go non-finite
+    still completes with finite components, counting the fallbacks."""
+    A = _dense()
+    inj = SolverFaultInjector(nonfinite_solve(n=1, match="bcd_solve",
+                                              times=2))
+    diag: dict = {}
+    with metrics.use_registry() as reg, install_solver(inj):
+        res = fit_components(A, 2, target_card=5, cfg=_cfg(),
+                             diagnostics=diag)
+        assert reg.value("solver.fallbacks") >= 1
+    assert inj.injected["nonfinite"] == 2
+    assert diag["solver_fallbacks"] >= 1
+    assert diag["fit_resume"]["fallbacks"] == diag["solver_fallbacks"]
+    for r in res:
+        assert np.all(np.isfinite(np.asarray(r.x)))
+        assert np.isfinite(r.variance)
+
+
+def test_fallback_disabled_keeps_unhealthy_result_observable():
+    A = _dense()
+    base = fit_components(A, 1, target_card=5,
+                          cfg=_cfg(solver_fallback=True))
+    with metrics.use_registry() as reg:
+        off = fit_components(A, 1, target_card=5,
+                             cfg=_cfg(solver_fallback=False))
+        assert reg.value("solver.fallbacks") == 0
+    np.testing.assert_array_equal(base[0].support, off[0].support)
+
+
+# ------------------------------------------------------- healthz semantics
+
+
+def test_runtime_rules_fallback_burst_degrades_not_503():
+    """Acceptance (b), serving half: fallbacks mark the fit degraded (the
+    results are still sound) while divergence / expired watchdogs go
+    unhealthy-503."""
+    eng = health.HealthEngine(health.runtime_rules(fallback_burst=2.0))
+    snap = {"solver.fallbacks": {"type": "counter", "value": 3.0,
+                                 "delta": 3.0}}
+    st = eng.evaluate(snap, 100.0)
+    assert st.status == "degraded" and st.http_status == 200
+    assert [f.rule for f in st.firing] == ["solver_fallback_burst"]
+
+    st = eng.evaluate({"solver.divergence": {"type": "counter", "value": 1.0,
+                                             "delta": 1.0}}, 500.0)
+    assert st.status == "unhealthy" and st.http_status == 503
+
+    st = eng.evaluate({"watchdog.expired": {"type": "counter", "value": 1.0,
+                                            "delta": 1.0}}, 900.0)
+    assert st.status == "unhealthy" and st.http_status == 503
+
+    st = eng.evaluate({"mesh.degraded": {"type": "counter", "value": 2.0,
+                                         "delta": 2.0}}, 1300.0)
+    assert st.status == "degraded" and st.http_status == 200
+
+
+# ------------------------------------------------------------- watchdogs
+
+
+def test_watchdog_typed_timeouts_and_counter():
+    clock = iter([0.0, 5.0]).__next__
+    wd = health.Watchdog(2.0, what="solve round",
+                         exc=health.SolveDeadlineError, clock=clock)
+    with metrics.use_registry() as reg:
+        with pytest.raises(health.SolveDeadlineError) as ei:
+            wd.check()
+        assert reg.value("watchdog.expired") == 1
+    e = ei.value
+    assert isinstance(e, health.WatchdogTimeout)
+    assert isinstance(e, TimeoutError)
+    assert e.what == "solve round"
+    assert e.budget_s == 2.0 and e.elapsed_s == 5.0
+
+    ok = health.Watchdog(10.0, clock=iter([0.0, 1.0, 2.0]).__next__)
+    ok.check()  # within budget: silent
+    assert not ok.expired()
+
+
+def test_pass_deadline_fires_at_resumable_boundary(tmp_path):
+    from repro.sparse.engine import sparse_feature_variances
+
+    c = make_corpus(300, 400, topics=TOPICS, seed=0)
+    store = write_corpus(c, str(tmp_path / "store"), shard_nnz=2500)
+    geo = dict(chunk_nnz=512, chunk_rows=64, megabatch=2)
+    clean = np.asarray(sparse_feature_variances(store, **geo).variances)
+
+    rd = str(tmp_path / "resume")
+    with pytest.raises(health.PassDeadlineError) as ei:
+        sparse_feature_variances(store, **geo, pass_deadline_s=0.0,
+                                 resume_dir=rd, checkpoint_every=1)
+    assert "screen pass" in ei.value.what
+    counters: dict = {}
+    got = np.asarray(sparse_feature_variances(
+        store, **geo, counters=counters, resume_dir=rd, checkpoint_every=1,
+    ).variances)
+    assert counters["resumed_megabatches"] > 0
+    np.testing.assert_allclose(got, clean, rtol=1e-12)
+
+
+def test_solve_deadline_fires_after_checkpointed_eval(tmp_path):
+    A = _dense()
+    rd = str(tmp_path / "resume")
+    base = fit_components(A, 1, target_card=5, cfg=_cfg())
+    with pytest.raises(health.SolveDeadlineError):
+        fit_components(A, 1, target_card=5,
+                       cfg=_cfg(resume_dir=rd, solve_deadline_s=0.0))
+    diag: dict = {}
+    res = fit_components(A, 1, target_card=5, cfg=_cfg(resume_dir=rd),
+                         diagnostics=diag)
+    assert diag["fit_resume"]["evals_skipped"] >= 1
+    np.testing.assert_array_equal(res[0].support, base[0].support)
+    np.testing.assert_allclose(res[0].variance, base[0].variance, rtol=1e-6)
+
+
+# ------------------------------------ kill & resume at the phase boundaries
+
+
+def _assert_same_fit(resumed, clean):
+    assert len(resumed) == len(clean)
+    for r1, r0 in zip(resumed, clean):
+        np.testing.assert_array_equal(r1.support, r0.support)
+        np.testing.assert_allclose(r1.variance, r0.variance, rtol=1e-6)
+
+
+def test_kill_mid_lambda_search_resumes_identically(tmp_path):
+    A = _dense()
+    d0: dict = {}
+    clean = fit_components(A, 3, target_card=5, cfg=_cfg(), diagnostics=d0)
+
+    rd = str(tmp_path / "resume")
+    cfg = _cfg(resume_dir=rd)
+    # land the kill two evals into component 2's search
+    kill_at = d0["components"][0]["evals"] + 2
+    inj = SolverFaultInjector(dispatch_error(n=kill_at, match="bcd_solve"))
+    with install_solver(inj), pytest.raises(InjectedDispatchError):
+        fit_components(A, 3, target_card=5, cfg=cfg)
+    assert inj.injected["dispatch"] == 1
+
+    diag: dict = {}
+    resumed = fit_components(A, 3, target_card=5, cfg=cfg, diagnostics=diag)
+    fr = diag["fit_resume"]
+    assert fr["components_restored"] == 1   # component 1 never re-solved
+    assert fr["evals_skipped"] >= 1
+    assert diag["components"][0]["restored"]
+    assert diag["components"][0]["evals"] == 0
+    _assert_same_fit(resumed, clean)
+
+
+def test_kill_between_components_resumes_identically(tmp_path):
+    A = _dense()
+    d0: dict = {}
+    clean = fit_components(A, 2, target_card=5, cfg=_cfg(), diagnostics=d0)
+
+    rd = str(tmp_path / "resume")
+    cfg = _cfg(resume_dir=rd)
+    # kill on the very first solve of component 2's search
+    kill_at = d0["components"][0]["evals"]
+    inj = SolverFaultInjector(dispatch_error(n=kill_at, match="bcd_solve"))
+    with install_solver(inj), pytest.raises(InjectedDispatchError):
+        fit_components(A, 2, target_card=5, cfg=cfg)
+
+    diag: dict = {}
+    resumed = fit_components(A, 2, target_card=5, cfg=cfg, diagnostics=diag)
+    assert diag["fit_resume"]["components_restored"] == 1
+    _assert_same_fit(resumed, clean)
+
+
+def test_kill_mid_batched_search_resumes_identically(tmp_path):
+    A = _dense(seed=3)
+    cfg_kw = dict(batch_evals=3, lam_search_evals=9)
+    d0: dict = {}
+    clean = fit_components(A, 2, target_card=5, cfg=_cfg(**cfg_kw),
+                           diagnostics=d0)
+    # land the kill on the SECOND round of component 2's search, so the
+    # restored cursor carries a completed round
+    rounds0 = d0["components"][0]["solve_launches"]
+    assert d0["components"][1]["solve_launches"] >= 2
+
+    rd = str(tmp_path / "resume")
+    cfg = _cfg(resume_dir=rd, **cfg_kw)
+    inj = SolverFaultInjector(
+        dispatch_error(n=rounds0 + 1, match="bcd_solve_batched"))
+    with install_solver(inj), pytest.raises(InjectedDispatchError):
+        fit_components(A, 2, target_card=5, cfg=cfg)
+    assert inj.injected["dispatch"] == 1
+
+    diag: dict = {}
+    resumed = fit_components(A, 2, target_card=5, cfg=cfg, diagnostics=diag)
+    assert diag["fit_resume"]["evals_skipped"] >= 1
+    _assert_same_fit(resumed, clean)
+
+
+def test_completed_fit_restores_with_zero_solver_work(tmp_path):
+    A = _dense()
+    rd = str(tmp_path / "resume")
+    cfg = _cfg(resume_dir=rd)
+    clean = fit_components(A, 2, target_card=5, cfg=cfg)
+    diag: dict = {}
+    with metrics.use_registry() as reg:
+        again = fit_components(A, 2, target_card=5, cfg=cfg,
+                               diagnostics=diag)
+        assert reg.value("fit.resume.loads") == 1
+        assert reg.value("fit.resume.components") == 2
+    assert diag["fit_resume"]["components_restored"] == 2
+    assert diag["solve_launches"] == 0
+    assert diag["cov_builds"] == 0
+    _assert_same_fit(again, clean)
+
+
+def test_streaming_fit_killed_mid_search_never_restreams(tmp_path):
+    """Acceptance (a): a streaming 3-component fit killed mid-lambda-search
+    of component 2 resumes via cfg.resume_dir to identical supports and
+    explained variance — component 1 is never re-solved and the completed
+    corpus passes are never re-streamed (zero chunks)."""
+    c = make_corpus(300, 400, topics=TOPICS, seed=0)
+    store = write_corpus(c, str(tmp_path / "store"), shard_nnz=1500)
+
+    def cfg(**kw):
+        return _cfg(chunk_nnz=512, chunk_rows=64, megabatch_chunks=2,
+                    lam_search_evals=6, max_sweeps=6, **kw)
+
+    d0: dict = {}
+    clean = fit_components(store, 3, target_card=4, cfg=cfg(),
+                           diagnostics=d0)
+    assert d0["ingest"]["chunks"] > 0
+
+    rd = str(tmp_path / "resume")
+    c1 = cfg(resume_dir=rd, checkpoint_every=1)
+    # land the kill on component 2's SECOND eval: one eval's cursor is
+    # checkpointed, so the resume both restores component 1 and skips work
+    assert d0["components"][1]["evals"] >= 2
+    kill_at = d0["components"][0]["evals"] + 1
+    inj = SolverFaultInjector(dispatch_error(n=kill_at, match="bcd_solve"))
+    with install_solver(inj), pytest.raises(InjectedDispatchError):
+        fit_components(store, 3, target_card=4, cfg=c1)
+
+    diag: dict = {}
+    resumed = fit_components(store, 3, target_card=4, cfg=c1,
+                             diagnostics=diag)
+    fr = diag["fit_resume"]
+    assert fr["components_restored"] == 1
+    assert fr["evals_skipped"] >= 1
+    # both corpus passes completed before the kill: zero chunks re-streamed
+    assert diag["ingest"].get("chunks", 0) == 0
+    assert diag["resumed_megabatches"] > 0
+    _assert_same_fit(resumed, clean)
+
+
+def test_resume_dir_places_fit_state_beside_pass_checkpoints(tmp_path):
+    A = _dense()
+    rd = str(tmp_path / "resume")
+    fit_components(A, 1, target_card=5, cfg=_cfg(resume_dir=rd))
+    assert any(f.startswith("fit_") for f in os.listdir(rd))

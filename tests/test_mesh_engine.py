@@ -195,3 +195,81 @@ def test_pass_fingerprint_includes_device_topology():
         fp4 = pass_fingerprint("screen", store, n_devices=4, **kw)
         assert fp1 != fp4
         assert fp4 == pass_fingerprint("screen", store, n_devices=4, **kw)
+
+
+def test_degraded_mode_mesh_halves_devices_and_keeps_parity():
+    """Degraded-mode execution: an injected dispatch error on the sharded
+    screen/Gram retries the whole pass at D/2 with `mesh.degraded`
+    recorded and bit-parity with the engine; corruption never degrades;
+    an exhausted ladder (min_devices == D) re-raises."""
+    out = _run("""
+    import tempfile
+    from repro.data import make_corpus
+    from repro.obs import metrics
+    from repro.sparse import write_corpus
+    from repro.sparse.engine import sparse_feature_variances
+    from repro.sparse.mesh_engine import (
+        mesh_feature_variances, mesh_reduced_covariance,
+    )
+    from repro.testing import (
+        SolverFaultInjector, dispatch_error, install_solver,
+    )
+
+    corpus = make_corpus(300, 400, topics={"t": ["a", "b"]}, seed=0)
+    d = tempfile.mkdtemp()
+    store = write_corpus(corpus, d, shard_nnz=2500)
+    geo = dict(chunk_nnz=512, chunk_rows=64, megabatch=2)
+    ref = sparse_feature_variances(store, **geo)
+
+    # screen: fail the first sharded dispatch -> whole pass redone at D=2
+    ctr = {}
+    inj = SolverFaultInjector(dispatch_error(n=0, match="mesh.screen"))
+    with install_solver(inj):
+        scr = mesh_feature_variances(store, devices=4, counters=ctr, **geo)
+    assert ctr["mesh_degraded"] == 1
+    assert metrics.counter("mesh.degraded").value == 1.0
+    np.testing.assert_allclose(np.asarray(scr.variances),
+                               np.asarray(ref.variances), atol=1e-9)
+
+    # gram: two failures ladder 4 -> 2 -> 1 (the engine path)
+    sup = np.sort(np.argsort(np.asarray(ref.variances))[::-1][:48])
+    means = np.asarray(ref.means)
+    from repro.sparse.engine import sparse_reduced_covariance
+    G_ref = np.asarray(sparse_reduced_covariance(store, sup, means=means,
+                                                 **geo))
+    ctr2 = {}
+    inj2 = SolverFaultInjector(dispatch_error(n=0, match="mesh.gram",
+                                              times=2))
+    with install_solver(inj2):
+        G = np.asarray(mesh_reduced_covariance(store, sup, devices=4,
+                                               means=means, counters=ctr2,
+                                               **geo))
+    assert ctr2["mesh_degraded"] == 2
+    np.testing.assert_allclose(G, G_ref, atol=1e-9)
+
+    # min_devices stops the ladder: the dispatch error propagates
+    inj3 = SolverFaultInjector(dispatch_error(n=0, match="mesh.screen"))
+    try:
+        with install_solver(inj3):
+            mesh_feature_variances(store, devices=4, min_devices=4, **geo)
+        raise AssertionError("ladder should have been exhausted")
+    except RuntimeError as e:
+        assert type(e).__name__ == "InjectedDispatchError"
+
+    # corruption propagates untouched (never retried at lower D)
+    from repro.sparse import ShardCorruptionError, SparseCorpus
+    from repro.testing import corrupt_file
+    import os
+    name = store.manifest["shards"][0]["files"]["values"]
+    corrupt_file(os.path.join(store.path, name), n_flips=3, seed=7)
+    bad = SparseCorpus.open(store.path)
+    before = metrics.counter("mesh.degraded").value
+    try:
+        mesh_feature_variances(bad, devices=4, **geo)
+        raise AssertionError("corruption should raise")
+    except ShardCorruptionError:
+        pass
+    assert metrics.counter("mesh.degraded").value == before
+    print("DEGRADE-OK")
+    """)
+    assert "DEGRADE-OK" in out
